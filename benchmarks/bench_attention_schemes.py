@@ -1,0 +1,43 @@
+"""SPerf cell D evidence: wall-time of the two causal flash-attention
+schemes on this host (XLA's CPU FLOP counter can't see the difference; the
+clock can).  blockpair ~= exact lower-triangular FLOPs -> ~2x at long S."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = False):
+    rows = []
+    S = 1024 if quick else 2048
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, S, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+    print(f"\n== causal attention schemes (S={S}, host wall time) ==")
+    times = {}
+    for scheme in ("masked", "blockpair"):
+        fn = jax.jit(lambda q, k, v, s=scheme: flash_attention(
+            q, k, v, causal=True, q_chunk=256, kv_chunk=256, scheme=s))
+        times[scheme] = _time(fn, q, k, v)
+        print(f"  {scheme:10s}: {times[scheme]*1e3:8.1f} ms/call")
+        rows.append({"bench": "attn_scheme", "name": scheme,
+                     "ms": times[scheme] * 1e3})
+    speed = times["masked"] / times["blockpair"]
+    print(f"  blockpair speedup: {speed:.2f}x (theoretical 2x as S grows)")
+    rows.append({"bench": "attn_scheme", "name": "speedup", "x": speed})
+    assert speed > 1.2, "blockpair should beat masked at this length"
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Table 2: break-even throughput per compute platform."""
+
+from repro.core import cost_model as CM
+
+
+def run(quick: bool = False):
+    rows = []
+    t2 = CM.table2()
+    print("\n== Table 2: cost / break-even throughput "
+          "(paper values in brackets) ==")
+    print(f"{'platform':10s} {'$/h':>7s} {'min tok/s':>10s} {'paper':>9s}")
+    for name, row in t2.items():
+        paper = CM.PAPER_TABLE2.get(name)
+        ps = f"{paper:9.2f}" if paper else "        -"
+        print(f"{name:10s} {row['cost_per_hour']:7.2f} "
+              f"{row['min_throughput_tps']:10.2f} {ps}")
+        rows.append({"bench": "cost_model", "name": name,
+                     "min_tps": row["min_throughput_tps"],
+                     "paper_tps": paper,
+                     "match": (abs(row["min_throughput_tps"] - paper) / paper
+                               < 0.01) if paper else None})
+    return rows

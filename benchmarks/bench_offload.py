@@ -1,0 +1,61 @@
+"""Formulas 1+2 sweep: per-microbatch KV capacity vs in-flight microbatch
+count, with and without offloading — the paper's synergy made quantitative —
+plus a functional measurement of swap traffic from the engine's offloader."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch, reduced_config
+from repro.core import offload as OF
+from repro.core.offload import DoubleBufferOffloader
+from repro.models import model as M
+from repro.models.common import Runtime
+from repro.serving.engine import OfflineEngine
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.request import Request, SamplingParams
+
+M_KV = 2.0e9          # per-stage KV memory (llama3-70b / 8x4090, see sim)
+KV_SEQ = 15.7e6       # avg per-sequence KV bytes per stage
+W = 6e9               # effective swap bandwidth
+T_S = 0.08
+
+
+def run(quick: bool = False):
+    rows = []
+    m_g = min(OF.global_pool_bytes(W, T_S), M_KV / 2)
+    print("\n== Formula 1/2 sweep: per-microbatch batch size vs N_B ==")
+    print(f"   (M_KV={M_KV/1e9:.1f} GB, M_G=W*T_S={m_g/1e9:.2f} GB)")
+    print(f"{'N_B':>4s} {'no-offload b':>13s} {'offload b':>10s} "
+          f"{'floor kept':>10s}")
+    for n_b in (8, 12, 16, 24, 32, 48, 64):
+        c_no = OF.per_microbatch_capacity_no_offload(M_KV, n_b)
+        c_off = OF.per_microbatch_capacity(M_KV, m_g, n_b)
+        b_no = OF.batch_size_from_capacity(c_no, KV_SEQ)
+        b_off = OF.batch_size_from_capacity(c_off, KV_SEQ)
+        print(f"{n_b:4d} {b_no:13d} {b_off:10d} {str(c_off >= m_g):>10s}")
+        rows.append({"bench": "offload_sweep", "n_b": n_b,
+                     "batch_no_offload": b_no, "batch_offload": b_off})
+
+    # functional swap traffic from the engine
+    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    cfg = reduced_config(get_arch("yi-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=16, n_global_pages=8,
+                      max_pages_per_seq=6)
+    off = DoubleBufferOffloader(pool, num_microbatches=4)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=6)
+    eng = OfflineEngine(cfg, params, rt, mb_size=2, num_microbatches=4,
+                        pool=pool, sampling=sp, offloader=off)
+    rng = np.random.RandomState(0)
+    eng.submit([Request(i, list(rng.randint(1, cfg.vocab_size, 6)), sp)
+                for i in range(8 if quick else 16)])
+    eng.run(max_steps=2000)
+    rep = eng.throughput_report()
+    print(f"\n   engine offload traffic: {off.swap_count} swaps, "
+          f"{off.bytes_swapped/1e6:.1f} MB moved, "
+          f"{rep['total_tokens']} tokens served")
+    rows.append({"bench": "offload_engine", "swaps": off.swap_count,
+                 "bytes": off.bytes_swapped,
+                 "tokens": rep["total_tokens"]})
+    return rows

@@ -1,0 +1,163 @@
+"""Roofline analysis (deliverable g): read the dry-run artifacts and emit
+the per-(arch × shape × mesh) three-term roofline table.
+
+Terms (seconds, per step, per chip):
+    compute    = HLO_FLOPs / peak_FLOPs          (197 bf16 TFLOP/s v5e)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / ICI_bw       (~50 GB/s/link)
+
+Cross-check column: MODEL_FLOPS / HLO_FLOPs with MODEL_FLOPS = 6·N_active·T
+(train) or 2·N_active·T (serve).  Ratios < 1 mean the compiled program does
+extra work (remat recompute, MoE capacity padding, masked-attention
+overcount); ratios > 1 mean XLA's counter *under-reports* (CPU fusions,
+nested while loops — see the MoE note in models/moe.py), in which case the
+analytic bound is the honest compute term and the table uses
+``compute_eff = max(HLO, analytic)``.
+"""
+
+import glob
+import json
+import os
+
+from repro.config import SHAPES, get_arch
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+HBM_BYTES = 16e9      # v5e per-chip HBM
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+
+def memory_floor_bytes(arch: str, shape_name: str, n_dev: int,
+                       kv_bytes_per_elem: int = 2) -> float:
+    """Analytic lower bound on HBM traffic per chip per step: every live
+    parameter is read once (weight-stationary decode reads them all), the
+    KV/state cache is read (+1 token written), and train adds grad+moment
+    writes.  Used as a floor under XLA's (CPU-lossy) bytes counter."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    p_bytes = cfg.active_param_count() * 2
+    if shape.kind == "train":
+        # params read fwd+bwd + grads written + adam m/v read+write (fp32)
+        traffic = cfg.param_count() * (2 * 3 + 4 + 4 * 4)
+        acts = shape.seq_len * shape.global_batch * cfg.d_model * 2 * \
+            cfg.num_layers * 2
+        return (traffic + acts) / n_dev
+    kv = cfg.kv_bytes_per_token(kv_bytes_per_elem) * shape.seq_len * \
+        shape.global_batch
+    if shape.kind == "prefill":
+        return (p_bytes + kv) / n_dev
+    return (p_bytes * 1.0 + kv) / n_dev          # decode reads all KV
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyse(rec: dict) -> dict:
+    n_dev = rec.get("n_devices", 256)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo = rec["flops_per_device"] * n_dev
+    ratio = mf / hlo if hlo > 0 else float("inf")
+    flops_eff = max(rec["flops_per_device"], mf / n_dev)
+    compute_eff = flops_eff / HW["peak_flops"]
+    kv_b = 1 if rec.get("kv_dtype") == "int8" else 2
+    mem_floor = memory_floor_bytes(rec["arch"], rec["shape"], n_dev, kv_b)
+    terms = {
+        "compute_s": compute_eff,
+        "memory_s": max(rec["bytes_per_device"], mem_floor) / HW["hbm_bw"],
+        "collective_s": rec["collectives"]["total"] / HW["ici_bw"],
+    }
+    dom = max(terms, key=terms.get)
+    bound = terms[dom]
+    useful = (mf / n_dev) / HW["peak_flops"]
+    return {
+        **terms,
+        "dominant": dom,
+        "bound_s": bound,
+        "model_hlo_ratio": ratio,
+        # the score: fraction of the bound spent on *useful* model FLOPs
+        "roofline_fraction": useful / bound if bound > 0 else 0.0,
+        "peak_gb": rec["memory"]["peak_per_device"] / 1e9,
+        "fits_hbm": rec["memory"]["peak_per_device"] <= HBM_BYTES,
+        "tok_per_s_bound": rec.get("tokens_per_step", 0) / bound
+        if bound > 0 else 0.0,
+    }
+
+
+def run(quick: bool = False):
+    all_cells = load_cells()
+    by_variant = {}
+    for c in all_cells:
+        by_variant.setdefault(c.get("variant", ""), []).append(c)
+    rows = []
+    for variant in sorted(by_variant):
+        label = variant or "baseline"
+        if variant not in ("", "opt"):
+            continue                      # hillclimb singles live in SPerf
+        rows.extend(_run_table(by_variant[variant], label))
+    return rows
+
+
+def _run_table(cells, label):
+    rows = []
+    ok = skipped = failed = 0
+    lines = ["| arch | shape | mesh | peak GB | fits | compute s | "
+             "memory s | coll s | dominant | MF/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    print(f"\n== Roofline [{label}] (per chip, per step; "
+          "from the dry-run artifacts) ==")
+    print(f"{'arch':25s}{'shape':13s}{'mesh':11s}{'pkGB':>6s}{'fit':>4s}"
+          f"{'comp_s':>10s}{'mem_s':>10s}{'coll_s':>10s} {'dom':10s}"
+          f"{'MF/HLO':>7s}{'frac':>7s}")
+    for rec in cells:
+        if rec.get("skipped"):
+            skipped += 1
+            continue
+        if not rec.get("ok"):
+            failed += 1
+            print(f"{rec['arch']:25s}{rec['shape']:13s}{rec['mesh']:11s}"
+                  f"  FAILED: {rec.get('error', '')[:60]}")
+            continue
+        ok += 1
+        a = analyse(rec)
+        dom = a["dominant"].replace("_s", "")
+        print(f"{rec['arch']:25s}{rec['shape']:13s}{rec['mesh']:11s}"
+              f"{a['peak_gb']:6.1f}{'y' if a['fits_hbm'] else 'N':>4s}"
+              f"{a['compute_s']:10.2e}{a['memory_s']:10.2e}"
+              f"{a['collective_s']:10.2e} {dom:10s}"
+              f"{a['model_hlo_ratio']:7.2f}{a['roofline_fraction']:7.3f}")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{a['peak_gb']:.1f} | {'yes' if a['fits_hbm'] else 'NO'} | "
+            f"{a['compute_s']:.2e} | {a['memory_s']:.2e} | "
+            f"{a['collective_s']:.2e} | {dom} | "
+            f"{a['model_hlo_ratio']:.2f} | {a['roofline_fraction']:.3f} |")
+        rows.append({"bench": f"roofline_{label}", "arch": rec["arch"],
+                     "shape": rec["shape"], "mesh": rec["mesh"], **a})
+    print(f"\n   cells: {ok} compiled, {skipped} skipped "
+          f"(long_500k on full-attention archs), {failed} failed")
+    out = OUT_MD.replace(".md", f"_{label}.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"   table written to {out}")
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Table 4 (the headline): output throughput vs link latency for the
+three serving policies, from the calibrated discrete-event simulator."""
+
+from repro.core.simulator import PAPER_TABLE4, table4
+
+LATS = (0.0, 0.016, 0.032, 0.064, 0.256)
+
+
+def run(quick: bool = False):
+    rows = []
+    res = table4(sim_seconds=200 if quick else 400,
+                 warmup=50 if quick else 100)
+    print("\n== Table 4: output throughput (tok/s) vs one-way latency ==")
+    hdr = "policy        " + "".join(f"{int(l*1000):>8d}ms" for l in LATS)
+    print(hdr + "   (sim | paper)")
+    for pol in ("vllm_pp", "deserve_pp", "deserve_opt"):
+        line = f"{pol:14s}"
+        for lat in LATS:
+            line += f"{res[pol][lat].output_tps:10.1f}"
+        paper = PAPER_TABLE4.get(pol, {})
+        pline = " | paper: " + " ".join(
+            f"{paper.get(l, float('nan')):7.1f}" for l in LATS)
+        print(line + pline)
+        for lat in LATS:
+            rows.append({"bench": "table4", "policy": pol, "latency": lat,
+                         "tps": res[pol][lat].output_tps,
+                         "paper": paper.get(lat)})
+
+    print("\n-- headline speedups (DeServe opt / vLLM pp) --")
+    for lat in (0.016, 0.032, 0.064):
+        s = res["deserve_opt"][lat].output_tps / \
+            res["vllm_pp"][lat].output_tps
+        pp = PAPER_TABLE4["deserve_opt"][lat] / PAPER_TABLE4["vllm_pp"][lat]
+        print(f"  @{int(lat*1000):3d}ms: {s:5.1f}x   (paper: {pp:.1f}x)")
+        rows.append({"bench": "speedup", "latency": lat, "speedup": s,
+                     "paper_speedup": pp})
+    o = res["deserve_opt"]
+    flat = min(o[l].output_tps for l in LATS) / \
+        max(o[l].output_tps for l in LATS)
+    print(f"  DeServe(opt) flatness across 0-256 ms: {flat:.2f} "
+          f"(paper: {442.9/458.5:.2f})")
+    rows.append({"bench": "flatness", "value": flat})
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--quick] [--only NAME]``"""
+
+import argparse
+import csv
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=["cost_model", "batch_curve", "throughput",
+                             "offload", "attn_schemes", "roofline"])
+    args = ap.parse_args()
+
+    from benchmarks import (bench_attention_schemes, bench_batch_curve,
+                            bench_cost_model, bench_offload, bench_roofline,
+                            bench_throughput)
+    benches = {
+        "cost_model": bench_cost_model.run,       # paper Table 2
+        "batch_curve": bench_batch_curve.run,     # paper Table 3
+        "throughput": bench_throughput.run,       # paper Table 4 (headline)
+        "offload": bench_offload.run,             # Formulas 1-2
+        "attn_schemes": bench_attention_schemes.run,  # SPerf cell D
+        "roofline": bench_roofline.run,           # deliverable (g)
+    }
+    rows = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        rows.extend(fn(quick=args.quick) or [])
+        print(f"   [{name}: {time.perf_counter()-t0:.1f}s]")
+
+    # machine-readable tail
+    print("\n== CSV ==")
+    w = csv.writer(sys.stdout)
+    w.writerow(["bench", "key", "value"])
+    for r in rows:
+        bench = r.pop("bench")
+        key = str(r.pop("name", "") or r.pop("arch", "") or r.pop(
+            "policy", "") or "")
+        shape = str(r.pop("shape", "") or r.pop("latency", "") or "")
+        for k, v in r.items():
+            if isinstance(v, (int, float)) and v is not None:
+                tag = "/".join(x for x in (key, shape, k) if x)
+                w.writerow([bench, tag, v])
+
+
+if __name__ == "__main__":
+    main()

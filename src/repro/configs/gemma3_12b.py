@@ -1,0 +1,25 @@
+"""Gemma3-12B — dense decoder, 5:1 local:global attention, 128k-class context.
+
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    block_pattern=("local",) * 5 + ("global",),
+    window_size=1024,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    use_qk_norm=True,
+    max_position_embeddings=131072,
+    source="[hf:google/gemma-3-1b-pt; unverified]",
+))

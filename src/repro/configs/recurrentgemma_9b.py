@@ -1,0 +1,29 @@
+"""RecurrentGemma-9B — Griffin architecture: RG-LRU + local attention, 1:2.
+
+[arXiv:2402.19427; unverified]  Pattern period is (rglru, rglru, local): two
+gated linear-recurrence blocks followed by one sliding-window attention block.
+"""
+from repro.config import ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,           # MQA on the local-attention layers
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local"),
+    window_size=2048,
+    rope_theta=10000.0,
+    norm_eps=1e-6,
+    tie_embeddings=True,      # gemma family ties embeddings
+    scale_embeddings=True,
+    logit_softcap=30.0,
+    d_rnn=4096,
+    conv_width=4,
+    max_position_embeddings=8192,
+    source="[arXiv:2402.19427; unverified]",
+))

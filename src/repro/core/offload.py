@@ -1,0 +1,207 @@
+"""KV-cache offloading (DeServe §4.2): capacity formulas + the double-buffer
+global-pool swapper.
+
+Formula 2 sizes each global pool so that a full swap (out + in, full-duplex)
+hides under one pipeline stage time:      M_G = W · T_S
+Formula 1 gives the per-microbatch KV capacity with offloading:
+      M_B' = (M_KV − 2·M_G) / N_B + M_G
+whose floor M_G is *independent of N_B* — the synergy that lets microbatch
+scheduling (§4.3) add in-flight microbatches without starving batch size.
+
+Hardware adaptation: on GPU the swap path is PCIe; on TPU v5e it is the
+host-DMA path (HBM ↔ host DRAM).  The :class:`DoubleBufferOffloader` below
+implements the *schedule* (pool parity, swap-out of the departing microbatch
+overlapped with swap-in of the arriving one); on TPU the copies lower to
+async device↔pinned_host DMAs, on CPU they are explicit numpy round-trips —
+the bookkeeping and the schedule are identical, which is what the tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_cache import PoolConfig, global_slice
+
+# default bandwidth constants (bytes/s)
+PCIE4_BW = 24e9            # paper's setting: PCIe 4.0 x16 effective
+TPU_HOST_DMA_BW = 32e9     # v5e host DMA (per chip, conservative)
+
+
+def global_pool_bytes(bandwidth: float, stage_time: float) -> float:
+    """Formula 2: the largest pool a stage-time-long swap can move."""
+    return bandwidth * stage_time
+
+
+def per_microbatch_capacity(m_kv: float, m_g: float, n_b: int) -> float:
+    """Formula 1: per-microbatch KV bytes with offloading enabled."""
+    m_g = min(m_g, m_kv / 2.0)
+    return (m_kv - 2.0 * m_g) / n_b + m_g
+
+
+def per_microbatch_capacity_no_offload(m_kv: float, n_b: int) -> float:
+    return m_kv / n_b
+
+
+def batch_size_from_capacity(capacity_bytes: float,
+                             kv_bytes_per_seq: float) -> int:
+    return max(0, int(capacity_bytes // max(kv_bytes_per_seq, 1.0)))
+
+
+@dataclass
+class OffloadPlan:
+    """Concrete page accounting for an engine/pipeline stage."""
+    pool: PoolConfig
+    bandwidth: float
+    stage_time: float
+    n_microbatches: int
+    page_bytes: int                   # bytes per page across paged layers
+
+    @classmethod
+    def derive(cls, *, m_kv_bytes: float, page_bytes: int, page_size: int,
+               max_pages_per_seq: int, bandwidth: float, stage_time: float,
+               n_microbatches: int) -> "OffloadPlan":
+        m_g = global_pool_bytes(bandwidth, stage_time)
+        m_g = min(m_g, m_kv_bytes / 2.0)
+        n_global = int(m_g // page_bytes)
+        n_local = max(2, int((m_kv_bytes - 2 * m_g) // page_bytes))
+        pool = PoolConfig(page_size=page_size, n_local_pages=n_local,
+                          n_global_pages=n_global,
+                          max_pages_per_seq=max_pages_per_seq)
+        return cls(pool=pool, bandwidth=bandwidth, stage_time=stage_time,
+                   n_microbatches=n_microbatches, page_bytes=page_bytes)
+
+    @property
+    def m_g_bytes(self) -> float:
+        return self.pool.n_global_pages * self.page_bytes
+
+    @property
+    def m_kv_bytes(self) -> float:
+        return self.pool.n_pages * self.page_bytes
+
+    def capacity_with_offload(self) -> float:
+        return per_microbatch_capacity(self.m_kv_bytes, self.m_g_bytes,
+                                       self.n_microbatches)
+
+    def capacity_without_offload(self) -> float:
+        return per_microbatch_capacity_no_offload(self.m_kv_bytes,
+                                                  self.n_microbatches)
+
+
+class DoubleBufferOffloader:
+    """Functional double-buffer swapper over the engine's cache pytree.
+
+    Microbatch ``m`` owns global pool parity ``m % 2``.  ``ensure_resident``
+    swaps the departing microbatch's global-pool content to the host store
+    and the arriving one's back in.  ``prefetch_next`` mirrors the paper's
+    overlap: with pool ``G_p`` feeding compute for microbatch ``m``, pool
+    ``G_{1−p}`` is being refilled for ``m+1`` — on TPU both directions run
+    concurrently on the full-duplex host-DMA path.
+    """
+
+    def __init__(self, pool: PoolConfig, num_microbatches: int):
+        self.pool = pool
+        self.num_microbatches = num_microbatches
+        self.resident: Dict[int, Optional[int]] = {0: None, 1: None}
+        self._host: Dict[int, List[dict]] = {}
+        self.swap_count = 0
+        self.bytes_swapped = 0
+
+    # -- internal: per-layer global slices ---------------------------------
+
+    def _paged_layers(self, caches):
+        for c in caches["scan"]:
+            if isinstance(c, dict) and "k_pages" in c:
+                yield c, 1            # pool axis after the period axis
+        for c in caches["tail"]:
+            if isinstance(c, dict) and "k_pages" in c:
+                yield c, 0
+
+    def ensure_resident(self, caches, mb: int):
+        parity = mb % 2
+        if self.resident[parity] == mb or self.pool.n_global_pages == 0:
+            return caches
+        out_mb = self.resident[parity]
+        sl = global_slice(self.pool, parity)
+        layers = list(self._paged_layers(caches))
+        if out_mb is not None:
+            store = []
+            for c, axis in layers:
+                k = jax.lax.slice_in_dim(c["k_pages"], sl.start, sl.stop, axis=axis)
+                v = jax.lax.slice_in_dim(c["v_pages"], sl.start, sl.stop, axis=axis)
+                store.append({"k": np.asarray(k), "v": np.asarray(v)})
+                self.bytes_swapped += k.nbytes + v.nbytes
+            self._host[out_mb] = store
+
+        incoming = self._host.get(mb)
+        if incoming is None and out_mb is not None:
+            # first touch for this microbatch while the pool holds another
+            # one's content: zero-fill (hygiene — stale KV is masked by
+            # seq_lens anyway, but must never be observable)
+            incoming = []
+            for c, axis in layers:
+                shape = list(c["k_pages"].shape)
+                shape[axis] = sl.stop - sl.start
+                incoming.append({"k": np.zeros(shape, c["k_pages"].dtype),
+                                 "v": np.zeros(shape, c["v_pages"].dtype)})
+        out = {"scan": [], "tail": []}
+        li = 0
+        for part in ("scan", "tail"):
+            for c in caches[part]:
+                if isinstance(c, dict) and "k_pages" in c:
+                    axis = 1 if part == "scan" else 0
+                    if incoming is not None:
+                        k_new = jnp.asarray(incoming[li]["k"])
+                        v_new = jnp.asarray(incoming[li]["v"])
+                        c = {**c,
+                             "k_pages": jax.lax.dynamic_update_slice_in_dim(
+                                 c["k_pages"], k_new.astype(c["k_pages"].dtype),
+                                 sl.start, axis=axis),
+                             "v_pages": jax.lax.dynamic_update_slice_in_dim(
+                                 c["v_pages"], v_new.astype(c["v_pages"].dtype),
+                                 sl.start, axis=axis)}
+                        self.bytes_swapped += k_new.nbytes + v_new.nbytes
+                    li += 1
+                out[part].append(c)
+        self.resident[parity] = mb
+        self.swap_count += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# TPU memory-kind integration (backend-gated, see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def host_memory_available() -> bool:
+    """True when the backend supports device↔pinned_host placement (TPU).
+    XLA:CPU rejects compile-time host placement for replicated tensors
+    (verified: "UNIMPLEMENTED: Side-effect ops cannot be replicated")."""
+    return jax.default_backend() == "tpu"
+
+
+def pool_shardings(mesh, spec, *, host: bool):
+    """NamedSharding for a KV pool buffer; ``host=True`` places it in
+    pinned host memory (the paper's CPU-RAM side of the PCIe swap)."""
+    kind = "pinned_host" if (host and host_memory_available()) else "device"
+    return jax.sharding.NamedSharding(mesh, spec, memory_kind=kind)
+
+
+def place_host_store(offloader: "DoubleBufferOffloader", mesh, spec):
+    """Move the offloader's host store to pinned host buffers on TPU: the
+    swap copies then lower to async DMA instead of numpy round-trips.  On
+    CPU this is a no-op (the numpy store *is* host memory)."""
+    if not host_memory_available():
+        return offloader
+    sh = pool_shardings(mesh, spec, host=True)
+    offloader._host = {
+        mb: [{k: jax.device_put(jnp.asarray(v), sh) for k, v in layer.items()}
+             for layer in layers]
+        for mb, layers in offloader._host.items()
+    }
+    return offloader

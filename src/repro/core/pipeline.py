@@ -1,0 +1,518 @@
+"""Inter-layer (pipeline) parallelism over the high-latency ``pod`` axis.
+
+This is DeServe's distribution strategy (§2.3 + §4.3) mapped onto JAX SPMD:
+the model's scanned periods are split into ``n_stages`` contiguous stage
+slices (weights never cross the slow link), activations move stage→stage
+with ``lax.ppermute`` inside a ``shard_map`` that is *manual over the pod
+axis only* — data/tensor parallelism inside each pod stays automatic, so
+each stage is itself a 256-chip DP×TP program.
+
+Schedule: the §4.3 circular schedule with ``N_B`` microbatches in flight;
+one call = one full pass (fill + steady + drain, ``T = N_B + N_S − 1``
+ticks).  At tick ``t`` pod ``p`` works on microbatch ``t − p`` (when in
+range); out-of-range ticks are pipeline bubbles — their cache writes are
+masked.  The scheduler (``repro.core.scheduler``) picks ``N_B`` from the
+measured stage time and link latency so that steady-state bubbles vanish;
+here ``N_B`` is a static compile-time parameter, exactly as the paper's
+implementation fixes it per deployment.
+
+Stage assignment is period-aligned: ``pps = n_periods // n_stages`` scanned
+periods per stage.  Leftover periods and the pattern tail run as a shared
+*epilogue* — replicated across pods, TP/DP-sharded inside — after the
+drained activations are returned (the return link the paper's driver also
+pays).  For every assigned arch the epilogue is ≤ 2 layers (<6 % of
+compute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import embedding as embed_lib
+from repro.models import model as model_lib
+from repro.models.common import Runtime, make_layer_plan, rms_norm
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_microbatches: int
+    mb_size: int                      # sequences per microbatch
+
+    @property
+    def global_batch(self) -> int:
+        return self.n_microbatches * self.mb_size
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_microbatches + self.n_stages - 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter / cache splitting
+# ---------------------------------------------------------------------------
+
+
+def split_layers(cfg: ModelConfig, n_stages: int):
+    """(periods_per_stage, leftover_periods).  Stage i owns scanned periods
+    [i·pps, (i+1)·pps); the leftover periods + pattern tail are epilogue."""
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    pps = plan.n_periods // n_stages
+    leftover = plan.n_periods - pps * n_stages
+    if pps == 0:
+        raise ValueError(
+            f"{cfg.name}: {plan.n_periods} periods cannot fill {n_stages} "
+            "pipeline stages")
+    return pps, leftover
+
+
+def split_scan_params(params: dict, cfg: ModelConfig, n_stages: int):
+    """Split stacked scan params into (stage_params, epilogue_scan_params).
+
+    stage leaves:    (n_stages, pps, ...)   — shard dim 0 over "pod"
+    epilogue leaves: (leftover, ...) or None
+    """
+    pps, leftover = split_layers(cfg, n_stages)
+
+    def split_leaf(x):
+        stage = x[: pps * n_stages].reshape((n_stages, pps) + x.shape[1:])
+        epi = x[pps * n_stages:] if leftover else None
+        return stage, epi
+
+    stage_list, epi_list = [], []
+    for pos in params["scan"]:
+        s = jax.tree.map(lambda x: split_leaf(x)[0], pos)
+        e = jax.tree.map(lambda x: split_leaf(x)[1], pos) if leftover else None
+        stage_list.append(s)
+        epi_list.append(e)
+    return stage_list, (epi_list if leftover else [])
+
+
+def init_pipeline_caches(cfg: ModelConfig, pcfg: PipelineConfig,
+                         capacity: int, rt: Runtime) -> dict:
+    """Cache pytree for the pipelined server.
+
+    stage caches:    leaves (n_stages, n_mb, pps, mb, ...)  [pod, none, ...]
+    epilogue caches: standard model cache dict over the full global batch.
+    """
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    pps, leftover = split_layers(cfg, pcfg.n_stages)
+    stage = [
+        model_lib._kind_cache(k, cfg, pcfg.mb_size, capacity, rt,
+                              lead=(pcfg.n_stages, pcfg.n_microbatches, pps))
+        for k in plan.period_kinds
+    ]
+    epi_scan = [
+        model_lib._kind_cache(k, cfg, pcfg.global_batch, capacity, rt,
+                              lead=(leftover,))
+        for k in plan.period_kinds
+    ] if leftover else []
+    tail = [model_lib._kind_cache(k, cfg, pcfg.global_batch, capacity, rt)
+            for k in plan.tail_kinds]
+    return {"stage": stage, "epi_scan": epi_scan, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# The pipelined pass (shared by decode and prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_pass(stage_params, stage_caches, queue, positions_q, cfg, rt,
+                   pcfg: PipelineConfig, mode: str):
+    """Run one fill+drain pass of the circular schedule inside shard_map.
+
+    queue:        (n_mb, mb, S, D) embedded microbatch inputs (replicated
+                  w.r.t. pod; DP/TP-sharded inside).
+    positions_q:  (n_mb, [3,] mb, S) per-microbatch positions.
+    Returns (drained (n_mb, mb, S, D), new_stage_caches).
+    """
+    n_s, n_mb = pcfg.n_stages, pcfg.n_microbatches
+    pps, _ = split_layers(cfg, n_s)
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+
+    def body(local_params, local_caches, queue, positions_q):
+        # local_params leaves: (1, pps, ...); local_caches: (1, n_mb, pps, ...)
+        local_params = [jax.tree.map(lambda x: x[0], p) for p in local_params]
+        local_caches = [jax.tree.map(lambda x: x[0], c) for c in local_caches]
+        pod = jax.lax.axis_index("pod")
+        is_last = pod == n_s - 1
+
+        x0 = queue[0] * jnp.where(pod == 0, 1.0, 0.0).astype(queue.dtype)
+
+        def tick(carry, t):
+            x, caches, outs = carry
+            mb_id = t - pod
+            active = (mb_id >= 0) & (mb_id < n_mb)
+            mb_c = jnp.clip(mb_id, 0, n_mb - 1)
+
+            mb_caches = [jax.tree.map(
+                lambda l: jax.lax.dynamic_index_in_dim(l, mb_c, 0,
+                                                       keepdims=False), c)
+                for c in caches]
+            if positions_q.ndim == 4:          # (n_mb, 3, mb, S) m-rope
+                pos = jax.lax.dynamic_index_in_dim(positions_q, mb_c, 0,
+                                                   keepdims=False)
+            else:
+                pos = jax.lax.dynamic_index_in_dim(positions_q, mb_c, 0,
+                                                   keepdims=False)
+            # NOTE (SPerf iteration A4, refuted): wrapping this in
+            # lax.cond(active, work, identity) to skip bubble-tick compute
+            # REGRESSED the memory term 41% — the conditional materialises
+            # its operand tuple (the whole per-mb cache) and blocks carry
+            # aliasing.  Bubble writes are masked with where() instead.
+            y, new_mb_caches = model_lib.run_periods(
+                local_params, x, cfg, rt, period_kinds=plan.period_kinds,
+                mode=mode, scan_caches=mb_caches, positions=pos)
+            # mask bubble writes, splice the microbatch's caches back
+            new_caches = []
+            for c_all, c_old, c_new in zip(caches, mb_caches,
+                                           new_mb_caches):
+                c_new = jax.tree.map(
+                    lambda n, o: jnp.where(active, n, o), c_new, c_old)
+                new_caches.append(jax.tree.map(
+                    lambda l, n: jax.lax.dynamic_update_index_in_dim(
+                        l, n.astype(l.dtype), mb_c, 0), c_all, c_new))
+
+            # collect the drained microbatch from the last pod
+            out_id = t - (n_s - 1)
+            out_c = jnp.clip(out_id, 0, n_mb - 1)
+            contrib = jnp.where(is_last, y, jnp.zeros_like(y))
+            old_slot = jax.lax.dynamic_index_in_dim(outs, out_c, 0,
+                                                    keepdims=False)
+            slot = jnp.where((out_id >= 0) & (out_id < n_mb), contrib,
+                             old_slot)
+            outs = jax.lax.dynamic_update_index_in_dim(outs, slot, out_c, 0)
+
+            # ship activations around the ring; pod 0 takes the next inject
+            y_next = jax.lax.ppermute(
+                y, "pod", [(i, (i + 1) % n_s) for i in range(n_s)])
+            nxt = jnp.clip(t + 1, 0, n_mb - 1)
+            inj = jax.lax.dynamic_index_in_dim(queue, nxt, 0, keepdims=False)
+            x_next = jnp.where(pod == 0, inj, y_next)
+            return (x_next, new_caches, outs), None
+
+        outs0 = jnp.zeros(queue.shape, queue.dtype)
+        (x, new_caches, outs), _ = jax.lax.scan(
+            tick, (x0, local_caches, outs0), jnp.arange(pcfg.n_ticks))
+        # the drained buffer lives on the last pod; return it to everyone
+        # (this is the paper's output return link — (n_mb, mb, S, D) once per
+        # pass, not per tick).  f32 psum: XLA:CPU's AllReducePromotion pass
+        # aborts cloning bf16 all-reduces emitted from partial-manual
+        # shard_map (dtype identical on TPU after the pass anyway).
+        outs = jax.lax.psum(
+            jnp.where(is_last, outs, jnp.zeros_like(outs)).astype(
+                jnp.float32), "pod").astype(outs.dtype)
+        new_caches = [jax.tree.map(lambda x: x[None], c) for c in new_caches]
+        return outs, new_caches
+
+    P = jax.sharding.PartitionSpec
+    in_specs = (
+        [jax.tree.map(lambda _: P("pod"), p) for p in stage_params],
+        [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches],
+        P(), P(),
+    )
+    out_specs = (P(), [jax.tree.map(lambda _: P("pod"), c)
+                       for c in stage_caches])
+    fn = jax.shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return fn(stage_params, stage_caches, queue, positions_q)
+
+
+def _ambient_mesh():
+    """Resolve the mesh from either the ``with mesh:`` legacy context or the
+    ``jax.set_mesh`` context."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if not m.empty:
+        return m
+    am = jax.sharding.get_abstract_mesh()
+    if am is not None and not am.empty:
+        return am
+    raise RuntimeError("pipeline_* must run inside a mesh context "
+                       "(`with mesh:` or `jax.set_mesh(mesh)`)")
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points (pipelined)
+# ---------------------------------------------------------------------------
+
+
+def _epilogue(params, epi_scan_params, x, cfg, rt, *, mode, caches,
+              positions):
+    """Leftover periods + pattern tail + final norm (replicated over pods)."""
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    new_epi = caches["epi_scan"] if caches is not None else None
+    if epi_scan_params:
+        x, new_epi = model_lib.run_periods(
+            epi_scan_params, x, cfg, rt, period_kinds=plan.period_kinds,
+            mode=mode, scan_caches=new_epi, positions=positions)
+    new_tail = []
+    for i, kind in enumerate(plan.tail_kinds):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc = model_lib.apply_layer(kind, params["tail"][i], x, cfg, rt,
+                                      positions=positions, mode=mode, cache=c)
+        new_tail.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_epi, new_tail
+
+
+def pipeline_decode_step(params, tokens, caches, cur_pos, cfg: ModelConfig,
+                         rt: Runtime, pcfg: PipelineConfig):
+    """One pipelined decode token for every microbatch.
+
+    tokens (n_mb, mb) int32; cur_pos (n_mb, mb) int32 absolute positions.
+    Returns (logits (n_mb, mb, V) f32, new_caches).
+    """
+    n_mb, mb = tokens.shape
+    cd = rt.compute_dtype
+    x = embed_lib.embed_tokens(params["embed"], tokens.reshape(-1), cfg, cd)
+    queue = x.reshape(n_mb, mb, 1, cfg.d_model)
+    positions_q = cur_pos[..., None]                       # (n_mb, mb, 1)
+    if cfg.frontend == "vision_patches":
+        positions_q = jnp.broadcast_to(positions_q[:, None],
+                                       (n_mb, 3, mb, 1))
+
+    stage_params, epi_scan_params = split_scan_params(params, cfg,
+                                                      pcfg.n_stages)
+    drained, new_stage = _pipeline_pass(
+        stage_params, caches["stage"], queue, positions_q, cfg, rt, pcfg,
+        mode="decode")
+
+    xf = drained.reshape(pcfg.global_batch, 1, cfg.d_model)
+    pos_flat = cur_pos.reshape(pcfg.global_batch)[:, None]
+    if cfg.frontend == "vision_patches":
+        from repro.models.common import text_positions3
+        pos_flat = text_positions3(pos_flat)
+    xf, new_epi, new_tail = _epilogue(params, epi_scan_params, xf, cfg, rt,
+                                      mode="decode", caches=caches,
+                                      positions=pos_flat)
+    logits = embed_lib.unembed(params["embed"], xf[:, 0], cfg)
+    new_caches = {"stage": new_stage, "epi_scan": new_epi, "tail": new_tail}
+    return logits.reshape(n_mb, mb, -1), new_caches
+
+
+def pipeline_prefill(params, inputs, caches, cfg: ModelConfig, rt: Runtime,
+                     pcfg: PipelineConfig):
+    """Pipelined prefill.
+
+    ``inputs``: {"tokens": (n_mb, mb, S)} — or the stub-frontend forms
+    {"frames": (n_mb, mb, S, D)} / {"tokens", "patches"} (vlm), all with the
+    (n_mb, mb) microbatch layout on the leading dims.
+    Returns (last_logits (n_mb, mb, V) f32, new_caches)."""
+    if isinstance(inputs, jax.Array):
+        inputs = {"tokens": inputs}
+    n_mb, mb = next(iter(inputs.values())).shape[:2]
+    flat = {k: v.reshape((n_mb * mb,) + v.shape[2:])
+            for k, v in inputs.items()}
+    x, positions = model_lib.embed_inputs(params, flat, cfg, rt,
+                                          mode="prefill")
+    S = x.shape[1]
+    queue = x.reshape(n_mb, mb, S, cfg.d_model)
+    if positions.ndim == 3:          # (3, B, S) m-rope
+        positions_q = positions.reshape(3, n_mb, mb, S).transpose(1, 0, 2, 3)
+        pos = positions[0].reshape(n_mb, mb, S)
+    else:
+        pos = positions.reshape(n_mb, mb, S)
+        positions_q = pos
+
+    stage_params, epi_scan_params = split_scan_params(params, cfg,
+                                                      pcfg.n_stages)
+    drained, new_stage = _pipeline_pass(
+        stage_params, caches["stage"], queue, positions_q, cfg, rt, pcfg,
+        mode="prefill")
+
+    xf = drained.reshape(pcfg.global_batch, S, cfg.d_model)
+    pos_flat = positions          # embed_inputs layout: (B, S) or (3, B, S)
+    xf, new_epi, new_tail = _epilogue(params, epi_scan_params, xf, cfg, rt,
+                                      mode="prefill", caches=caches,
+                                      positions=pos_flat)
+    logits = embed_lib.unembed(params["embed"], xf[:, -1], cfg)
+    new_caches = {"stage": new_stage, "epi_scan": new_epi, "tail": new_tail}
+    return logits.reshape(n_mb, mb, -1), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Multi-round circular decode (the §4.3 steady state, compiled)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_decode_rounds(params, tokens, caches, cur_pos,
+                           cfg: ModelConfig, rt: Runtime,
+                           pcfg: PipelineConfig, *, rounds: int):
+    """Greedy-decode ``rounds`` tokens per microbatch in ONE circular pass.
+
+    This is the schedule the paper actually runs in steady state: microbatch
+    ``m``'s round-``r`` token is injected at tick ``r·N_B + m``, immediately
+    behind its round-``r−1`` drain (legal because N_B ≥ N_S) — fill/drain
+    bubbles amortise to (N_S−1)/(R·N_B + N_S − 1).  Sampling (greedy) and
+    re-embedding happen replicated across pods on the drained activations;
+    the paper's return link carries the (mb,) token ids.
+
+    tokens/cur_pos (n_mb, mb) int32.  Returns (all_tokens (rounds, n_mb,
+    mb) int32, new_caches).  Requires N_B ≥ N_S.
+    """
+    n_s, n_mb, mb = pcfg.n_stages, pcfg.n_microbatches, pcfg.mb_size
+    if n_mb < n_s:
+        raise ValueError("multi-round circular decode needs N_B >= N_S")
+    pps, _ = split_layers(cfg, n_s)
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    cd = rt.compute_dtype
+    n_ticks = rounds * n_mb + n_s - 1
+
+    stage_params, epi_scan_params = split_scan_params(params, cfg, n_s)
+    epi_state = {"epi_scan": caches["epi_scan"], "tail": caches["tail"]}
+
+    def body(local_params, local_caches, epi_caches, tokens, cur_pos):
+        local_params = [jax.tree.map(lambda x: x[0], p) for p in local_params]
+        local_caches = [jax.tree.map(lambda x: x[0], c) for c in local_caches]
+        pod = jax.lax.axis_index("pod")
+        is_last = pod == n_s - 1
+
+        def embed_mb(tok, pos):
+            x = embed_lib.embed_tokens(params["embed"], tok, cfg, cd)
+            return x[:, None]                       # (mb, 1, D)
+
+        def _epi_take(epi, start):
+            """Per-microbatch view of the (global-batch) epilogue caches."""
+            return {
+                "epi_scan": [jax.tree.map(
+                    lambda l: jax.lax.dynamic_slice_in_dim(l, start, mb, 1),
+                    c) for c in epi["epi_scan"]],
+                "tail": [jax.tree.map(
+                    lambda l: jax.lax.dynamic_slice_in_dim(l, start, mb, 0),
+                    c) for c in epi["tail"]],
+            }
+
+        def _epi_put(epi, view, start):
+            return {
+                "epi_scan": [jax.tree.map(
+                    lambda f, pth: jax.lax.dynamic_update_slice_in_dim(
+                        f, pth.astype(f.dtype), start, 1), c_f, c_v)
+                    for c_f, c_v in zip(epi["epi_scan"], view["epi_scan"])],
+                "tail": [jax.tree.map(
+                    lambda f, pth: jax.lax.dynamic_update_slice_in_dim(
+                        f, pth.astype(f.dtype), start, 0), c_f, c_v)
+                    for c_f, c_v in zip(epi["tail"], view["tail"])],
+            }
+
+        def epilogue_sample(y, pos, epi, out_mb):
+            xf = y                                   # (mb, 1, D)
+            p1 = pos[:, None]
+            if cfg.frontend == "vision_patches":
+                from repro.models.common import text_positions3
+                p1 = text_positions3(p1)
+            start = out_mb * mb
+            view = _epi_take(epi, start)
+            xf, new_epi, new_tail = _epilogue(
+                params, epi_scan_params, xf, cfg, rt, mode="decode",
+                caches=view, positions=p1)
+            logits = embed_lib.unembed(params["embed"], xf[:, 0], cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, _epi_put(epi, {"epi_scan": new_epi,
+                                       "tail": new_tail}, start)
+
+        def tick(carry, t):
+            x, st_caches, epi, toks, pos, outs = carry
+            mb_id = (t - pod) % n_mb
+            rnd = (t - pod) // n_mb
+            active = ((t - pod) >= 0) & (rnd < rounds)
+            mb_c = jnp.clip(mb_id, 0, n_mb - 1)
+
+            mb_caches = [jax.tree.map(
+                lambda l: jax.lax.dynamic_index_in_dim(l, mb_c, 0,
+                                                       keepdims=False), c)
+                for c in st_caches]
+            pos_mb = jax.lax.dynamic_index_in_dim(pos, mb_c, 0,
+                                                  keepdims=False)
+            p1 = pos_mb[:, None]
+            if cfg.frontend == "vision_patches":
+                from repro.models.common import text_positions3
+                p1 = text_positions3(p1)
+            y, new_mb = model_lib.run_periods(
+                local_params, x, cfg, rt, period_kinds=plan.period_kinds,
+                mode="decode", scan_caches=mb_caches, positions=p1)
+            new_st = []
+            for c_all, c_old, c_new in zip(st_caches, mb_caches, new_mb):
+                c_new = jax.tree.map(lambda n, o: jnp.where(active, n, o),
+                                     c_new, c_old)
+                new_st.append(jax.tree.map(
+                    lambda l, n: jax.lax.dynamic_update_index_in_dim(
+                        l, n.astype(l.dtype), mb_c, 0), c_all, c_new))
+
+            # drain: the last pod finishes microbatch (t-(n_s-1)) % n_mb;
+            # broadcast its activation, run the epilogue + greedy sampling
+            # replicated, append the token behind the pipe for next round
+            out_id = t - (n_s - 1)
+            out_mb = jnp.clip(out_id % n_mb, 0, n_mb - 1)
+            out_rnd = out_id // n_mb
+            out_valid = (out_id >= 0) & (out_rnd < rounds)
+            y_b = jax.lax.psum(
+                jnp.where(is_last, y, jnp.zeros_like(y)).astype(jnp.float32),
+                "pod").astype(y.dtype)
+            pos_out = jax.lax.dynamic_index_in_dim(pos, out_mb, 0,
+                                                   keepdims=False)
+            nxt, new_epi = epilogue_sample(y_b, pos_out, epi, out_mb)
+            epi = jax.tree.map(lambda n, o: jnp.where(out_valid, n, o),
+                               new_epi, epi)
+            toks = jnp.where(out_valid,
+                             toks.at[out_mb].set(nxt), toks)
+            pos = jnp.where(out_valid, pos.at[out_mb].add(1), pos)
+            outs = jnp.where(
+                out_valid,
+                jax.lax.dynamic_update_index_in_dim(
+                    outs, jax.lax.dynamic_update_index_in_dim(
+                        jax.lax.dynamic_index_in_dim(
+                            outs, jnp.clip(out_rnd, 0, rounds - 1), 0,
+                            keepdims=False),
+                        nxt, out_mb, 0),
+                    jnp.clip(out_rnd, 0, rounds - 1), 0),
+                outs)
+
+            # ship downstream; pod 0 injects the next tick's token
+            y_next = jax.lax.ppermute(
+                y, "pod", [(i, (i + 1) % n_s) for i in range(n_s)])
+            nxt_mb = jnp.clip((t + 1) % n_mb, 0, n_mb - 1)
+            inj_tok = jax.lax.dynamic_index_in_dim(toks, nxt_mb, 0,
+                                                   keepdims=False)
+            inj_pos = jax.lax.dynamic_index_in_dim(pos, nxt_mb, 0,
+                                                   keepdims=False)
+            inj = embed_mb(inj_tok, inj_pos)
+            x_next = jnp.where(pod == 0, inj, y_next)
+            return (x_next, new_st, epi, toks, pos, outs), None
+
+        x0 = embed_mb(tokens[0], cur_pos[0]) * jnp.where(
+            pod == 0, 1.0, 0.0).astype(cd)
+        outs0 = jnp.zeros((rounds, n_mb, mb), jnp.int32)
+        (x, st, epi, toks, pos, outs), _ = jax.lax.scan(
+            tick, (x0, local_caches, epi_caches, tokens, cur_pos, outs0),
+            jnp.arange(n_ticks))
+        st = [jax.tree.map(lambda x: x[None], c) for c in st]
+        return outs, st, epi
+
+    P = jax.sharding.PartitionSpec
+    in_specs = (
+        [jax.tree.map(lambda _: P("pod"), p) for p in stage_params],
+        [jax.tree.map(lambda _: P("pod"), c) for c in caches["stage"]],
+        jax.tree.map(lambda _: P(), epi_state),
+        P(), P(),
+    )
+    out_specs = (P(),
+                 [jax.tree.map(lambda _: P("pod"), c)
+                  for c in caches["stage"]],
+                 jax.tree.map(lambda _: P(), epi_state))
+    fn = jax.shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    outs, new_stage, new_epi = fn(stage_params, caches["stage"], epi_state,
+                                  tokens, cur_pos)
+    new_caches = {"stage": new_stage, "epi_scan": new_epi["epi_scan"],
+                  "tail": new_epi["tail"]}
+    return outs, new_caches

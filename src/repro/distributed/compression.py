@@ -1,0 +1,104 @@
+"""Gradient compression for high-latency data parallelism (beyond-paper).
+
+DeServe's decentralized substrate makes DP training across pods painful:
+an all-reduce of full bf16 gradients over ~50 ms links dominates step time.
+Two standard compressors, both with error feedback so compression noise is
+O(1) over training rather than O(steps):
+
+  * int8 — per-tensor symmetric quantization (4x over bf16 wire bytes, 2x
+    over fp32 accumulators).
+  * top-k — magnitude sparsification to fraction ``k`` (wire bytes ≈
+    k·(4+4) of values+indices) with residual accumulation.
+
+``roundtrip`` = compress → (wire) → decompress, which is exactly what the
+train step applies before the optimizer; on a real deployment the compressed
+representation is what crosses the pod axis (the all-reduce then runs on the
+quantized payloads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_compress(x: jax.Array, frac: float):
+    xf = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(xf.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+    sel = xf[idx]
+    return sel, idx, x.shape
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    out = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    out = out.at[idx].set(vals)
+    return out.reshape(shape)
+
+
+@dataclass
+class Compressor:
+    """Error-feedback compressor over gradient pytrees."""
+    method: str = "int8"              # int8 | topk | none
+    topk_frac: float = 0.01
+    error_feedback: bool = True
+    _residual: Any = None
+
+    def wire_bytes(self, grads) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(grads):
+            n = leaf.size
+            if self.method == "int8":
+                total += n + 4
+            elif self.method == "topk":
+                k = max(1, int(n * self.topk_frac))
+                total += k * 8
+            else:
+                total += n * leaf.dtype.itemsize
+        return total
+
+    def roundtrip(self, grads):
+        if self.method == "none":
+            return grads
+        if self._residual is None and self.error_feedback:
+            self._residual = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def one(g, r):
+            gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+            if self.method == "int8":
+                q, s = int8_compress(gf)
+                out = int8_decompress(q, s)
+            else:
+                vals, idx, shape = topk_compress(gf, self.topk_frac)
+                out = topk_decompress(vals, idx, shape)
+            new_r = gf - out
+            return out.astype(g.dtype), new_r
+
+        if self.error_feedback:
+            pairs = jax.tree.map(one, grads, self._residual)
+            out = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+            self._residual = jax.tree.map(
+                lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+            return out
+        return jax.tree.map(lambda g: one(g, None)[0], grads)
+
+    def compression_ratio(self, grads) -> float:
+        raw = sum(l.size * 4 for l in jax.tree.leaves(grads))
+        return raw / max(self.wire_bytes(grads), 1)

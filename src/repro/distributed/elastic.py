@@ -1,0 +1,172 @@
+"""Elastic scaling, failure handling and straggler mitigation.
+
+The decentralized-mining substrate (paper Table 1: "intermittent"
+availability) makes node loss the common case, not the exception.  This
+module contains the *control-plane* logic — pure, deterministic, fully
+testable on CPU:
+
+  * :class:`ElasticPlanner` — given the live-device count, choose the
+    largest legal mesh (data dim shrinks first, model dim preserved so TP
+    sharding stays valid) and emit a resharding plan.
+  * :class:`FailureDetector` — heartbeat bookkeeping with configurable
+    timeout; drives checkpoint-restart (see ``repro.checkpoint``).
+  * :class:`StragglerMitigator` — EWMA per-stage tick times; flags outliers
+    and re-weights microbatch assignment (slow stage gets smaller
+    microbatches) or recommends demotion to spare.
+
+On a real deployment these drive ``jax.distributed`` re-initialisation plus
+checkpoint restore; the dry-run exercises plan generation for every legal
+device count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    devices_used: int
+    devices_spare: int
+
+    @property
+    def data(self) -> int:
+        return self.shape[self.axes.index("data")]
+
+    @property
+    def model(self) -> int:
+        return self.shape[self.axes.index("model")]
+
+
+class ElasticPlanner:
+    """Choose meshes as devices come and go.
+
+    Invariants: the "model" axis is preserved (param TP sharding stays
+    valid → only batch-dim resharding on resize, which is a cheap
+    redistribution, not a weight reshuffle); "data" is the largest power of
+    two that fits; the pod axis only exists while >= 2 full pods are live.
+    """
+
+    def __init__(self, model_parallel: int = 16, pod_size: int = 256):
+        self.model_parallel = model_parallel
+        self.pod_size = pod_size
+
+    def plan(self, live_devices: int) -> MeshPlan:
+        mp = self.model_parallel
+        if live_devices < mp:
+            raise RuntimeError(
+                f"cannot serve: {live_devices} devices < model parallel {mp}")
+        pods = live_devices // self.pod_size
+        if pods >= 2:
+            per_pod = self.pod_size
+            data = self._pow2(per_pod // mp)
+            used = pods * data * mp
+            return MeshPlan(shape=(pods, data, mp),
+                            axes=("pod", "data", "model"),
+                            devices_used=used,
+                            devices_spare=live_devices - used)
+        data = self._pow2(live_devices // mp)
+        used = data * mp
+        return MeshPlan(shape=(data, mp), axes=("data", "model"),
+                        devices_used=used,
+                        devices_spare=live_devices - used)
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << max(0, n.bit_length() - 1)
+
+    def resharding_plan(self, old: MeshPlan, new: MeshPlan) -> dict:
+        """What must move when the mesh changes."""
+        dp_changed = (old.data != new.data or
+                      old.devices_used != new.devices_used)
+        return {
+            "model_axis_changed": old.model != new.model,
+            "params_move": old.model != new.model,     # TP reshard = heavy
+            "batch_reshard": dp_changed,               # cheap redistribution
+            "restore_from_checkpoint": old.model != new.model,
+            "old": old, "new": new,
+        }
+
+
+@dataclass
+class Heartbeat:
+    last_seen: float
+    failures: int = 0
+
+
+class FailureDetector:
+    def __init__(self, timeout: float = 30.0):
+        self.timeout = timeout
+        self._beats: Dict[int, Heartbeat] = {}
+
+    def beat(self, device_id: int, now: float) -> None:
+        hb = self._beats.setdefault(device_id, Heartbeat(last_seen=now))
+        hb.last_seen = now
+
+    def dead(self, now: float) -> List[int]:
+        return [d for d, hb in self._beats.items()
+                if now - hb.last_seen > self.timeout]
+
+    def live(self, now: float) -> List[int]:
+        return [d for d, hb in self._beats.items()
+                if now - hb.last_seen <= self.timeout]
+
+    def should_restart(self, now: float, required: int) -> bool:
+        return len(self.live(now)) < required
+
+
+class StragglerMitigator:
+    """EWMA stage-time tracking + microbatch re-weighting.
+
+    The circular schedule (§4.3) is only bubble-free if every stage keeps
+    pace; one slow stage sets the ring tick.  Mitigation: shrink the slow
+    stage's share of per-microbatch work (fewer sequences routed to the
+    microbatches it bottlenecks) or — beyond a threshold — recommend the
+    planner demote the node and promote a spare.
+    """
+
+    def __init__(self, n_stages: int, alpha: float = 0.2,
+                 slow_factor: float = 1.5, demote_factor: float = 3.0):
+        self.n_stages = n_stages
+        self.alpha = alpha
+        self.slow_factor = slow_factor
+        self.demote_factor = demote_factor
+        self.ewma = [0.0] * n_stages
+
+    def observe(self, stage: int, tick_time: float) -> None:
+        cur = self.ewma[stage]
+        self.ewma[stage] = tick_time if cur == 0.0 else (
+            self.alpha * tick_time + (1 - self.alpha) * cur)
+
+    def median(self) -> float:
+        s = sorted(t for t in self.ewma if t > 0)
+        return s[len(s) // 2] if s else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self.median()
+        if med == 0:
+            return []
+        return [i for i, t in enumerate(self.ewma)
+                if t > self.slow_factor * med]
+
+    def demotions(self) -> List[int]:
+        med = self.median()
+        if med == 0:
+            return []
+        return [i for i, t in enumerate(self.ewma)
+                if t > self.demote_factor * med]
+
+    def microbatch_weights(self) -> List[float]:
+        """Relative per-stage work shares ∝ 1/EWMA, normalised to mean 1.
+        Feed into the engine's per-microbatch batch composition."""
+        med = self.median()
+        if med == 0:
+            return [1.0] * self.n_stages
+        inv = [med / t if t > 0 else 1.0 for t in self.ewma]
+        mean = sum(inv) / len(inv)
+        return [w / mean for w in inv]

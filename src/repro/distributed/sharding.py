@@ -1,0 +1,244 @@
+"""Sharding rules: params / caches / activations → PartitionSpec per mesh.
+
+Conventions (single-pod mesh ``("data", "model")``, multi-pod adds "pod"):
+
+  * TP ("model"): attention heads (packed q/kv output dims), FFN hidden,
+    MoE experts (expert parallelism), vocab (embedding/unembedding), and
+    recurrent expanded width.  A dim is sharded only when divisible by the
+    axis size; otherwise it stays replicated (no ragged shards).
+  * FSDP ("data", training only): the complementary matmul dim of every
+    large matrix.  Serving replicates params over "data" (weights stay put,
+    activations move — the paper's rule for slow links applies to "pod").
+  * KV caches: batch over "data"; kv-heads over "model" when divisible,
+    else the *sequence* dim over "model" (sequence-parallel KV, needed for
+    small-kv-head archs and ``long_500k``).
+  * Pipeline ("pod"): stage-stacked leaves get P("pod", ...) — weights
+    never cross the slow link; only (mb, S, D) activations do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.config import ModelConfig
+
+
+def _axis(mesh_shape: dict, name: Optional[str], dim: int) -> Optional[str]:
+    """Return ``name`` if it exists in the mesh and divides ``dim``."""
+    if name is None or name not in mesh_shape:
+        return None
+    return name if dim % mesh_shape[name] == 0 and dim > 0 else None
+
+
+def _mesh_shape(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)) if hasattr(
+        mesh, "devices") else dict(mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+# rule table: leaf name -> (tp_dim, fsdp_dim) indices into the *unstacked*
+# shape (None = do not shard).  tp gets "model", fsdp gets "data".
+_PARAM_RULES = {
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0), "wo": (0, 1),
+    "wg": (1, 0), "wu": (1, 0), "wd": (0, 1), "wg_mlp": (1, 0),
+    # embeddings: vocab-TP only — FSDP-sharding D as well makes the gather
+    # unpartitionable (XLA "involuntary full rematerialization")
+    "tok": (0, None), "untok": (0, None),
+    "frame_proj": (1, 0), "patch_proj": (1, 0),
+    "wx": (1, 0), "conv_w": (1, None), "conv_b": (0, None),
+    "gate_a_w": (0, None), "gate_x_w": (0, None),
+    "gate_a_b": (0, None), "gate_x_b": (0, None), "lam": (0, None),
+    "wm": (1, 0), "wz": (1, 0),
+    "w_in": (2, 1), "b_in": (1, None), "r": (1, None),
+    "w_i": (0, None), "w_f": (0, None), "b_i": (None, None),
+    "b_f": (None, None),
+    "router": (None, 0),
+    "ln1": (None, None), "ln2": (None, None), "q_norm": (None, None),
+    "k_norm": (None, None), "final_norm": (None, None),
+}
+
+# MoE expert tensors: expert dim 0 over "model" (EP), fsdp on dim 1
+_MOE_RULES = {"wg": (0, 1), "wu": (0, 1), "wd": (0, 2)}
+
+
+def _leaf_spec(name: str, shape: tuple, mesh_shape: dict, *, lead: tuple,
+               fsdp: bool, in_moe: bool) -> P:
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _PARAM_RULES
+    tp_dim, fsdp_dim = rules.get(name, (None, None))
+    n_lead = len(lead)
+    spec = list(lead) + [None] * (len(shape) - n_lead)
+    if tp_dim is not None and tp_dim + n_lead < len(shape):
+        ax = _axis(mesh_shape, "model", shape[tp_dim + n_lead])
+        if ax:
+            spec[tp_dim + n_lead] = ax
+    if fsdp and fsdp_dim is not None and fsdp_dim + n_lead < len(shape):
+        if spec[fsdp_dim + n_lead] is None:
+            ax = _axis(mesh_shape, "data", shape[fsdp_dim + n_lead])
+            if ax:
+                spec[fsdp_dim + n_lead] = ax
+    return P(*spec)
+
+
+def param_specs(params, cfg: ModelConfig, mesh, *, fsdp: bool = False,
+                pipeline: bool = False):
+    """PartitionSpec pytree matching ``params``.
+
+    ``pipeline=True`` is for stage-split params (leading (n_stages, pps)
+    axes → P("pod", None, ...))."""
+    ms = _mesh_shape(mesh)
+
+    def spec_for(path, leaf):
+        name = None
+        in_scan = False
+        in_moe = False
+        for k in path:
+            if isinstance(k, DictKey):
+                if k.key == "scan":
+                    in_scan = True
+                if k.key == "moe":
+                    in_moe = True
+                name = k.key
+        if pipeline:
+            lead = ("pod", None)
+        elif in_scan:
+            lead = (None,)
+        else:
+            lead = ()
+        return _leaf_spec(name, leaf.shape, ms, lead=lead, fsdp=fsdp,
+                          in_moe=in_moe)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_leaf_spec(name: str, shape: tuple, cfg: ModelConfig,
+                     mesh_shape: dict, n_lead: int, lead: tuple,
+                     seq_kv: bool = False) -> P:
+    """Cache leaves: batch over data; kv-heads over model when divisible,
+    else sequence over model.  ``n_lead``/``lead`` describe stacking dims.
+    ``seq_kv`` forces sequence-sharding (the pipeline's stage caches: XLA's
+    partitioner CHECK-crashes expanding head-sharded KV device groups inside
+    the partial-manual pod region)."""
+    spec = list(lead) + [None] * (len(shape) - n_lead)
+    md = mesh_shape.get("model", 1)
+
+    def set_dim(i, ax_name):
+        ax = _axis(mesh_shape, ax_name, shape[i])
+        if ax and spec[i] is None:
+            spec[i] = ax
+            return True
+        return False
+
+    head_shard = cfg.num_kv_heads % md == 0 and not seq_kv
+    if name in ("k_scale", "v_scale"):        # (B, C, Hk)
+        set_dim(n_lead + 0, "data")
+        if head_shard:
+            set_dim(n_lead + 2, "model")
+        else:
+            set_dim(n_lead + 1, "model")
+        return P(*spec)
+    if name in ("k", "v"):                    # (B, C, Hk, Dh)
+        set_dim(n_lead + 0, "data")
+        if head_shard:
+            set_dim(n_lead + 2, "model")
+        else:
+            set_dim(n_lead + 1, "model")      # sequence-parallel KV
+        if spec[n_lead + 0] is None and spec[n_lead + 1] != "model":
+            # tiny batch (long-context decode): shard seq over data too
+            set_dim(n_lead + 1, "data")
+    elif name in ("k_pages", "v_pages"):      # (P, page, Hk, Dh)
+        set_dim(n_lead + 0, "data")           # pages over data
+        if head_shard:
+            set_dim(n_lead + 2, "model")
+    elif name == "pos":                       # (B, C)
+        set_dim(n_lead + 0, "data")
+        if not head_shard:
+            set_dim(n_lead + 1, "model")
+        elif spec[n_lead + 0] is None:
+            set_dim(n_lead + 1, "data")
+    elif name == "page_table":                # (B, max_pages)
+        set_dim(n_lead + 0, "data")
+    elif name in ("h", "conv"):               # rglru (B, Dr)/(B, cw-1, Dr)
+        set_dim(n_lead + 0, "data")
+        set_dim(len(shape) - 1, "model")
+    elif name in ("c", "n", "m"):             # lstm states
+        set_dim(n_lead + 0, "data")
+        if len(shape) - n_lead >= 2:
+            if cfg.num_heads % md == 0:        # heads over model
+                set_dim(n_lead + 1, "model")
+            else:                              # else last (unit/hidden) dim
+                set_dim(len(shape) - 1, "model")
+    return P(*spec)
+
+
+def cache_specs(caches, cfg: ModelConfig, mesh, *, pipeline: bool = False):
+    """PartitionSpec pytree for a cache pytree (dense, paged or pipeline)."""
+    ms = _mesh_shape(mesh)
+
+    def spec_for(path, leaf):
+        name = None
+        section = None
+        for k in path:
+            if isinstance(k, DictKey):
+                if k.key in ("scan", "tail", "stage", "epi_scan"):
+                    section = k.key
+                else:
+                    name = k.key
+        if section == "stage":                 # (n_stages, n_mb, pps, ...)
+            lead = ("pod", None, None)
+        elif section in ("scan", "epi_scan"):  # (n_periods, ...)
+            lead = (None,)
+        else:
+            lead = ()
+        return _cache_leaf_spec(name, leaf.shape, cfg, ms, len(lead), lead,
+                                seq_kv=(section == "stage"))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+# ---------------------------------------------------------------------------
+# Batches / activations
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes: dict, mesh, *, batch_axes=("data",),
+                fold_pod: bool = True) -> dict:
+    """Input batch specs: leading batch dim over data (and pod, folded into
+    DP, when present)."""
+    ms = _mesh_shape(mesh)
+    axes = []
+    if fold_pod and "pod" in ms:
+        axes.append("pod")
+    axes.extend(a for a in batch_axes if a in ms)
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        group = tuple(axes)
+        total = int(np.prod([ms[a] for a in group])) if group else 1
+        if group and shape[0] % total == 0:
+            first = group[0] if len(group) == 1 else group
+            return P(first, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec_for, batch_shapes)
+
+
+def opt_state_specs(pspecs):
+    """Optimizer moments inherit the param sharding; step is replicated."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=pspecs)

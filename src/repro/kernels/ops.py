@@ -1,0 +1,74 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+Routes to the Pallas implementation when the shape is TPU-tileable, and to
+the pure-jnp oracle otherwise.  On non-TPU backends the kernels execute in
+``interpret=True`` mode (Python evaluation of the kernel body) — numerically
+identical, structurally the same program.
+
+The routing predicate is conservative: Pallas requires the head dim to be a
+multiple of the 128-lane register width for MXU efficiency (64 is accepted:
+it packs two heads per register row on v5e).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_decode_attention as _paged_pl
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _aligned(*dims: int) -> bool:
+    return all(d % 64 == 0 and d > 0 for d in dims)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 512, q_offset=0,
+                    scheme: str = "masked"):
+    """Drop-in replacement for the jnp flash attention (prefill/train)."""
+    dh = q.shape[-1]
+    sq, skv = q.shape[1], k.shape[1]
+    offset_static = isinstance(q_offset, int) and q_offset == 0
+    if _aligned(dh) and offset_static and sq >= 8 and skv >= 8:
+        q_blk = max(8, min(q_chunk, 128))
+        kv_blk = max(8, min(kv_chunk, 128))
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_blk=q_blk, kv_blk=kv_blk,
+                                      interpret=_interpret())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, scheme=scheme)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *,
+                     window: int = 0):
+    """Dense-cache decode attention (jnp; the paged pool path is the kernel)."""
+    return ref.decode_attention_ref(q, k_cache, v_cache, slot_pos, cur_pos,
+                                    window=window)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                           window: int = 0):
+    dh = q.shape[-1]
+    page_size = k_pages.shape[1]
+    if _aligned(dh) and page_size % 8 == 0:
+        return _paged_pl(q, k_pages, v_pages, page_table, seq_lens,
+                         window=window, interpret=_interpret())
+    return ref.paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                          seq_lens, window=window)
+
+
+def rglru_scan(a, b, h0=None):
+    bsz, s, dr = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dr), jnp.float32)
+    if dr % 128 == 0 and s >= 8:
+        return rglru_scan_pallas(a, b, h0, interpret=_interpret())
+    return ref.rglru_scan_ref(a, b, h0)

@@ -1,0 +1,132 @@
+"""Pallas TPU paged decode-attention kernel.
+
+This is the TPU adaptation of the paper's FlashInfer paged-KV decode path:
+the KV cache lives in a *page pool* (``(n_pages, page_size, Hk, Dh)``) and
+each sequence owns a list of pages (``page_table`` (B, max_pages)).  The
+kernel walks a sequence's pages, DMA-ing one page per grid step into VMEM —
+the page indirection is resolved by the BlockSpec index_map reading the
+scalar-prefetched page table (``PrefetchScalarGridSpec``), so pages stream
+HBM→VMEM without a gather materialising the contiguous KV.
+
+Grid = (B, Hk, max_pages); online softmax in VMEM scratch; pages beyond
+``ceil(seq_len / page_size)`` are skipped with ``pl.when`` (no DMA issued for
+unused table slots on TPU since the index map still reads a valid page id —
+we clamp to page 0 — but the FLOPs are skipped).
+
+Oracle: ``repro.kernels.ref.paged_decode_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page_size: int, max_pages: int,
+                  g: int, window: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = len_ref[b]                       # tokens in cache (incl. current)
+    n_pages = (seq_len + page_size - 1) // page_size
+
+    @pl.when(p < n_pages)
+    def _compute():
+        q = q_ref[0, 0]                        # (G, Dh)
+        k = k_ref[0, :, 0]                     # (page_size, Dh)
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / (q_ref.shape[-1] ** 0.5))          # (G, page)
+
+        tok = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        mask = tok < seq_len
+        if window > 0:
+            mask &= tok > seq_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        pr = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(pr, axis=-1)
+        pv = jax.lax.dot_general(pr.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[:, 0] = m_cur
+
+    @pl.when(p == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           seq_lens: jax.Array, *, window: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    q          (B, H, Dh)         current-token queries
+    k/v_pages  (P, page, Hk, Dh)  shared page pool
+    page_table (B, max_pages)     page ids per sequence (row-major in time)
+    seq_lens   (B,)               tokens present per sequence
+    -> (B, H, Dh)
+    """
+    b, h, dh = q.shape
+    n_pool, page_size, hk, _ = k_pages.shape
+    g = h // hk
+    max_pages = page_table.shape[1]
+
+    qr = q.reshape(b, hk, g, dh)
+    # clamp table so skipped slots still index a resident page
+    pt = jnp.clip(page_table, 0, n_pool - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hk, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bi, hi, pi, pt_ref, len_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda bi, hi, pi, pt_ref, len_ref:
+                         (pt_ref[bi, pi], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda bi, hi, pi, pt_ref, len_ref:
+                         (pt_ref[bi, pi], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, dh),
+            lambda bi, hi, pi, pt_ref, len_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               max_pages=max_pages, g=g, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, dh), q.dtype),
+        interpret=interpret,
+    )(pt, seq_lens.astype(jnp.int32), qr, k_pages, v_pages)
+    return out.reshape(b, h, dh)

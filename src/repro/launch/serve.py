@@ -1,0 +1,91 @@
+"""Offline serving driver: DeServe engine on the local device.
+
+Runs the full serving stack end-to-end on a *reduced* config (CPU-sized) or
+any registered arch: paged KV cache with local+global pools, double-buffer
+offloading, microbatch round-robin, continuous batching, and the §3 profit
+accounting on the measured throughput.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
+      --microbatches 2 --mb-size 2 --max-new 24 [--full-size]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch, reduced_config
+from repro.core.cost_model import PLATFORMS, min_throughput, profit_per_hour
+from repro.core.offload import DoubleBufferOffloader
+from repro.core.scheduler import optimal_microbatches
+from repro.models import model as model_lib
+from repro.models.common import Runtime
+from repro.serving.engine import OfflineEngine
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.request import Request, SamplingParams
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--mb-size", type=int, default=2)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (needs real accelerators)")
+    ap.add_argument("--latency", type=float, default=0.064,
+                    help="assumed link latency for the schedule report")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = reduced_config(cfg)
+    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed), rt)
+    pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
+                      n_global_pages=16, max_pages_per_seq=16)
+    off = DoubleBufferOffloader(pool, num_microbatches=args.microbatches)
+    sp = SamplingParams(temperature=args.temperature,
+                        max_new_tokens=args.max_new)
+    engine = OfflineEngine(cfg, params, rt, mb_size=args.mb_size,
+                           num_microbatches=args.microbatches, pool=pool,
+                           sampling=sp, offloader=off, seed=args.seed)
+
+    rng = np.random.RandomState(args.seed)
+    reqs = [Request(i, list(rng.randint(1, cfg.vocab_size,
+                                        rng.randint(4, 24))), sp)
+            for i in range(args.requests)]
+    engine.submit(reqs)
+
+    t0 = time.perf_counter()
+    done = engine.run(max_steps=100_000)
+    dt = time.perf_counter() - t0
+    rep = engine.throughput_report()
+    tps = rep["total_tokens"] / dt
+    print(f"finished {len(done)}/{args.requests} requests in {dt:.2f}s "
+          f"({tps:.1f} tok/s on this host)")
+    print(f"report: {rep}")
+
+    n_b = optimal_microbatches(8, 0.08, args.latency)
+    print(f"\nschedule report (8-stage pipeline, T_S=80ms, "
+          f"L={args.latency*1000:.0f}ms): N_B* = {n_b}")
+    for name in ("mining", "ionet", "cloud"):
+        p = PLATFORMS[name]
+        print(f"  {name:8s} break-even {min_throughput(p.cost_per_hour):8.1f}"
+              f" tok/s; at 450 tok/s profit/h = "
+              f"${profit_per_hour(450, p.cost_per_hour):+.2f}")
+
+
+if __name__ == "__main__":
+    main()

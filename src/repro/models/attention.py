@@ -1,0 +1,433 @@
+"""Attention: chunked (flash-style) prefill/train attention and cached decode.
+
+Pure-jnp implementations live here; they are also the numerical oracles for
+the Pallas kernels in ``repro/kernels``.  ``repro.kernels.ops`` routes to the
+Pallas path when ``Runtime.use_pallas`` is set and shapes are TPU-aligned.
+
+Layout conventions:
+  q          (B, Sq, H,  Dh)
+  k, v       (B, Skv, Hk, Dh)       Hk | H  (GQA group = H // Hk)
+  decode q   (B, H, Dh)             single new token per sequence
+  KV cache   (B, C, Hk, Dh) with a slot-position array (B, C) int32, -1=empty
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, Hk, G, D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int = 0,
+                    q_offset=0,
+                    q_chunk: int = 512,
+                    kv_chunk: int = 512,
+                    scheme: str = "masked") -> jax.Array:
+    """Memory-O(chunk) causal attention with online softmax.
+
+    window > 0 restricts each query to the last ``window`` keys (sliding
+    window, inclusive of self).  ``q_offset`` is the absolute position of
+    q[:, 0] relative to k[:, 0] (used when a prefill continues a cache).
+
+    Differentiation goes through a custom VJP that *recomputes* block scores
+    in the backward pass from (q, k, v, out, lse); without it the scan
+    transpose stores the full S×S probability tensor per layer (hundreds of
+    GB at 4k context — see EXPERIMENTS.md §Perf).
+
+    scheme:
+      "masked"    — every q chunk scans every kv chunk, causality by masking
+                    (2x FLOP overhead on strictly-causal layers; simple).
+      "blockpair" — q chunks only visit kv chunks that intersect their causal
+                    span (exact lower-triangular FLOPs; see kernels/ops.py).
+    """
+    if isinstance(q_offset, int):
+        static = (causal, window, q_offset, q_chunk, kv_chunk, scheme)
+        return _flash_vjp(static, q, k, v)
+    return _flash_impl(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset, q_chunk=q_chunk,
+                       kv_chunk=kv_chunk, scheme=scheme)[0]
+
+
+def _flash_impl(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal, window, q_offset, q_chunk, kv_chunk, scheme):
+    """Returns (out (B,Sq,H,Dh), lse (B,Hk,G,Sq) fp32)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    hk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # pad seq lens up to chunk multiples
+    pq = (-sq) % q_chunk
+    pkv = (-skv) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq = (sq + pq) // q_chunk
+
+    qg = _gqa_split(q, hk)                                   # (B,Sq,Hk,G,D)
+    g = qg.shape[3]
+
+    if window > 0:
+        out, lse = _windowed_attention(qg, k, v, window=window,
+                                       q_offset=q_offset, q_chunk=q_chunk,
+                                       scale=scale, sq_real=sq, skv_real=skv)
+    elif scheme == "blockpair" and causal:
+        out, lse = _blockpair_attention(qg, k, v, q_offset=q_offset,
+                                        q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                        scale=scale, sq_real=sq, skv_real=skv)
+    else:
+        out, lse = _masked_attention(qg, k, v, causal=causal,
+                                     q_offset=q_offset, q_chunk=q_chunk,
+                                     kv_chunk=kv_chunk, scale=scale,
+                                     sq_real=sq, skv_real=skv)
+    out = out.reshape(b, sq + pq, h, dh)
+    return out[:, :sq], lse[..., :sq]
+
+
+def _online_update(carry, s, v_chunk):
+    """One online-softmax accumulation step.
+
+    carry: (o (B,Hk,G,cq,D) f32, m (B,Hk,G,cq) f32, l like m)
+    s:     (B,Hk,G,cq,ck) f32 scores (already masked with NEG_INF)
+    """
+    o, m, l = carry
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v_chunk.dtype), v_chunk,
+                    preferred_element_type=jnp.float32)
+    o = o * alpha[..., None] + pv
+    return (o, m_new, l)
+
+
+def _finish(o, m, l, dtype):
+    """Normalise the online accumulator; also return log-sum-exp."""
+    l = jnp.maximum(l, 1e-30)
+    return (o / l[..., None]).astype(dtype), m + jnp.log(l)
+
+
+def _masked_attention(qg, k, v, *, causal, q_offset, q_chunk, kv_chunk,
+                      scale, sq_real, skv_real):
+    b, sqp, hk, g, dh = qg.shape
+    skvp = k.shape[1]
+    nq = sqp // q_chunk
+    nkv = skvp // kv_chunk
+    dtype = qg.dtype
+
+    kv_pos = jnp.arange(skvp).reshape(nkv, kv_chunk)
+
+    def q_body(_, qi):
+        q_c = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        q_c = jnp.moveaxis(q_c, 1, 3)                        # (B,Hk,G,cq,D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_body(carry, xs):
+            k_c, v_c, pos_c = xs                             # (B,ck,Hk,D),(ck,)
+            s = jnp.einsum("bkgqd,bckd->bkgqc", q_c, k_c,
+                           preferred_element_type=jnp.float32) * scale
+            mask = pos_c[None, :] <= q_pos[:, None] if causal else (
+                jnp.ones((q_chunk, kv_chunk), bool))
+            mask = mask & (pos_c[None, :] < skv_real) & (
+                (q_pos[:, None] - q_offset) < sq_real)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            return _online_update(carry, s, v_c), None
+
+        o0 = jnp.zeros((b, hk, g, q_chunk, dh), jnp.float32)
+        m0 = jnp.full((b, hk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_chunk), jnp.float32)
+        ks = k.reshape(b, nkv, kv_chunk, hk, dh).swapaxes(0, 1)
+        vs = v.reshape(b, nkv, kv_chunk, hk, dh).swapaxes(0, 1)
+        (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0), (ks, vs, kv_pos))
+        out, lse = _finish(o, m, l, dtype)                   # (B,Hk,G,cq,D)
+        return None, (jnp.moveaxis(out, 3, 1), lse)          # (B,cq,Hk,G,D)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sqp, hk, g, dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, hk, g, sqp)
+    return out, lse
+
+
+def _blockpair_attention(qg, k, v, *, q_offset, q_chunk, kv_chunk, scale,
+                         sq_real, skv_real):
+    """Exact-FLOPs causal attention: q chunk i only visits kv chunks
+    j <= ceil((i*cq + offset + cq)/ckv).  Implemented as a scan over the
+    packed list of (qi, kj) block pairs with segment accumulation.
+    """
+    b, sqp, hk, g, dh = qg.shape
+    skvp = k.shape[1]
+    nq = sqp // q_chunk
+    nkv = skvp // kv_chunk
+    dtype = qg.dtype
+
+    # enumerate causal block pairs (static python; nq, nkv are static)
+    pairs = [(qi, kj) for qi in range(nq)
+             for kj in range(nkv)
+             if kj * kv_chunk <= qi * q_chunk + q_offset + q_chunk - 1]
+    qi_arr = jnp.asarray([p[0] for p in pairs])
+    kj_arr = jnp.asarray([p[1] for p in pairs])
+
+    def body(carry, pair):
+        o, m, l = carry                                       # (B,Hk,G,Sq,*)
+        qi, kj = pair
+        q_c = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        q_c = jnp.moveaxis(q_c, 1, 3)
+        k_c = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk, kv_chunk, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk, kv_chunk, axis=1)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+        kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bkgqd,bckd->bkgqc", q_c, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kv_pos[None] <= q_pos[:, None]) & (kv_pos[None] < skv_real)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        m_blk = jax.lax.dynamic_slice_in_dim(m, qi * q_chunk, q_chunk, 3)
+        l_blk = jax.lax.dynamic_slice_in_dim(l, qi * q_chunk, q_chunk, 3)
+        o_blk = jax.lax.dynamic_slice_in_dim(o, qi * q_chunk, q_chunk, 3)
+        (o_blk, m_blk, l_blk) = _online_update((o_blk, m_blk, l_blk), s, v_c)
+        o = jax.lax.dynamic_update_slice_in_dim(o, o_blk, qi * q_chunk, 3)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_blk, qi * q_chunk, 3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_blk, qi * q_chunk, 3)
+        return (o, m, l), None
+
+    o0 = jnp.zeros((b, hk, g, sqp, dh), jnp.float32)
+    m0 = jnp.full((b, hk, g, sqp), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sqp), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (qi_arr, kj_arr))
+    out, lse = _finish(o, m, l, dtype)                        # (B,Hk,G,Sq,D)
+    return jnp.moveaxis(out, 3, 1), lse
+
+
+def _windowed_attention(qg, k, v, *, window, q_offset, q_chunk, scale,
+                        sq_real, skv_real):
+    """Sliding-window attention: q chunk at qs attends kv[qs-window+1 : qs+cq].
+
+    The kv slice has static size (window + q_chunk), so FLOPs scale with the
+    window, not the sequence.
+    """
+    b, sqp, hk, g, dh = qg.shape
+    skvp = k.shape[1]
+    nq = sqp // q_chunk
+    dtype = qg.dtype
+    span = window + q_chunk
+
+    # pad kv left by `window` and right enough that slices never clamp
+    # (clamped dynamic_slice starts would desynchronise kv_pos bookkeeping)
+    right = max(0, sqp + (q_offset if isinstance(q_offset, int) else 0)
+                + q_chunk - skvp)
+    kp = jnp.pad(k, ((0, 0), (window, right), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, right), (0, 0), (0, 0)))
+
+    def q_body(_, qi):
+        qs = qi * q_chunk
+        q_c = jax.lax.dynamic_slice_in_dim(qg, qs, q_chunk, axis=1)
+        q_c = jnp.moveaxis(q_c, 1, 3)
+        q_pos = qs + jnp.arange(q_chunk) + q_offset
+        # absolute kv positions covered by this slice
+        start = qs + q_offset                                 # index into padded kv
+        k_c = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        kv_pos = start - window + jnp.arange(span)            # absolute positions
+        s = jnp.einsum("bkgqd,bckd->bkgqc", q_c, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kv_pos[None] <= q_pos[:, None]) \
+            & (kv_pos[None] > q_pos[:, None] - window) \
+            & (kv_pos[None] >= 0) & (kv_pos[None] < skv_real)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        o0 = jnp.zeros((b, hk, g, q_chunk, dh), jnp.float32)
+        m0 = jnp.full((b, hk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_chunk), jnp.float32)
+        o, m, l = _online_update((o0, m0, l0), s, v_c)
+        out, lse = _finish(o, m, l, dtype)
+        return None, (jnp.moveaxis(out, 3, 1), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sqp, hk, g, dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, hk, g, sqp)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention custom VJP (recompute backward)
+# ---------------------------------------------------------------------------
+
+
+def _band_pairs(nq, nkv, q_chunk, kv_chunk, *, causal, window, q_offset):
+    """(qi, kj) block pairs whose mask support is non-empty."""
+    pairs = []
+    for qi in range(nq):
+        q_lo = qi * q_chunk + q_offset
+        q_hi = q_lo + q_chunk - 1
+        for kj in range(nkv):
+            k_lo = kj * kv_chunk
+            k_hi = k_lo + kv_chunk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window > 0 and k_hi <= q_lo - window:
+                continue
+            pairs.append((qi, kj))
+    return pairs
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_vjp(static, q, k, v):
+    causal, window, q_offset, q_chunk, kv_chunk, scheme = static
+    return _flash_impl(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                       scheme=scheme)[0]
+
+
+def _flash_vjp_fwd(static, q, k, v):
+    causal, window, q_offset, q_chunk, kv_chunk, scheme = static
+    out, lse = _flash_impl(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, scheme=scheme)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(static, res, dout):
+    """Chunked backward: recompute block scores from (q, k, lse); memory
+    stays O(S·Dh) instead of O(S²)."""
+    causal, window, q_offset, q_chunk, kv_chunk, scheme = static
+    q, k, v, out, lse = res
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    pq, pkv = (-sq) % q_chunk, (-skv) % kv_chunk
+
+    def padq(x):
+        return jnp.pad(x, ((0, 0), (0, pq)) + ((0, 0),) * (x.ndim - 2)) \
+            if pq else x
+
+    def padkv(x):
+        return jnp.pad(x, ((0, 0), (0, pkv)) + ((0, 0),) * (x.ndim - 2)) \
+            if pkv else x
+
+    qg = jnp.moveaxis(_gqa_split(padq(q), hk), 1, 3)      # (B,Hk,G,Sqp,D)
+    og = jnp.moveaxis(_gqa_split(padq(out), hk), 1, 3)
+    dg = jnp.moveaxis(_gqa_split(padq(dout), hk), 1, 3)
+    kp = padkv(k)                                          # (B,Skvp,Hk,D)
+    vp = padkv(v)
+    lse_p = jnp.pad(lse, ((0, 0),) * 3 + ((0, pq),)) if pq else lse
+    dvec = jnp.sum(dg.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+
+    sqp, skvp = sq + pq, skv + pkv
+    nq, nkv = sqp // q_chunk, skvp // kv_chunk
+    pairs = _band_pairs(nq, nkv, q_chunk, kv_chunk, causal=causal,
+                        window=window, q_offset=q_offset)
+    qi_arr = jnp.asarray([p[0] for p in pairs])
+    kj_arr = jnp.asarray([p[1] for p in pairs])
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, kj = pair
+        qs, ks = qi * q_chunk, kj * kv_chunk
+        q_c = jax.lax.dynamic_slice_in_dim(qg, qs, q_chunk, 3)
+        o_dc = jax.lax.dynamic_slice_in_dim(dg, qs, q_chunk, 3)
+        l_c = jax.lax.dynamic_slice_in_dim(lse_p, qs, q_chunk, 3)
+        d_c = jax.lax.dynamic_slice_in_dim(dvec, qs, q_chunk, 3)
+        k_c = jax.lax.dynamic_slice_in_dim(kp, ks, kv_chunk, 1)
+        v_c = jax.lax.dynamic_slice_in_dim(vp, ks, kv_chunk, 1)
+
+        s = jnp.einsum("bkgqd,bckd->bkgqc", q_c, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = qs + jnp.arange(q_chunk) + q_offset
+        kv_pos = ks + jnp.arange(kv_chunk)
+        # barrier: qi/kj are compile-time constants (scan xs), and without
+        # it XLA constant-folds the masks of EVERY block pair into one
+        # multi-GB pred tensor
+        q_pos, kv_pos = jax.lax.optimization_barrier((q_pos, kv_pos))
+        mask = (kv_pos[None] < skv) & ((q_pos[:, None] - q_offset) < sq)
+        if causal:
+            mask &= kv_pos[None] <= q_pos[:, None]
+        if window > 0:
+            mask &= kv_pos[None] > q_pos[:, None] - window
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - l_c[..., None]), 0.0)     # (B,Hk,G,cq,ck)
+
+        dv_blk = jnp.einsum("bkgqc,bkgqd->bckd", p,
+                            o_dc.astype(jnp.float32))
+        dp = jnp.einsum("bkgqd,bckd->bkgqc", o_dc.astype(jnp.float32),
+                        v_c.astype(jnp.float32))
+        ds = p * (dp - d_c[..., None]) * scale
+        dq_blk = jnp.einsum("bkgqc,bckd->bkgqd", ds,
+                            k_c.astype(jnp.float32))
+        dk_blk = jnp.einsum("bkgqc,bkgqd->bckd", ds,
+                            q_c.astype(jnp.float32))
+
+        dq_cur = jax.lax.dynamic_slice_in_dim(dq, qs, q_chunk, 3)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_cur + dq_blk, qs, 3)
+        dk_cur = jax.lax.dynamic_slice_in_dim(dk, ks, kv_chunk, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, dk_cur + dk_blk, ks, 1)
+        dv_cur = jax.lax.dynamic_slice_in_dim(dv, ks, kv_chunk, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, dv_cur + dv_blk, ks, 1)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros((b, hk, g, sqp, dh), jnp.float32)
+    dk0 = jnp.zeros((b, skvp, hk, dh), jnp.float32)
+    dv0 = jnp.zeros((b, skvp, hk, dh), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (qi_arr, kj_arr))
+    dq = jnp.moveaxis(dq, 3, 1).reshape(b, sqp, h, dh)[:, :sq].astype(q.dtype)
+    dk = dk[:, :skv].astype(k.dtype)
+    dv = dv[:, :skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode attention
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, cur_pos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q         (B, H, Dh)
+    k/v cache (B, C, Hk, Dh)
+    slot_pos  (B, C) int32 absolute position stored in each slot (-1 empty)
+    cur_pos   (B,)  int32 position of the query token
+    """
+    b, h, dh = q.shape
+    hk = k_cache.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(b, hk, g, dh)
+
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window > 0:
+        valid &= slot_pos > (cur_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgc,bckd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, dh).astype(q.dtype)

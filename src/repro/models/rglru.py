@@ -1,0 +1,115 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv + RG-LRU + gating.
+
+The RG-LRU recurrence is linear in its hidden state,
+
+    h_t = a_t * h_{t-1} + b_t,
+    a_t = exp(-c * softplus(L) * sigmoid(r_t)),
+    b_t = sqrt(1 - a_t^2) * (i_t * x_t),
+
+so prefill/training use ``jax.lax.associative_scan`` (parallel prefix, depth
+O(log S)) while decode is a single fused elementwise step.  The Pallas kernel
+in ``repro/kernels/rglru_scan.py`` implements the same recurrence with VMEM
+block tiling; ``repro/kernels/ref.py`` points back at the functions here.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0      # the paper's fixed decay sharpness constant
+
+
+def rglru_gates(x: jax.Array, w: dict, num_heads: int):
+    """Compute (a, b) coefficients of the linear recurrence.
+
+    x: (B, S, Dr) post-conv activations (fp32 recommended).
+    Returns a, b with shape (B, S, Dr), fp32.
+    """
+    b_, s, dr = x.shape
+    dh = dr // num_heads
+    xh = x.reshape(b_, s, num_heads, dh)
+    # block-diagonal gate projections (per head)
+    r = jnp.einsum("bshd,hde->bshe", xh, w["gate_a_w"]).reshape(b_, s, dr)
+    i = jnp.einsum("bshd,hde->bshe", xh, w["gate_x_w"]).reshape(b_, s, dr)
+    r = jax.nn.sigmoid(r.astype(jnp.float32) + w["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(i.astype(jnp.float32) + w["gate_x_b"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(w["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1 - exp(2 log a)
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = mult * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(a: jax.Array, b: jax.Array,
+               h0: Optional[jax.Array] = None) -> jax.Array:
+    """Parallel linear recurrence over axis 1 (time). Returns all h_t (fp32)."""
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(a: jax.Array, b: jax.Array, h: jax.Array) -> jax.Array:
+    """Single decode step: (B, Dr) each."""
+    return a * h + b
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal temporal conv.
+
+    x: (B, S, Dr); w: (cw, Dr); state: (B, cw-1, Dr) trailing inputs of the
+    previous segment (decode / chunked prefill).  Returns (y, new_state).
+    """
+    cw = w.shape[0]
+    bsz, s, dr = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, cw - 1, dr), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B, S+cw-1, Dr)
+    y = jnp.zeros((bsz, s, dr), jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i:i + s].astype(jnp.float32) * w[cw - 1 - i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros((bsz, 0, dr), x.dtype)
+    return y.astype(x.dtype), new_state
+
+
+def rglru_block(x: jax.Array, w: dict, num_heads: int, *,
+                mode: str, state: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Griffin recurrent mixer (everything between the residual adds).
+
+    x: (B, S, D) normalised input.  state: {"h": (B, Dr) fp32,
+    "conv": (B, cw-1, Dr)} or None (train).
+    """
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, w["wg"]).astype(jnp.float32))
+    main = jnp.einsum("bsd,de->bse", x, w["wx"])                # (B, S, Dr)
+
+    conv_state = state["conv"] if state is not None else None
+    main, new_conv = causal_conv1d(main, w["conv_w"], w["conv_b"], conv_state)
+
+    a, b = rglru_gates(main, w, num_heads)
+    if mode == "decode":
+        h = rglru_step(a[:, 0], b[:, 0], state["h"])            # (B, Dr)
+        hs = h[:, None]
+    else:
+        h0 = state["h"] if state is not None else None
+        hs = rglru_scan(a, b, h0)                               # (B, S, Dr)
+        h = hs[:, -1]
+
+    y = hs * gate                                               # fp32
+    y = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), w["wo"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h, "conv": new_conv}
+    return y, new_state

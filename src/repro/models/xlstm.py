@@ -1,0 +1,273 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly sequential) [arXiv:2405.04517].
+
+mLSTM's gates depend only on the *input*, so the (C, n) recurrence is linear
+time-varying and admits a chunkwise-parallel form (quadratic inside a chunk of
+``L`` tokens, recurrent across chunks) — the same structure flash-linear-
+attention kernels exploit.  ``mlstm_sequential`` is the O(S) exact oracle;
+``mlstm_chunkwise`` is the production path (tested equivalent).
+
+sLSTM's gates read the previous hidden state, so it is inherently sequential;
+we run a fused ``lax.scan`` over time with block-diagonal (per-head) recurrent
+weights.
+
+State conventions (decode):
+  mLSTM: {"c": (B, H, Dh, Dh) f32, "n": (B, H, Dh) f32, "m": (B, H) f32}
+  sLSTM: {"c","n","h","m": (B, Dr) f32}
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_qkv_gates(xm: jax.Array, w: dict, num_heads: int):
+    """Project the main branch into per-head q/k/v and scalar i/f gates.
+
+    xm: (B, S, Dr).  Returns q,k,v (B,S,H,dh) and i_raw,f_raw (B,S,H) fp32.
+    """
+    b, s, dr = xm.shape
+    dh = dr // num_heads
+    xh = xm.reshape(b, s, num_heads, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, w["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, w["wk"]) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)).astype(xm.dtype)
+    v = jnp.einsum("bshd,hde->bshe", xh, w["wv"])
+    i_raw = (jnp.einsum("bshd,hd->bsh", xh, w["w_i"]).astype(jnp.float32)
+             + w["b_i"].astype(jnp.float32))
+    f_raw = (jnp.einsum("bshd,hd->bsh", xh, w["w_f"]).astype(jnp.float32)
+             + w["b_f"].astype(jnp.float32))
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """One exact decode step.
+
+    q,k,v: (B, H, dh); i_raw,f_raw: (B, H) fp32; state per module docstring.
+    Returns (h (B,H,dh) f32, new_state).
+    """
+    c, n, m = state["c"], state["n"], state["m"]
+    log_f = -jax.nn.softplus(-f_raw)              # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)                  # (B, H)
+    f_g = jnp.exp(log_f + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    c_new = f_g[..., None, None] * c + i_g[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])      # (B,H,dh_v,dh_k)
+    n_new = f_g[..., None] * n + i_g[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, state=None):
+    """Exact O(S) recurrence; (B,S,H,dh) inputs.  Oracle for chunkwise."""
+    b, s, hn, dh = q.shape
+    if state is None:
+        state = mlstm_zero_state(b, hn, dh)
+
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        h, st = mlstm_step(qt, kt, vt, it, ft, st)
+        return st, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_raw.swapaxes(0, 1), f_raw.swapaxes(0, 1))
+    state, hs = jax.lax.scan(body, state, xs)
+    return hs.swapaxes(0, 1), state               # (B,S,H,dh) f32
+
+
+def mlstm_zero_state(batch: int, num_heads: int, head_dim: int) -> dict:
+    return {
+        "c": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+        # m = 0 <=> no history yet (matches sequential init)
+        "m": jnp.full((batch, num_heads), 0.0, jnp.float32),
+    }
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state=None, *, chunk: int = 64):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic attention-like term +
+    inter-chunk recurrent state, numerically stabilised.
+
+    q,k,v (B,S,H,dh); i_raw,f_raw (B,S,H) fp32.  Returns (h (B,S,H,dh) f32,
+    final_state).
+    """
+    b, s, hn, dh = q.shape
+    if state is None:
+        state = mlstm_zero_state(b, hn, dh)
+    chunk = max(1, min(chunk, s))
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        i_raw = zpad(i_raw)
+        # padded steps must not pollute the carried state: force f=1, i=-inf
+        f_pad = jnp.concatenate(
+            [f_raw, jnp.full((b, pad, hn), 40.0, f_raw.dtype)], axis=1)
+        i_pad = jnp.concatenate(
+            [i_raw[:, :s], jnp.full((b, pad, hn), -1e30, i_raw.dtype)], axis=1)
+        f_raw, i_raw = f_pad, i_pad
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    is_, fs = to_chunks(i_raw), to_chunks(f_raw)
+
+    def body(st, xs):
+        qc, kc, vc, ic, fc = xs                   # (B,L,H,*) for this chunk
+        c0, n0, m0 = st["c"], st["n"], st["m"]
+        log_f = -jax.nn.softplus(-fc)             # (B,L,H)
+        csum = jnp.cumsum(log_f, axis=1)          # F_t = sum_{u<=t} log f_u
+        # decay from chunk start to position t (inclusive of t's forget gate)
+        # "a_t" = prod_{u<=t} f_u ; inter-chunk term uses a_t * exp(m0)
+        log_a = csum                              # (B,L,H)
+        # log b_s = (decay from s+1..L applied later) ; source weight for
+        # intra-chunk: D_{t,s} = exp(F_t - F_s + i_s) for s <= t
+        log_i = ic                                # (B,L,H)
+        # stabiliser per target position: m_t = max(m0 + F_t, max_{s<=t}(F_t - F_s + i_s))
+        # note F_t - F_s + i_s = F_t + (i_s - F_s)
+        g = log_i - csum                          # i_s - F_s  (B,L,H)
+        g_run = jax.lax.cummax(g, axis=1)         # max_{s<=t}
+        m_t = jnp.maximum(m0[:, None] + log_a, log_a + g_run)  # (B,L,H)
+        # intra-chunk weights: logD[t,s] = F_t - F_s + i_s - m_t   (s <= t)
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        scores = jnp.einsum("blhd,buhd->bhlu", qf, kf)        # (B,H,t,s)
+        F = csum                                   # (B,L,H)
+        logD = (F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+                - m_t[:, :, None, :])              # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        D = jnp.moveaxis(jnp.exp(logD), 3, 1)      # (B,H,t,s)
+        ds = D * scores
+        intra_num = jnp.einsum("bhts,bshd->bthd", ds, vf)
+        intra_den = jnp.moveaxis(jnp.sum(ds, axis=-1), 1, 2)  # (B,t,H)
+        # inter-chunk contribution: decay a_t * exp(m0 - m_t)
+        inter_w = jnp.exp(m0[:, None] + log_a - m_t)          # (B,L,H)
+        inter_num = jnp.einsum("bhvk,blhk->blhv", c0, qf) * inter_w[..., None]
+        inter_den = jnp.einsum("bhk,blhk->blh", n0, qf) * inter_w
+        num = intra_num + inter_num
+        den = jnp.abs(intra_den + inter_den)
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        h = num / den[..., None]                   # (B,L,H,dh)
+
+        # ---- carry state across the chunk boundary ----
+        F_L = csum[:, -1]                          # (B,H) total decay
+        m_next = jnp.maximum(m0 + F_L, F_L + g_run[:, -1])
+        # per-source weight into the new state: exp(F_L - F_s + i_s - m_next)
+        w_src = jnp.exp(F_L[:, None] + g - m_next[:, None])    # (B,L,H)
+        c_new = (jnp.exp(m0 + F_L - m_next)[..., None, None] * c0
+                 + jnp.einsum("blh,blhv,blhk->bhvk", w_src, vf, kf))
+        n_new = (jnp.exp(m0 + F_L - m_next)[..., None] * n0
+                 + jnp.einsum("blh,blhk->bhk", w_src, kf))
+        return {"c": c_new, "n": n_new, "m": m_next}, h
+
+    state, hs = jax.lax.scan(body, state, (qs, ks, vs, is_, fs))
+    hs = hs.swapaxes(0, 1).reshape(b, sp, hn, dh)
+    return hs[:, :s], state
+
+
+def mlstm_block(x: jax.Array, w: dict, num_heads: int, *, mode: str,
+                state: Optional[dict], chunk: int = 64,
+                use_sequential: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """Full mLSTM mixer: up-proj, per-head matrix-memory recurrence, gated
+    output, down-proj.  x (B, S, D) normalised input."""
+    xm = jnp.einsum("bsd,de->bse", x, w["wm"])     # main branch (B,S,Dr)
+    xz = jnp.einsum("bsd,de->bse", x, w["wz"])     # gate branch
+    q, kk, v, i_raw, f_raw = mlstm_qkv_gates(xm, w, num_heads)
+    if mode == "decode":
+        h, new_state = mlstm_step(q[:, 0], kk[:, 0], v[:, 0],
+                                  i_raw[:, 0], f_raw[:, 0], state)
+        hs = h[:, None]
+    elif use_sequential:
+        hs, new_state = mlstm_sequential(q, kk, v, i_raw, f_raw, state)
+    else:
+        hs, new_state = mlstm_chunkwise(q, kk, v, i_raw, f_raw, state,
+                                        chunk=chunk)
+    b, s = x.shape[:2]
+    hs = hs.reshape(b, s, -1)                      # (B,S,Dr) f32
+    y = hs.astype(x.dtype) * jax.nn.silu(xz.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, w["wo"])
+    return y, (new_state if state is not None or mode != "train" else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_zero_state(batch: int, d_rnn: int) -> dict:
+    return {
+        "c": jnp.zeros((batch, d_rnn), jnp.float32),
+        "n": jnp.full((batch, d_rnn), 1e-6, jnp.float32),
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "m": jnp.zeros((batch, d_rnn), jnp.float32),
+    }
+
+
+def _slstm_cell(zx, st, r_w, num_heads):
+    """One sLSTM time step.  zx: (B, 4, Dr) pre-computed input projections
+    (i, f, z, o); st: state dict; r_w: (4, H, dh, dh) recurrent weights."""
+    c, n, h, m = st["c"], st["n"], st["h"], st["m"]
+    b, dr = h.shape
+    dh = dr // num_heads
+    hh = h.reshape(b, num_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, r_w).reshape(4, b, dr)
+    i_raw = zx[:, 0] + rec[0]
+    f_raw = zx[:, 1] + rec[1]
+    z_raw = zx[:, 2] + rec[2]
+    o_raw = zx[:, 3] + rec[3]
+    log_f = -jax.nn.softplus(-f_raw)               # exp-gate via log sigmoid
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_g * c + i_g * z
+    n_new = jnp.maximum(f_g * n + i_g, 1e-6)
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(x: jax.Array, w: dict, num_heads: int, *, mode: str,
+                state: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+    """sLSTM mixer: input projections + sequential recurrence + down-proj.
+
+    x (B, S, D).  w: {"w_in": (4, D, Dr), "b_in": (4, Dr),
+    "r": (4, H, dh, dh), "wo": (Dr, D)}.
+    """
+    b, s, d = x.shape
+    zx = (jnp.einsum("bsd,gde->bsge", x, w["w_in"]).astype(jnp.float32)
+          + w["b_in"].astype(jnp.float32))         # (B,S,4,Dr)
+    st = state if state is not None else slstm_zero_state(b, w["wo"].shape[0])
+
+    if mode == "decode":
+        st = _slstm_cell(zx[:, 0], st, w["r"].astype(jnp.float32), num_heads)
+        hs = st["h"][:, None]
+    else:
+        def body(carry, zt):
+            carry = _slstm_cell(zt, carry, w["r"].astype(jnp.float32),
+                                num_heads)
+            return carry, carry["h"]
+
+        st, hs = jax.lax.scan(body, st, zx.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)                     # (B,S,Dr)
+
+    y = jnp.einsum("bse,ed->bsd", hs.astype(x.dtype), w["wo"])
+    return y, (st if state is not None or mode != "train" else None)

@@ -1,0 +1,294 @@
+"""Offline (throughput-oriented) serving engine with continuous batching.
+
+The engine owns ``N_B`` *microbatches* of ``mb_size`` decode slots each —
+the unit the DeServe pipeline keeps in flight.  Each step round-robins one
+decode tick over the next microbatch; finished sequences release their pages
+and the slot is immediately replenished from the queue (prefill), matching
+the paper's workload ("replenishing them as the previous requests are
+completed").
+
+KV placement follows §4.2: microbatch ``m`` draws overflow pages from global
+pool ``G_{m%2}``; an optional :class:`repro.core.offload.DoubleBufferOffloader`
+swaps the non-resident pool to host between ticks (on TPU this is the
+HBM↔host DMA the paper overlaps with compute; on CPU it is an explicit copy
+— same bookkeeping, same schedule).
+
+Prefill is exact-length (rounded to a multiple of 8 for attention-only
+archs) and one sequence at a time; decode is one fully-batched jit per
+microbatch.  All jit entry points have static shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model as model_lib
+from repro.models.common import Runtime
+from repro.serving import kv_cache as kvc
+from repro.serving.request import (EngineStats, Request, SamplingParams,
+                                   SequenceState, Status)
+from repro.serving.sampler import sample
+
+
+class OfflineEngine:
+    def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
+                 mb_size: int = 4, num_microbatches: int = 1,
+                 pool: Optional[kvc.PoolConfig] = None,
+                 sampling: Optional[SamplingParams] = None,
+                 offloader=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+        self.mb_size = mb_size
+        self.num_microbatches = num_microbatches
+        self.batch = mb_size * num_microbatches
+        self.pool = pool or kvc.PoolConfig()
+        self.sampling = sampling or SamplingParams()
+        self.offloader = offloader
+        self.key = jax.random.PRNGKey(seed)
+
+        self.alloc = kvc.PageAllocator(self.pool)
+        self.caches = kvc.build_paged_caches(cfg, self.batch, self.pool, rt)
+        self.table = np.zeros((self.batch, self.pool.max_pages_per_seq),
+                              np.int32)
+        self.cur_pos = np.zeros((self.batch,), np.int32)   # next position
+        self.active = np.zeros((self.batch,), bool)
+        self.slots: List[Optional[SequenceState]] = [None] * self.batch
+
+        self.queue: deque = deque()
+        self.finished: List[SequenceState] = []
+        self.stats = EngineStats()
+        self._decode_jit = jax.jit(functools.partial(
+            self._decode_fn, cfg=cfg, rt=rt, sampling=self.sampling),
+            static_argnames=("mb",))
+        self._prefill_jits: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, requests: List[Request]) -> None:
+        for r in requests:
+            self.queue.append(SequenceState(request=r))
+
+    def run(self, max_steps: int = 10_000) -> List[SequenceState]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.finished
+
+    def step(self) -> bool:
+        """One engine tick: reap finished, admit new, decode one microbatch.
+        Returns False when fully drained."""
+        self._reap()
+        self._admit()
+        if not self.active.any() and not self.queue:
+            return False
+        mb = self.stats.steps % self.num_microbatches
+        self._decode_microbatch(mb)
+        self.stats.steps += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # slot management
+    # ------------------------------------------------------------------
+
+    def _mb_of_slot(self, slot: int) -> int:
+        return slot // self.mb_size
+
+    def _reap(self) -> None:
+        changed = False
+        for slot, seq in enumerate(self.slots):
+            if seq is not None and seq.is_done():
+                seq.status = Status.FINISHED
+                self.finished.append(seq)
+                self.stats.finished_requests += 1
+                self.alloc.release(slot)
+                self.slots[slot] = None
+                self.active[slot] = False
+                self.table[slot] = 0            # park on scratch page 0
+                self.cur_pos[slot] = 0
+                changed = True
+        if changed:
+            self.caches = kvc.set_page_table(self.caches, self.table)
+
+    def _admit(self) -> None:
+        for slot in range(self.batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            seq = self.queue.popleft()
+            try:
+                self._prefill_into_slot(seq, slot)
+            except MemoryError:
+                self.queue.appendleft(seq)      # retry when pages free up
+                break
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
+    def _prefill_len(self, n: int) -> int:
+        if self.cfg.recurrent_layer_count() > 0:
+            return n                            # exact (state correctness)
+        return max(8, (n + 7) // 8 * 8)
+
+    def _prefill_into_slot(self, seq: SequenceState, slot: int) -> None:
+        prompt = seq.request.prompt
+        plen = len(prompt)
+        total_budget = plen + seq.request.sampling.max_new_tokens
+        n_pages = -(-min(total_budget,
+                         self.pool.max_pages_per_seq * self.pool.page_size)
+                    // self.pool.page_size)
+        gp = self._mb_of_slot(slot) % 2 if self.pool.n_global_pages else None
+        self.alloc.allocate(slot, n_pages, global_pool=gp)
+        self.table[slot] = self.alloc.table_row(slot)
+
+        self.caches = kvc.reset_slot(self.caches, self.cfg, slot, self.rt)
+        self.caches = kvc.set_page_table(self.caches, self.table)
+
+        # engine-side generation budget: never outgrow the page allocation
+        seq.budget = min(seq.request.sampling.max_new_tokens,
+                         self.pool.max_pages_per_seq * self.pool.page_size
+                         - plen)
+        lp = self._prefill_len(plen)
+        toks = np.zeros((lp,), np.int32)
+        toks[:plen] = prompt
+        fn = self._get_prefill_jit(lp)
+        logits, self.caches = fn(self.params, jnp.asarray(toks)[None],
+                                 self.caches, slot, plen - 1)
+        self.key, sub = jax.random.split(self.key)
+        first = int(sample(logits, sub, self.sampling))
+        seq.generated.append(first)
+        seq.slot = slot
+        seq.status = Status.DECODING
+        self.slots[slot] = seq
+        self.active[slot] = True
+        self.cur_pos[slot] = plen               # position of `first`
+        self.stats.prefill_tokens += plen
+        self.stats.decode_tokens += 1
+
+    def _get_prefill_jit(self, lp: int):
+        if lp not in self._prefill_jits:
+            self._prefill_jits[lp] = jax.jit(functools.partial(
+                self._prefill_fn, cfg=self.cfg, rt=self.rt),
+                static_argnames=())
+        return self._prefill_jits[lp]
+
+    @staticmethod
+    def _prefill_fn(params, tokens, caches, slot, last_idx, *, cfg, rt):
+        """Prefill one sequence into batch-wide caches at ``slot``.
+
+        Works on a batch-1 view: slice slot row from every cache leaf, run the
+        model prefill, splice back.
+        """
+        def take(leaf, stacked):
+            def one(x):
+                if x.ndim == 0:
+                    return x
+                return jax.lax.dynamic_slice_in_dim(
+                    x, slot, 1, axis=1 if stacked else 0)
+            return jax.tree.map(one, leaf)
+
+        def put(full, part, stacked):
+            def one(f, p):
+                if f.ndim == 0:
+                    return f
+                return jax.lax.dynamic_update_slice_in_dim(
+                    f, p.astype(f.dtype), slot, axis=1 if stacked else 0)
+            return jax.tree.map(one, full, part)
+
+        # pools/page tables are shared; batch-ful leaves are sliced
+        def split(c, stacked):
+            shared = {k: v for k, v in c.items() if k.endswith("_pages")}
+            perslot = {k: v for k, v in c.items() if not k.endswith("_pages")}
+            return shared, perslot
+
+        view = {"scan": [], "tail": []}
+        for part, stacked in (("scan", True), ("tail", False)):
+            for c in caches[part]:
+                shared, perslot = split(c, stacked)
+                view[part].append({**shared, **take(perslot, stacked)})
+
+        logits, new_view = model_lib.prefill(
+            params, {"tokens": tokens}, cfg, rt, 0, caches=view,
+            last_index=jnp.asarray(last_idx).reshape(1))
+        # mask ring stale positions beyond the true length
+        def clean(c):
+            if "pos" in c:
+                c = {**c, "pos": jnp.where(c["pos"] <= last_idx, c["pos"], -1)}
+            return c
+        new_caches = {"scan": [], "tail": []}
+        for part, stacked in (("scan", True), ("tail", False)):
+            for c_old, c_new in zip(caches[part], new_view[part]):
+                c_new = clean(c_new)
+                shared, perslot_new = split(c_new, stacked)
+                _, perslot_old = split(c_old, stacked)
+                merged = {**{k: v for k, v in c_new.items()
+                             if k.endswith("_pages")},
+                          **put(perslot_old, perslot_new, stacked)}
+                new_caches[part].append(merged)
+        return logits[0], new_caches
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def _decode_microbatch(self, mb: int) -> None:
+        lo = mb * self.mb_size
+        hi = lo + self.mb_size
+        if not self.active[lo:hi].any():
+            return
+        if self.offloader is not None:
+            self.caches = self.offloader.ensure_resident(self.caches, mb)
+            self.stats.swaps = self.offloader.swap_count
+        tokens = np.zeros((self.batch,), np.int32)
+        for slot in range(lo, hi):
+            seq = self.slots[slot]
+            if seq is not None and seq.generated:
+                tokens[slot] = seq.generated[-1]
+        self.key, sub = jax.random.split(self.key)
+        next_tokens, self.caches = self._decode_jit(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.cur_pos), sub, mb=mb)
+        next_np = np.asarray(next_tokens)
+        for slot in range(lo, hi):
+            seq = self.slots[slot]
+            if seq is None or seq.is_done():
+                continue            # finished at prefill (eos/budget): reap
+                                    # next tick, never extend
+            seq.generated.append(int(next_np[slot]))
+            self.cur_pos[slot] += 1
+            self.stats.decode_tokens += 1
+            need = self.cur_pos[slot] + 1
+            have = len(self.alloc.pages_of(slot)) * self.pool.page_size
+            if need > have:
+                gp = mb % 2 if self.pool.n_global_pages else None
+                self.alloc.extend(slot, global_pool=gp)
+                self.table[slot] = self.alloc.table_row(slot)
+                self.caches = kvc.set_page_table(self.caches, self.table)
+
+    @staticmethod
+    def _decode_fn(params, caches, tokens, cur_pos, key, *, cfg, rt,
+                   sampling, mb):
+        logits, new_caches = model_lib.decode_step(
+            params, tokens, caches, cur_pos, cfg, rt)
+        return sample(logits, key, sampling), new_caches
+
+    # ------------------------------------------------------------------
+
+    def throughput_report(self) -> dict:
+        return {
+            "prefill_tokens": self.stats.prefill_tokens,
+            "decode_tokens": self.stats.decode_tokens,
+            "total_tokens": self.stats.total_tokens,
+            "finished": self.stats.finished_requests,
+            "steps": self.stats.steps,
+            "swaps": self.stats.swaps,
+        }

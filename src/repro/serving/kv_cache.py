@@ -1,0 +1,220 @@
+"""Paged KV cache: shared page pools + host-side page-table allocator.
+
+This is the DeServe §4.2 memory layout (Figure 3), adapted to the TPU memory
+hierarchy.  The page id space of each attention layer's pool is partitioned:
+
+      [0, n_local)                          — local pools (never offloaded)
+      [n_local, n_local + n_global)         — global pool G0
+      [n_local + n_global, n_local + 2·n_global) — global pool G1
+
+Microbatch ``m`` allocates its overflow pages from global pool ``G_{m % 2}``;
+the complementary pool is swapped to host memory by the double-buffer
+offloader (``repro.core.offload``) while the resident one feeds compute.
+
+Device-side state is a cache pytree compatible with ``repro.models.model``:
+attention layers get ``{"k_pages","v_pages","page_table", ...}`` (pools
+stacked over scan periods), sliding-window layers keep bounded dense rings,
+recurrent layers keep O(1) states.  Bookkeeping (free lists, per-sequence
+page lists) is host-side Python — identical to vLLM's split of concerns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ATTN_KINDS, ModelConfig
+from repro.models.common import Runtime, make_layer_plan
+from repro.models.model import _kind_cache
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    page_size: int = 16
+    n_local_pages: int = 64           # shared by all microbatches' local pools
+    n_global_pages: int = 0           # per global pool (2 pools total)
+    max_pages_per_seq: int = 16
+
+    @property
+    def n_pages(self) -> int:
+        return self.n_local_pages + 2 * self.n_global_pages
+
+    def global_range(self, pool_id: int) -> range:
+        s = self.n_local_pages + pool_id * self.n_global_pages
+        return range(s, s + self.n_global_pages)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the partitioned page id space.
+
+    Page 0 is reserved as a *scratch* page: released slots' page tables point
+    at it, so the (masked, harmless) decode writes of inactive slots can
+    never corrupt pages that have been reallocated to live sequences."""
+
+    def __init__(self, pool: PoolConfig):
+        self.pool = pool
+        assert pool.n_local_pages >= 2, "need >= 2 local pages (page 0 is scratch)"
+        self._free_local: List[int] = list(range(1, pool.n_local_pages))
+        self._free_global: Dict[int, List[int]] = {
+            0: list(pool.global_range(0)),
+            1: list(pool.global_range(1)),
+        }
+        self._seq_pages: Dict[int, List[int]] = {}
+
+    # -- queries ------------------------------------------------------------
+
+    def free_local(self) -> int:
+        return len(self._free_local)
+
+    def free_global(self, pool_id: int) -> int:
+        return len(self._free_global[pool_id])
+
+    def pages_of(self, slot: int) -> List[int]:
+        return list(self._seq_pages.get(slot, ()))
+
+    # -- allocation ---------------------------------------------------------
+
+    def allocate(self, slot: int, n_pages: int, *,
+                 global_pool: Optional[int] = None) -> List[int]:
+        """Allocate ``n_pages`` for ``slot``: local pages first, overflow from
+        ``global_pool`` (if given).  Raises MemoryError when exhausted."""
+        got: List[int] = []
+        while len(got) < n_pages and self._free_local:
+            got.append(self._free_local.pop())
+        while len(got) < n_pages and global_pool is not None and \
+                self._free_global[global_pool]:
+            got.append(self._free_global[global_pool].pop())
+        if len(got) < n_pages:
+            for p in got:        # roll back
+                self._give_back(p)
+            raise MemoryError(
+                f"page pool exhausted: need {n_pages}, got {len(got)} "
+                f"(local free={self.free_local()}, "
+                f"global={ {i: self.free_global(i) for i in (0, 1)} })")
+        self._seq_pages.setdefault(slot, []).extend(got)
+        return got
+
+    def extend(self, slot: int, *, global_pool: Optional[int] = None) -> int:
+        return self.allocate(slot, 1, global_pool=global_pool)[0]
+
+    def release(self, slot: int) -> None:
+        for p in self._seq_pages.pop(slot, ()):
+            self._give_back(p)
+
+    def _give_back(self, p: int) -> None:
+        if p < self.pool.n_local_pages:
+            self._free_local.append(p)
+        elif p in self.pool.global_range(0):
+            self._free_global[0].append(p)
+        else:
+            self._free_global[1].append(p)
+
+    # -- page table ---------------------------------------------------------
+
+    def table_row(self, slot: int) -> np.ndarray:
+        row = np.zeros((self.pool.max_pages_per_seq,), np.int32)
+        pages = self._seq_pages.get(slot, ())
+        row[: len(pages)] = pages
+        return row
+
+
+# ---------------------------------------------------------------------------
+# Cache pytree construction
+# ---------------------------------------------------------------------------
+
+
+def _paged_kind_cache(cfg: ModelConfig, batch: int, pool: PoolConfig,
+                      rt: Runtime, lead: tuple = ()) -> dict:
+    cd = rt.compute_dtype
+    Hk, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k_pages": jnp.zeros(lead + (pool.n_pages, pool.page_size, Hk, Dh), cd),
+        "v_pages": jnp.zeros(lead + (pool.n_pages, pool.page_size, Hk, Dh), cd),
+        "page_table": jnp.zeros(lead + (batch, pool.max_pages_per_seq),
+                                jnp.int32),
+    }
+
+
+def build_paged_caches(cfg: ModelConfig, batch: int, pool: PoolConfig,
+                       rt: Runtime) -> dict:
+    """Engine cache pytree: paged pools for full-attention kinds, dense rings
+    for sliding-window kinds, O(1) states for recurrent kinds."""
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+
+    def kind_cache(kind: str, lead: tuple):
+        if kind in ("attn", "global"):
+            return _paged_kind_cache(cfg, batch, pool, rt, lead)
+        # "local" (bounded ring) and recurrent kinds: window-capacity dense
+        cap = cfg.window_size if kind == "local" and cfg.window_size else \
+            pool.max_pages_per_seq * pool.page_size
+        return _kind_cache(kind, cfg, batch, cap, rt, lead)
+
+    scan = [kind_cache(k, (plan.n_periods,)) for k in plan.period_kinds] \
+        if plan.n_periods else []
+    tail = [kind_cache(k, ()) for k in plan.tail_kinds]
+    return {"scan": scan, "tail": tail}
+
+
+def _map_paged_leaves(caches: dict, fn):
+    """Apply ``fn(layer_cache_dict, stacked: bool)`` to every attention-kind
+    sub-dict in the cache pytree, returning a new pytree."""
+    def one(c, stacked):
+        if isinstance(c, dict) and ("k_pages" in c or "pos" in c):
+            return fn(c, stacked)
+        return c
+    return {
+        "scan": [one(c, True) for c in caches["scan"]],
+        "tail": [one(c, False) for c in caches["tail"]],
+    }
+
+
+def set_page_table(caches: dict, table: np.ndarray) -> dict:
+    """Broadcast the host page table (B, max_pages) into every paged layer."""
+    dev = jnp.asarray(table, jnp.int32)
+
+    def fn(c, stacked):
+        if "page_table" not in c:
+            return c
+        t = c["page_table"]
+        new = jnp.broadcast_to(dev[None], t.shape) if stacked else dev
+        return {**c, "page_table": new}
+    return _map_paged_leaves(caches, fn)
+
+
+def reset_slot(caches: dict, cfg: ModelConfig, slot: int,
+               rt: Runtime) -> dict:
+    """Clear per-slot state when a decode slot is reassigned: ring positions
+    back to -1, recurrent states back to init.  Paged pools need no clearing
+    (validity is governed by seq_lens)."""
+    def clear(c, stacked):
+        if "k_pages" in c:
+            return c
+        out = dict(c)
+        idx = (slice(None), slot) if stacked else (slot,)
+        if "pos" in c:
+            out["pos"] = c["pos"].at[idx].set(-1)
+            return out
+        for name, leaf in c.items():      # recurrent states
+            init = 1e-6 if name == "n" and leaf.ndim == (2 + int(stacked)) \
+                else 0.0
+            out[name] = leaf.at[idx].set(init)
+        return out
+    return _map_paged_leaves(caches, clear)
+
+
+def kv_bytes_per_page(cfg: ModelConfig, pool: PoolConfig,
+                      dtype_bytes: int = 2) -> int:
+    """Bytes one page occupies across all paged layers (k+v)."""
+    n_paged = sum(1 for k in cfg.layer_kinds() if k in ("attn", "global"))
+    return (2 * n_paged * pool.page_size * cfg.num_kv_heads * cfg.head_dim
+            * dtype_bytes)
+
+
+def global_slice(pool: PoolConfig, pool_id: int) -> slice:
+    r = pool.global_range(pool_id)
+    return slice(r.start, r.stop)

@@ -1,0 +1,72 @@
+"""Request/sequence bookkeeping for the offline serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = no top-k
+    top_p: float = 1.0
+    max_new_tokens: int = 64
+    eos_token: int = -1               # -1 = never terminate early
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    # modality payloads for stub frontends (precomputed embeddings)
+    frames: Optional[object] = None
+    patches: Optional[object] = None
+
+
+@dataclass
+class SequenceState:
+    request: Request
+    status: Status = Status.QUEUED
+    slot: int = -1                    # decode-batch slot, -1 = unassigned
+    generated: List[int] = field(default_factory=list)
+    budget: Optional[int] = None      # engine-side cap (page capacity)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    def is_done(self) -> bool:
+        sp = self.request.sampling
+        cap = sp.max_new_tokens if self.budget is None else \
+            min(sp.max_new_tokens, self.budget)
+        if len(self.generated) >= cap:
+            return True
+        return bool(self.generated) and self.generated[-1] == sp.eos_token
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    finished_requests: int = 0
+    steps: int = 0
+    swaps: int = 0                    # page-pool swap events (offload manager)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens

@@ -1,0 +1,47 @@
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
+
+All functions take fp32 logits (..., V) and return int32 tokens (...,).
+The dispatch is static (SamplingParams fields are compile-time constants for
+a given engine), so the sampled program contains no dead branches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.request import SamplingParams
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    vals, _ = jax.lax.top_k(logits, k)
+    cutoff = vals[..., -1:]
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
+def _apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep the smallest prefix with cumulative prob >= p (always >= 1 token)
+    keep = cum - probs < p
+    cutoff = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           params: SamplingParams) -> jax.Array:
+    """Sample next tokens.  Static dispatch on ``params``."""
+    if params.temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / params.temperature
+    if params.top_k > 0:
+        logits = _apply_top_k(logits, params.top_k)
+    if params.top_p < 1.0:
+        logits = _apply_top_p(logits, params.top_p)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

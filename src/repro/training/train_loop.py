@@ -1,0 +1,109 @@
+"""Training step and loop: grad accumulation, remat, optional gradient
+compression for high-latency data parallelism (beyond-paper: DeServe is an
+inference paper, but its decentralized substrate wants cheap DP training —
+see ``repro.distributed.compression``)."""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import model as model_lib
+from repro.models.common import Runtime
+from repro.training import optimizer as opt_lib
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, ocfg: opt_lib.AdamWConfig,
+                    *, accum_steps: int = 1, compressor=None) -> Callable:
+    """Build the jit-able train step.
+
+    batch leaves carry a leading accumulation axis when accum_steps > 1:
+    tokens (A, B, S) etc.  ``compressor`` (optional) is applied to the
+    gradients before the optimizer — its decompressed output is what the
+    optimizer consumes (error feedback lives inside the compressor).
+    """
+
+    def loss_fn(params, microbatch):
+        return model_lib.train_loss(params, microbatch, cfg, rt)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def acc_body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0), zeros), batch)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        if compressor is not None:
+            grads = compressor.roundtrip(grads)
+        params, opt_state, metrics = opt_lib.apply(ocfg, params, grads,
+                                                   opt_state)
+        metrics = {"loss": loss, **metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    tokens: int
+    seconds: float
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.tokens / max(self.seconds, 1e-9)
+
+
+def train(cfg: ModelConfig, rt: Runtime, ocfg: opt_lib.AdamWConfig,
+          data_iter, *, steps: int, params=None, opt_state=None,
+          accum_steps: int = 1, compressor=None, donate: bool = True,
+          checkpoint_mgr=None, checkpoint_every: int = 0,
+          log_every: int = 0) -> tuple:
+    """Run the training loop on the current default device/mesh.
+
+    Returns (params, opt_state, TrainResult)."""
+    if params is None:
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0), rt)
+    if opt_state is None:
+        opt_state = opt_lib.init(ocfg, params)
+    step_fn = make_train_step(cfg, rt, ocfg, accum_steps=accum_steps,
+                              compressor=compressor)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+
+    losses = []
+    tokens = 0
+    t0 = time.perf_counter()
+    start = int(opt_state.step)
+    for i in range(start, start + steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        tokens += int(batch["tokens"].size) if "tokens" in batch else 0
+        if log_every and (i + 1) % log_every == 0:
+            print(f"step {i+1}: loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+        if checkpoint_mgr is not None and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            checkpoint_mgr.save(i + 1, {"params": params,
+                                        "opt_state": opt_state})
+    dt = time.perf_counter() - t0
+    return params, opt_state, TrainResult(losses=losses, steps=steps,
+                                          tokens=tokens, seconds=dt)

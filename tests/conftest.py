@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see the
+real single CPU device; only the SPMD subprocess tests use 8/512 fake
+devices (they spawn fresh interpreters)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_arch, list_archs, reduced_config
+from repro.models.common import Runtime
+
+ASSIGNED_ARCHS = [
+    "musicgen-large", "recurrentgemma-9b", "yi-9b", "gemma3-1b",
+    "minitron-4b", "gemma3-12b", "qwen2-vl-2b", "qwen3-moe-235b-a22b",
+    "phi3.5-moe-42b-a6.6b", "xlstm-1.3b",
+]
+
+
+@pytest.fixture(scope="session")
+def rt():
+    return Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch_name: str, **kw):
+    return reduced_config(get_arch(arch_name), **kw)

@@ -1,0 +1,170 @@
+"""Flash attention vs naive attention: forward, gradients, schemes, decode.
+Includes hypothesis property tests on the attention invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (decode_attention, flash_attention)
+
+
+def naive(q, k, v, causal=True, window=0, q_offset=0):
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, dh)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k) / jnp.sqrt(dh)
+    qp = jnp.arange(sq)[:, None] + q_offset
+    kp = jnp.arange(k.shape[1])[None]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v)
+    return o.reshape(b, sq, h, dh)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+CASES = [
+    # (sq, skv, h, hk, dh, causal, window, offset, cq, ck)
+    (33, 33, 4, 2, 16, True, 0, 0, 16, 16),
+    (64, 64, 4, 1, 32, True, 0, 0, 16, 32),
+    (40, 40, 2, 2, 8, True, 12, 0, 8, 8),
+    (24, 24, 8, 4, 16, False, 0, 0, 8, 8),
+    (16, 48, 4, 2, 16, True, 0, 32, 16, 16),   # continuation (offset)
+    (7, 7, 2, 1, 8, True, 0, 0, 16, 16),       # seq smaller than chunk
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("scheme", ["masked", "blockpair"])
+def test_flash_matches_naive(case, scheme):
+    sq, skv, h, hk, dh, causal, window, off, cq, ck = case
+    if scheme == "blockpair" and (not causal or window):
+        pytest.skip("blockpair is the causal-only scheme")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], 2, sq, h, dh)
+    k = _rand(ks[1], 2, skv, hk, dh)
+    v = _rand(ks[2], 2, skv, hk, dh)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=off, q_chunk=cq, kv_chunk=ck,
+                          scheme=scheme)
+    ref = naive(q, k, v, causal=causal, window=window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:4])
+def test_flash_gradients_match_naive(case):
+    sq, skv, h, hk, dh, causal, window, off, cq, ck = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = _rand(ks[0], 1, sq, h, dh)
+    k = _rand(ks[1], 1, skv, hk, dh)
+    v = _rand(ks[2], 1, skv, hk, dh)
+    co = _rand(ks[3], 1, sq, h, dh)
+
+    f1 = lambda q, k, v: jnp.sum(flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=off, q_chunk=cq,
+        kv_chunk=ck) * co)
+    f2 = lambda q, k, v: jnp.sum(naive(q, k, v, causal=causal, window=window,
+                                       q_offset=off) * co)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_blockpair_equals_masked():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], 2, 48, 4, 16)
+    k = _rand(ks[1], 2, 48, 2, 16)
+    v = _rand(ks[2], 2, 48, 2, 16)
+    a = flash_attention(q, k, v, q_chunk=16, kv_chunk=16, scheme="masked")
+    b = flash_attention(q, k, v, q_chunk=16, kv_chunk=16, scheme="blockpair")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_decode_matches_last_row_of_prefill():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    S, h, hk, dh = 12, 4, 2, 16
+    q = _rand(ks[0], 2, S, h, dh)
+    k = _rand(ks[1], 2, S, hk, dh)
+    v = _rand(ks[2], 2, S, hk, dh)
+    full = naive(q, k, v, causal=True)
+    slot_pos = jnp.broadcast_to(jnp.arange(S)[None], (2, S)).astype(jnp.int32)
+    cur = jnp.full((2,), S - 1, jnp.int32)
+    dec = decode_attention(q[:, -1], k, v, slot_pos, cur)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_ignores_empty_and_future_slots():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    C, h, hk, dh = 16, 2, 1, 8
+    q = _rand(ks[0], 1, h, dh)
+    k = _rand(ks[1], 1, C, hk, dh)
+    v = _rand(ks[2], 1, C, hk, dh)
+    # only slots 0..3 valid
+    slot_pos = jnp.full((1, C), -1, jnp.int32).at[0, :4].set(
+        jnp.arange(4, dtype=jnp.int32))
+    cur = jnp.asarray([3], jnp.int32)
+    out = decode_attention(q, k, v, slot_pos, cur)
+    ref = decode_attention(q, k[:, :4], v[:, :4],
+                           slot_pos[:, :4], cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+    # corrupting an invalid slot's kv must not change the output
+    k2 = k.at[0, 10].set(99.0)
+    out2 = decode_attention(q, k2, v, slot_pos, cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sq=st.integers(2, 24), hk=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]), dh=st.sampled_from([4, 8]),
+    window=st.integers(0, 8), seed=st.integers(0, 2**16),
+)
+def test_property_output_in_value_hull(sq, hk, g, dh, window, seed):
+    """Attention output of each position is a convex combination of values:
+    per-dim it lies within [min v, max v]."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = hk * g
+    q = _rand(ks[0], 1, sq, h, dh)
+    k = _rand(ks[1], 1, sq, hk, dh)
+    v = _rand(ks[2], 1, sq, hk, dh)
+    out = flash_attention(q, k, v, causal=True, window=window, q_chunk=8,
+                          kv_chunk=8)
+    vmin = jnp.min(v, axis=1).min()
+    vmax = jnp.max(v, axis=1).max()
+    assert bool(jnp.all(out >= vmin - 1e-4))
+    assert bool(jnp.all(out <= vmax + 1e-4))
+
+
+@settings(max_examples=15, deadline=None)
+@given(sq=st.integers(3, 20), dh=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**16))
+def test_property_causality(sq, dh, seed):
+    """Perturbing future keys/values never changes earlier outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(ks[0], 1, sq, 2, dh)
+    k = _rand(ks[1], 1, sq, 2, dh)
+    v = _rand(ks[2], 1, sq, 2, dh)
+    cut = sq // 2
+    out1 = flash_attention(q, k, v, causal=True, q_chunk=4, kv_chunk=4)
+    k2 = k.at[:, cut:].add(3.0)
+    v2 = v.at[:, cut:].add(-2.0)
+    out2 = flash_attention(q, k2, v2, causal=True, q_chunk=4, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(out1[:, :cut]),
+                               np.asarray(out2[:, :cut]), rtol=1e-5,
+                               atol=1e-6)

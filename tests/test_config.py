@@ -1,0 +1,114 @@
+"""Config registry: every assigned arch present with the exact assigned
+dimensions; derived quantities sane."""
+
+import pytest
+
+from conftest import ASSIGNED_ARCHS, tiny
+from repro.config import SHAPES, get_arch, list_archs
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+ASSIGNMENT = {
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+}
+
+
+def test_all_assigned_archs_registered():
+    archs = list_archs()
+    for a in ASSIGNED_ARCHS:
+        assert a in archs
+    assert "llama3-70b" in archs          # the paper's own model
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_assigned_dimensions(name):
+    cfg = get_arch(name)
+    L, D, H, Hk, F, V = ASSIGNMENT[name]
+    assert cfg.num_layers == L
+    assert cfg.d_model == D
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == Hk
+    assert cfg.d_ff == F
+    assert cfg.vocab_size == V
+
+
+def test_moe_configs():
+    q = get_arch("qwen3-moe-235b-a22b")
+    assert q.moe.num_experts == 128 and q.moe.experts_per_token == 8
+    p = get_arch("phi3.5-moe-42b-a6.6b")
+    assert p.moe.num_experts == 16 and p.moe.experts_per_token == 2
+
+
+def test_param_counts_in_family_range():
+    # name encodes scale; param_count should land within ~35 %
+    expect = {
+        "yi-9b": 8.8e9, "gemma3-12b": 12e9, "minitron-4b": 4.2e9,
+        "qwen3-moe-235b-a22b": 235e9, "phi3.5-moe-42b-a6.6b": 42e9,
+        "xlstm-1.3b": 1.3e9, "gemma3-1b": 1.0e9, "llama3-70b": 70e9,
+    }
+    for name, n in expect.items():
+        got = get_arch(name).param_count()
+        assert 0.6 * n < got < 1.5 * n, (name, got, n)
+
+
+def test_active_params_moe():
+    q = get_arch("qwen3-moe-235b-a22b")
+    assert q.active_param_count() < 0.15 * q.param_count()
+    d = get_arch("yi-9b")
+    assert d.active_param_count() == d.param_count()
+
+
+def test_layer_kinds_pattern():
+    g = get_arch("gemma3-12b")
+    kinds = g.layer_kinds()
+    assert len(kinds) == 48
+    assert kinds[:6] == ("local",) * 5 + ("global",)
+    r = get_arch("recurrentgemma-9b")
+    assert r.layer_kinds()[:3] == ("rglru", "rglru", "local")
+    assert r.recurrent_layer_count() == 26  # 38 layers, 2/3 recurrent + tail
+
+
+def test_subquadratic_flags():
+    # long_500k runs only for these
+    assert get_arch("recurrentgemma-9b").is_subquadratic()
+    assert get_arch("xlstm-1.3b").is_subquadratic()
+    assert get_arch("gemma3-1b").is_subquadratic()
+    assert get_arch("gemma3-12b").is_subquadratic()
+    for name in ("yi-9b", "musicgen-large", "minitron-4b", "qwen2-vl-2b",
+                 "qwen3-moe-235b-a22b", "phi3.5-moe-42b-a6.6b"):
+        assert not get_arch(name).is_subquadratic(), name
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].tokens_per_step == 4096 * 256
+    assert SHAPES["decode_32k"].tokens_per_step == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["prefill_32k"].kind == "prefill"
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_reduced_config_keeps_family(name):
+    cfg = get_arch(name)
+    red = tiny(name)
+    assert red.family == cfg.family
+    assert red.block_pattern == cfg.block_pattern
+    assert (red.moe is None) == (cfg.moe is None)
+    assert red.frontend == cfg.frontend
+    assert red.param_count() < 30e6
+
+
+def test_paper_kv_cache_size_claim():
+    """Paper §2.1: 'in the Llama 3 70B model, the KV cache for a sequence of
+    length 4096 can occupy 1.25 GB' — our config computes 1.34 GB at bf16
+    (the paper presumably rounds / excludes a couple of layers): within 10%."""
+    cfg = get_arch("llama3-70b")
+    gb = cfg.kv_bytes_per_token(2) * 4096 / (1 << 30)
+    assert abs(gb - 1.25) / 1.25 < 0.10, gb

@@ -1,0 +1,185 @@
+"""DeServe core math: scheduler (§4.3), offload formulas (§4.2), cost model
+(§3), simulator (§5 / Table 4).  Hypothesis property tests on the formulas."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as CM
+from repro.core import offload as OF
+from repro.core import scheduler as SC
+from repro.core import simulator as SIM
+
+
+# ---------------------------------------------------------------- formulas
+
+def test_formula2_global_pool():
+    # M_G = W * T_S
+    assert OF.global_pool_bytes(16e9, 0.08) == pytest.approx(1.28e9)
+
+
+def test_formula1_capacity():
+    # M_B' = (M_KV - 2 M_G)/N_B + M_G
+    m_kv, m_g = 8e9, 1e9
+    got = OF.per_microbatch_capacity(m_kv, m_g, 8)
+    assert got == pytest.approx((8e9 - 2e9) / 8 + 1e9)
+    # without offload
+    assert OF.per_microbatch_capacity_no_offload(m_kv, 8) == 1e9
+
+
+@settings(max_examples=50, deadline=None)
+@given(m_kv=st.floats(1e8, 1e11), m_g_frac=st.floats(0.01, 0.49),
+       n1=st.integers(2, 64), n2=st.integers(2, 64))
+def test_property_capacity_floor_independent_of_nb(m_kv, m_g_frac, n1, n2):
+    """The paper's central synergy: capacity never drops below M_G no matter
+    how many microbatches are in flight (Formula 1's floor)."""
+    m_g = m_kv * m_g_frac
+    c1 = OF.per_microbatch_capacity(m_kv, m_g, n1)
+    c2 = OF.per_microbatch_capacity(m_kv, m_g, n2)
+    assert c1 >= m_g and c2 >= m_g
+    # and without offload, capacity decays ~1/N_B
+    assert OF.per_microbatch_capacity_no_offload(m_kv, 64) == \
+        pytest.approx(m_kv / 64)
+
+
+def test_nb_star_paper_example():
+    """Figure 2(c): 4 machines, latency = T_S/2 -> 6 microbatches."""
+    assert SC.optimal_microbatches(4, 1.0, 0.5) == 6
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 16), ts=st.floats(0.01, 1.0),
+       lat=st.floats(0.0, 1.0))
+def test_property_nb_star_is_bubble_free(n, ts, lat):
+    nb = SC.optimal_microbatches(n, ts, lat)
+    assert SC.bubble_fraction(n, nb, ts, lat) <= 1e-9
+    # one fewer microbatch must leave a bubble when latency > 0
+    # (guard against exact-division float edge: (nb-1)*ts == period)
+    if nb > n and (nb - 1) * ts < n * (ts + lat) * (1 - 1e-9):
+        assert SC.bubble_fraction(n, nb - 1, ts, lat) > 0
+
+
+def test_bubble_fraction_limits():
+    assert SC.bubble_fraction(8, 8, 0.1, 0.0) == pytest.approx(0.0)
+    # N_B = N_M with latency L: busy N_B*T_S of N_M*(T_S+L)
+    assert SC.bubble_fraction(8, 8, 0.1, 0.1) == pytest.approx(0.5)
+
+
+def test_schedule_steady_tick_and_assignment():
+    ps = SC.PipelineSchedule(n_stages=4, n_microbatches=6, stage_time=1.0,
+                             latency=0.5)
+    assert ps.round_trip == pytest.approx(6.0)
+    assert ps.steady_tick == pytest.approx(1.0)
+    # each tick every stage works on a distinct microbatch
+    for t in range(12):
+        mbs = [ps.microbatch_at(s, t) for s in range(4)]
+        assert len(set(mbs)) == 4
+
+
+def test_plan_schedule_offload_beats_no_offload_at_latency():
+    kw = dict(n_stages=8, stage_time=0.08, latency=0.064,
+              m_kv_bytes=2e9, kv_bytes_per_seq=15.7e6,
+              offload_bandwidth=6e9)
+    with_off = SC.plan_schedule(use_offload=True, **kw)
+    no_off = SC.plan_schedule(use_offload=False, **kw)
+    assert with_off.per_mb_batch > no_off.per_mb_batch
+    assert with_off.offload and not no_off.offload
+
+
+def test_schedule_diagram_figure2c():
+    """4 stages, L = T_S/2 -> the 6-microbatch diagram has no bubbles in
+    steady state; the 4-microbatch one idles 1/3 of the time."""
+    full = SC.schedule_diagram(4, 6, stage_time=1.0, latency=0.5, ticks=24)
+    row0 = full.splitlines()[1]
+    steady = row0.split("|")[1][8 * 2:]          # past the fill
+    assert "." not in steady
+    starved = SC.schedule_diagram(4, 4, stage_time=1.0, latency=0.5,
+                                  ticks=24)
+    assert "." in starved.splitlines()[1].split("|")[1][8 * 2:]
+
+
+def test_plan_schedule_raises_when_one_seq_too_big():
+    with pytest.raises(ValueError):
+        SC.plan_schedule(n_stages=4, stage_time=0.1, latency=0.0,
+                         m_kv_bytes=1e6, kv_bytes_per_seq=1e9)
+
+
+# ---------------------------------------------------------------- cost §3
+
+def test_table2_matches_paper():
+    t2 = CM.table2()
+    for name, want in CM.PAPER_TABLE2.items():
+        got = t2[name]["min_throughput_tps"]
+        assert abs(got - want) / want < 0.01, (name, got, want)
+
+
+def test_profitability():
+    # mining: 108 tok/s breaks even; 450 tok/s is profitable
+    assert not CM.is_profitable(100, "mining")
+    assert CM.is_profitable(120, "mining")
+    assert CM.profit_per_hour(450, CM.PLATFORMS["mining"].cost_per_hour) > 0
+    # the same throughput is deeply unprofitable on cloud
+    assert not CM.is_profitable(450, "cloud")
+
+
+# ---------------------------------------------------------------- sim §5
+
+def test_stage_time_interpolation():
+    # table anchor points exact
+    assert SIM.stage_time(1) == pytest.approx(0.0666)
+    assert SIM.stage_time(128) == pytest.approx(0.0891)
+    # monotone between anchors, extrapolates linearly beyond 256
+    assert SIM.stage_time(96) > SIM.stage_time(64)
+    assert SIM.stage_time(512) > SIM.stage_time(256)
+
+
+@pytest.fixture(scope="module")
+def t4():
+    return SIM.table4(sim_seconds=300, warmup=60)
+
+
+def test_sim_calibration_anchor(t4):
+    got = t4["deserve_pp"][0.0].output_tps
+    assert abs(got - 194.6) / 194.6 < 0.08
+
+
+def test_sim_policy_ordering(t4):
+    for lat in (0.0, 0.016, 0.032, 0.064):
+        v = t4["vllm_pp"][lat].output_tps
+        d = t4["deserve_pp"][lat].output_tps
+        o = t4["deserve_opt"][lat].output_tps
+        assert v < d < o, lat
+
+
+def test_sim_opt_flat_under_latency(t4):
+    """The paper's headline property: DeServe(opt) holds throughput flat
+    from <1 ms to 256 ms (paper: 445 -> 443)."""
+    vals = [t4["deserve_opt"][l].output_tps
+            for l in (0.0, 0.016, 0.032, 0.064, 0.256)]
+    # paper holds 445->443 (<4%); our mechanics-only model holds within 20%
+    # (the 256 ms point *rises* as the planner adds microbatches against the
+    # M_G floor — see EXPERIMENTS.md discussion)
+    assert min(vals) > 0.80 * max(vals)
+
+
+def test_sim_baselines_degrade(t4):
+    assert t4["vllm_pp"][0.256].output_tps < \
+        0.5 * t4["vllm_pp"][0.0].output_tps
+    assert t4["deserve_pp"][0.064].output_tps < \
+        t4["deserve_pp"][0.0].output_tps
+
+
+def test_sim_speedup_band(t4):
+    """Paper: 6.7x-12.6x at 16-64 ms.  Our mechanics-only model lands in a
+    4.5x-10x band (our vLLM baseline is more charitable; see EXPERIMENTS)."""
+    for lat in (0.016, 0.032, 0.064):
+        speed = t4["deserve_opt"][lat].output_tps / \
+            t4["vllm_pp"][lat].output_tps
+        assert speed > 4.0, (lat, speed)
+
+
+def test_sim_opt_uses_more_microbatches_at_latency(t4):
+    assert t4["deserve_opt"][0.256].n_microbatches > \
+        t4["deserve_opt"][0.0].n_microbatches

@@ -1,0 +1,144 @@
+"""Control-plane logic: sharding rules, elastic planner, failure detector,
+straggler mitigation — pure CPU, no devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import tiny
+from repro.distributed.elastic import (ElasticPlanner, FailureDetector,
+                                       StragglerMitigator)
+from repro.models import model as M
+from repro.models.common import Runtime
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class FakePodMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+# ---------------------------------------------------------------- specs ---
+
+def test_param_specs_rules(rt, key):
+    from repro.distributed.sharding import param_specs
+    cfg = tiny("yi-9b", d_model=128)
+    params = jax.eval_shape(lambda: M.init_params(cfg, key, rt))
+    specs = param_specs(params, cfg, FakeMesh(), fsdp=True)
+    wq = specs["scan"][0]["wq"]
+    assert wq == P(None, "data", "model")        # (period, D, H*Dh)
+    assert all(a is None for a in specs["scan"][0]["ln1"])
+    assert specs["embed"]["tok"][0] == "model"   # vocab-TP
+    # serving: no fsdp
+    specs2 = param_specs(params, cfg, FakeMesh(), fsdp=False)
+    assert specs2["scan"][0]["wq"] == P(None, None, "model")
+
+
+def test_param_specs_moe_expert_parallel(rt, key):
+    from repro.distributed.sharding import param_specs
+    cfg = tiny("qwen3-moe-235b-a22b")
+    params = jax.eval_shape(lambda: M.init_params(cfg, key, rt))
+    specs = param_specs(params, cfg, FakeMesh(), fsdp=True)
+    moe = specs["scan"][0]["moe"]
+    assert moe["wg"][1] is None or moe["wg"][1] == "data"
+    # expert dim not divisible by 16 in the tiny config -> replicated;
+    # check the real config instead
+    from repro.config import get_arch
+    real = get_arch("qwen3-moe-235b-a22b")
+    rt16 = Runtime()
+    params_r = jax.eval_shape(lambda: M.init_params(real, key, rt16))
+    specs_r = param_specs(params_r, real, FakeMesh(), fsdp=True)
+    assert specs_r["scan"][0]["moe"]["wg"][1] == "model"  # E over model
+
+
+def test_cache_specs_kv_head_vs_sequence_sharding(key):
+    from repro.distributed.sharding import cache_specs
+    from repro.config import get_arch
+    rt16 = Runtime()
+    # yi-9b: kv=4 not divisible by 16 -> sequence-parallel KV
+    cfg = get_arch("yi-9b")
+    caches = jax.eval_shape(lambda: M.init_caches(cfg, 128, 1024, rt16))
+    specs = cache_specs(caches, cfg, FakeMesh())
+    k = specs["scan"][0]["k"]                    # (P, B, C, Hk, Dh)
+    assert k[1] == "data" and k[2] == "model"
+    # minitron: kv=8... also not divisible; gemma3-12b kv=8; llama3-70b kv=8
+    # musicgen kv=32 -> heads sharded
+    cfg2 = get_arch("musicgen-large")
+    caches2 = jax.eval_shape(lambda: M.init_caches(cfg2, 128, 1024, rt16))
+    specs2 = cache_specs(caches2, cfg2, FakeMesh())
+    k2 = specs2["scan"][0]["k"]
+    assert k2[3] == "model" and k2[1] == "data"
+
+
+def test_batch_specs_pod_folding():
+    from repro.distributed.sharding import batch_specs
+    shapes = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    single = batch_specs(shapes, FakeMesh())
+    assert single["tokens"][0] == "data"
+    multi = batch_specs(shapes, FakePodMesh())
+    assert multi["tokens"][0] == ("pod", "data")
+    # non-divisible batch stays replicated
+    odd = batch_specs({"x": jax.ShapeDtypeStruct((3, 4), jnp.int32)},
+                      FakeMesh())
+    assert odd["x"] == P(None, None)
+
+
+# ---------------------------------------------------------------- elastic --
+
+def test_planner_full_and_degraded():
+    pl = ElasticPlanner(model_parallel=16, pod_size=256)
+    full = pl.plan(512)
+    assert full.shape == (2, 16, 16) and full.devices_spare == 0
+    # lose 3 nodes: drop to single pod + largest pow2 data dim
+    degraded = pl.plan(509)
+    assert degraded.axes == ("data", "model")
+    assert degraded.shape == (16, 16)
+    assert degraded.devices_spare == 509 - 256
+    small = pl.plan(40)
+    assert small.shape == (2, 16)
+    with pytest.raises(RuntimeError):
+        pl.plan(8)
+
+
+def test_resharding_plan_cheap_vs_heavy():
+    pl = ElasticPlanner(model_parallel=16, pod_size=256)
+    a, b = pl.plan(512), pl.plan(400)
+    plan = pl.resharding_plan(a, b)
+    assert plan["batch_reshard"]
+    assert not plan["params_move"]              # model axis preserved
+    pl2 = ElasticPlanner(model_parallel=8)
+    c = pl2.plan(64)
+    plan2 = pl.resharding_plan(a, c)
+    assert plan2["params_move"] and plan2["restore_from_checkpoint"]
+
+
+def test_failure_detector():
+    fd = FailureDetector(timeout=10.0)
+    for d in range(4):
+        fd.beat(d, now=0.0)
+    fd.beat(0, now=9.0)
+    assert fd.dead(now=12.0) == [1, 2, 3]
+    assert fd.live(now=12.0) == [0]
+    assert fd.should_restart(now=12.0, required=2)
+    assert not fd.should_restart(now=5.0, required=4)
+
+
+def test_straggler_mitigation():
+    sm = StragglerMitigator(n_stages=4, slow_factor=1.5, demote_factor=3.0)
+    for _ in range(10):
+        for s, t in enumerate([0.1, 0.1, 0.1, 0.22]):
+            sm.observe(s, t)
+    assert sm.stragglers() == [3]
+    assert sm.demotions() == []
+    w = sm.microbatch_weights()
+    assert w[3] < w[0]                          # slow stage gets less work
+    assert np.isclose(np.mean(w), 1.0)
+    for _ in range(20):
+        sm.observe(3, 0.5)
+    assert 3 in sm.demotions()

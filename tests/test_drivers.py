@@ -1,0 +1,39 @@
+"""Smoke the CLI drivers (deliverable b): serve.py and train.py run
+end-to-end in fresh interpreters with tiny configs."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = dict(os.environ,
+           PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.slow
+def test_serve_driver():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-9b",
+         "--requests", "4", "--max-new", "6", "--microbatches", "2",
+         "--mb-size", "1"],
+        env=ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "finished 4/4 requests" in r.stdout
+    assert "break-even" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_with_resume(tmp_path):
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "gemma3-1b", "--steps", "4", "--batch", "2", "--seq", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+            "--log-every", "2"]
+    r = subprocess.run(base, env=ENV, capture_output=True, text=True,
+                       timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: loss" in r.stdout
+    r2 = subprocess.run(base + ["--resume"], env=ENV, capture_output=True,
+                        text=True, timeout=560)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step" in r2.stdout

@@ -1,0 +1,101 @@
+"""Dry-run harness unit tests: HLO collective parsing, wire-byte
+conventions, roofline term math, pipeline-config selection.  (The heavy
+512-device compiles are exercised by the SPMD subprocess test and the sweep
+artifacts; here we pin the pure logic.)"""
+
+import jax
+
+# lock the backend to the real single CPU device BEFORE importing the dryrun
+# module (which sets XLA_FLAGS=...device_count=512 for its own __main__ use)
+jax.devices()
+
+import pytest  # noqa: E402
+
+from repro.launch import dryrun as DR  # noqa: E402
+
+
+HLO = """
+  %all-gather = f32[256,8192]{0,1} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={1}
+  %all-reduce.1 = bf16[128,4096]{1,0} all-reduce(%y), replica_groups=[32,8]<=[256], to_apply=%add
+  %reduce-scatter.2 = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %collective-permute.3 = bf16[32,1,4096]{2,1,0} collective-permute(%w), source_target_pairs={{0,256},{256,0}}
+  %cp2 = f32[8,8]{1,0} collective-permute(%v), source_target_pairs={{0,1},{1,2}}
+  %all-to-all.9 = f32[16,64]{1,0} all-to-all(%u), replica_groups=[4,4]<=[16], dimensions={0}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = DR.collective_bytes(HLO)
+    # all-gather: 256*8192*4 bytes, group 16 -> (15/16)x
+    ag = 256 * 8192 * 4 * 15 / 16
+    assert out["all-gather"] == pytest.approx(ag)
+    # all-reduce: 2*(g-1)/g * size, group 8
+    ar = 2 * 7 / 8 * 128 * 4096 * 2
+    assert out["all-reduce"] == pytest.approx(ar)
+    # reduce-scatter with explicit groups of 4
+    rs = 3 / 4 * 64 * 4
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    # permutes count full size
+    cp = 32 * 4096 * 2 + 8 * 8 * 4
+    assert out["collective-permute"] == pytest.approx(cp)
+    a2a = 3 / 4 * 16 * 64 * 4
+    assert out["all-to-all"] == pytest.approx(a2a)
+    assert out["total"] == pytest.approx(ag + ar + rs + cp + a2a)
+    assert out["counts"]["collective-permute"] == 2
+
+
+def test_pod_boundary_bytes():
+    # only the {0,256} permute crosses the 512/2 boundary
+    got = DR.pod_boundary_bytes(HLO, n_devices=512)
+    assert got == pytest.approx(32 * 4096 * 2)
+
+
+def test_group_size_fallbacks():
+    assert DR._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert DR._group_size("replica_groups={{0,1,2}}") == 3
+    assert DR._group_size("source_target_pairs={{0,1}}") == 2
+    assert DR._group_size("no groups here") == 1
+
+
+def test_roofline_terms():
+    rec = {
+        "flops_per_device": 197e12,          # exactly 1 second of compute
+        "bytes_per_device": 819e9 / 2,       # 0.5 s of HBM
+        "collectives": {"total": 50e9 * 2},  # 2 s of ICI
+    }
+    t = DR.roofline_terms(rec)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(2.0)
+    assert t["dominant"] == "collective_s"
+    assert t["bound_step_s"] == pytest.approx(2.0)
+    assert t["compute_fraction_of_bound"] == pytest.approx(0.5)
+
+
+def test_serve_pipeline_config():
+    from repro.config import SHAPES
+    p = DR.serve_pipeline_config(SHAPES["decode_32k"])
+    assert p.n_microbatches * p.mb_size == 128
+    assert p.n_microbatches >= p.n_stages
+    lone = DR.serve_pipeline_config(SHAPES["long_500k"])
+    assert lone.global_batch == 1 and lone.n_microbatches == 1
+    assert lone.n_ticks == 2                 # fill the 2-stage pipe
+
+
+def test_batch_inputs_shapes():
+    from repro.config import SHAPES, get_arch
+    cfg = get_arch("qwen2-vl-2b")
+    b = DR.batch_inputs(cfg, SHAPES["train_4k"], include_labels=True)
+    assert b["patches"].shape == (256, 256, 1536)
+    assert b["tokens"].shape == (256, 4096 - 256)
+    assert b["labels"].shape == b["tokens"].shape
+    cfg2 = get_arch("musicgen-large")
+    b2 = DR.batch_inputs(cfg2, SHAPES["prefill_32k"], include_labels=False)
+    assert b2["frames"].shape == (32, 32768, 2048)
+
+
+def test_long500k_skip_logic(tmp_path):
+    rec = DR.run_cell("yi-9b", "long_500k", "single_pod",
+                      out_dir=str(tmp_path))
+    assert rec["skipped"] and rec["ok"]
+    assert "full-attention" in rec["reason"]

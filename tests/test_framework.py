@@ -1,0 +1,162 @@
+"""On-chain framework (§6): registries + matching, escrow payments,
+signature-based arbitration honouring the paper's three design principles."""
+
+import pytest
+
+from repro.framework.arbitration import ArbitrationModule, SignedResult
+from repro.framework.payment import PaymentError, PaymentModule
+from repro.framework.registry import Registry
+
+
+def _registry_with_fleet():
+    reg = Registry()
+    for i in range(4):
+        reg.register_machine(f"miner{i}", 24 << 30, "us-west", stake=100)
+    for i in range(2):
+        reg.register_machine(f"miner{4+i}", 24 << 30, "us-east", stake=100)
+    return reg
+
+
+def test_match_prefers_single_region():
+    reg = _registry_with_fleet()
+    # fits in 3 us-west machines (3 * 0.8 * 24GB = 57.6GB)
+    t = reg.register_task("alice", "llama3-70b", 50 << 30, 100, 1.0)
+    m = reg.match(t.task_id)
+    assert m is not None
+    assert {x.region for x in m.machines} == {"us-west"}
+    assert m.max_latency < 0.01
+    assert t.status == "matched"
+    assert all(x.status == "serving" for x in m.machines)
+    reg.release(m)
+    assert all(x.status == "idle" for x in m.machines)
+
+
+def test_match_spans_regions_when_needed():
+    reg = _registry_with_fleet()
+    t = reg.register_task("bob", "huge", 100 << 30, 10, 1.0)  # needs > 4
+    m = reg.match(t.task_id)
+    assert m is not None
+    assert len(m.machines) >= 6
+    assert m.max_latency >= 0.05            # cross-country link in pipeline
+
+
+def test_match_respects_stake_floor():
+    reg = Registry()
+    reg.register_machine("cheap", 24 << 30, "us-west", stake=1)
+    t = reg.register_task("carol", "m", 1 << 30, 1, 1.0)
+    assert reg.match(t.task_id, min_stake=50) is None
+
+
+# ---------------------------------------------------------------- payment --
+
+def test_escrow_lifecycle():
+    pay = PaymentModule()
+    pay.deposit("user", 100.0)
+    e = pay.lock("user", task_id=0, amount=60.0)
+    assert pay.balance("user") == 40.0
+    pay.release(e.escrow_id, "miner")
+    assert pay.balance("miner") == 60.0
+    with pytest.raises(PaymentError):
+        pay.release(e.escrow_id, "miner")       # double spend blocked
+    with pytest.raises(PaymentError):
+        pay.lock("user", 1, 1000.0)
+
+
+def test_escrow_refund():
+    pay = PaymentModule()
+    pay.deposit("user", 10.0)
+    e = pay.lock("user", 0, 10.0)
+    pay.refund(e.escrow_id)
+    assert pay.balance("user") == 10.0
+
+
+# -------------------------------------------------------------- arbitration
+
+def _setup_arbitration():
+    pay = PaymentModule()
+    arb = ArbitrationModule(pay)
+    pay.deposit("miner", 100.0)
+    key = arb.register_miner("miner", stake=80.0)
+    arb.register_task_owner(7, "alice")
+    return pay, arb, key
+
+
+def test_signature_cost_is_the_only_overhead():
+    """Principle 1: signing is a pure hash over the output."""
+    _, _, key = _setup_arbitration()
+    r = SignedResult.sign(7, 0, "miner", [1, 2, 3], key)
+    assert r.verify_signature(key)
+    assert r.matches_output([1, 2, 3])
+    assert not r.matches_output([1, 2, 4])
+
+
+def test_cheating_miner_slashed():
+    pay, arb, key = _setup_arbitration()
+    wrong = [9, 9, 9]
+    r = SignedResult.sign(7, 0, "miner", wrong, key)
+    d = arb.open_dispute("alice", r, claimed_output=wrong,
+                         reference_output=[1, 2, 3])
+    assert d.outcome == "slashed"
+    assert arb.stakes["miner"] == 0.0
+    assert pay.balance("alice") == 80.0
+
+
+def test_honest_miner_not_slashed():
+    pay, arb, key = _setup_arbitration()
+    good = [1, 2, 3]
+    r = SignedResult.sign(7, 0, "miner", good, key)
+    d = arb.open_dispute("alice", r, claimed_output=good,
+                         reference_output=good)
+    assert d.outcome == "dismissed"
+    assert arb.stakes["miner"] == 80.0
+
+
+def test_third_party_cannot_challenge():
+    """Principle 3: no DoS via arbitrary verifiers."""
+    _, arb, key = _setup_arbitration()
+    r = SignedResult.sign(7, 0, "miner", [1], key)
+    with pytest.raises(PermissionError):
+        arb.open_dispute("mallory", r, [1], [2])
+
+
+def test_unsigned_results_cannot_be_disputed():
+    _, arb, key = _setup_arbitration()
+    r = SignedResult.sign(7, 0, "miner", [1], key)
+    forged = SignedResult(task_id=7, request_id=0, miner="miner",
+                          output_hash=r.output_hash, signature="00" * 32)
+    with pytest.raises(PermissionError):
+        arb.open_dispute("alice", forged, [1], [2])
+
+
+def test_forged_output_hash_dismissed():
+    """A claimant cannot slash by presenting output the miner never signed."""
+    _, arb, key = _setup_arbitration()
+    r = SignedResult.sign(7, 0, "miner", [1, 2, 3], key)
+    d = arb.open_dispute("alice", r, claimed_output=[5, 5, 5],
+                         reference_output=[1, 2, 3])
+    assert d.outcome == "dismissed"
+
+
+def test_full_protocol_flow():
+    """User registers task + escrow; miner serves; payment released; the
+    signed transcript stays verifiable afterwards."""
+    reg = Registry()
+    pay = PaymentModule()
+    arb = ArbitrationModule(pay)
+    pay.deposit("user", 50.0)
+    pay.deposit("miner0", 20.0)
+    mkey = arb.register_miner("miner0", stake=15.0)
+    reg.register_machine("miner0", 24 << 30, "us-west", stake=15.0)
+    task = reg.register_task("user", "yi-9b", 10 << 30, 4, 0.9)
+    arb.register_task_owner(task.task_id, "user")
+    escrow = pay.lock("user", task.task_id, 25.0)
+    match = reg.match(task.task_id)
+    assert match is not None
+    outputs = [11, 22, 33]
+    result = SignedResult.sign(task.task_id, 0, "miner0", outputs, mkey)
+    assert result.verify_signature(mkey)
+    pay.release(escrow.escrow_id, "miner0")
+    reg.release(match)
+    assert pay.balance("miner0") == 30.0        # 5 left after stake + 25
+    d = arb.open_dispute("user", result, outputs, outputs)
+    assert d.outcome == "dismissed"

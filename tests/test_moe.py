@@ -1,0 +1,104 @@
+"""MoE dispatch: capacity behaviour, chunked == unchunked, EP partial-sum
+equivalence, router normalisation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoEConfig
+from repro.models import moe as M
+
+
+def _weights(key, e, d, de):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, e)) * 0.5,
+        "wg": jax.random.normal(ks[1], (e, d, de)) * 0.2,
+        "wu": jax.random.normal(ks[2], (e, d, de)) * 0.2,
+        "wd": jax.random.normal(ks[3], (e, de, d)) * 0.2,
+    }
+
+
+MOE = MoEConfig(num_experts=4, experts_per_token=2, d_expert=16,
+                capacity_factor=2.0)
+
+
+def test_chunked_equals_unchunked():
+    key = jax.random.PRNGKey(0)
+    w = _weights(key, 4, 8, 16)
+    x = jax.random.normal(key, (32, 8))
+    full = M.moe_ffn(x, w, MOE)
+    # chunked capacity is computed per chunk — same tokens, same experts
+    chk = M.moe_ffn(x, w, MOE, token_chunk=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_ep_partial_sums_equal_full():
+    """Two half-expert shards must psum to the full-expert output."""
+    key = jax.random.PRNGKey(1)
+    e, d, de = 4, 8, 16
+    w = _weights(key, e, d, de)
+    x = jax.random.normal(key, (16, d))
+    full = M.moe_ffn(x, w, MOE)
+    parts = []
+    for (e0, ec) in [(0, 2), (2, 2)]:
+        w_shard = {"router": w["router"],
+                   "wg": w["wg"][e0:e0 + ec], "wu": w["wu"][e0:e0 + ec],
+                   "wd": w["wd"][e0:e0 + ec]}
+        parts.append(M.moe_ffn(x, w_shard, MOE, expert_shard=(e0, ec)))
+    np.testing.assert_allclose(np.asarray(parts[0] + parts[1]),
+                               np.asarray(full), rtol=2e-5, atol=2e-5)
+
+
+def test_no_drops_at_generous_capacity():
+    """With capacity_factor 2 and uniform-ish routing, the combine weights
+    must sum to ~1 for every token (nothing dropped)."""
+    key = jax.random.PRNGKey(2)
+    w = _weights(key, 4, 8, 16)
+    x = jax.random.normal(key, (64, 8))
+    topv, topi, _ = M.router_probs(x, w["router"], MOE)
+    cap = M.expert_capacity(64, MOE)
+    flat_e, pos = M._positions_in_expert(topi, MOE.num_experts)
+    assert bool(jnp.all(pos < cap)), "unexpected capacity overflow"
+
+
+def test_capacity_drops_are_zero_weight():
+    """Force overflow with capacity_factor ~0: output must be exactly 0
+    (all tokens dropped), not garbage."""
+    moe = MoEConfig(num_experts=2, experts_per_token=1, d_expert=8,
+                    capacity_factor=1e-9)
+    key = jax.random.PRNGKey(3)
+    w = _weights(key, 2, 4, 8)
+    x = jax.random.normal(key, (64, 4))
+    out = M.moe_ffn(x, w, moe)
+    # capacity floor is 4 slots; tokens beyond it contribute zero
+    n_kept = 2 * 4  # experts * floor-capacity
+    norms = jnp.linalg.norm(out, axis=-1)
+    assert int(jnp.sum(norms > 1e-7)) <= n_kept
+
+
+def test_router_normalisation():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (8, 4))
+    wr = jax.random.normal(key, (4, 4))
+    moe_norm = MoEConfig(num_experts=4, experts_per_token=2, d_expert=8,
+                         normalize_router_weights=True)
+    topv, _, probs = M.router_probs(x, wr, moe_norm)
+    np.testing.assert_allclose(np.asarray(jnp.sum(topv, -1)),
+                               np.ones(8), rtol=1e-5)
+    moe_raw = MoEConfig(num_experts=4, experts_per_token=2, d_expert=8,
+                        normalize_router_weights=False)
+    topv2, _, _ = M.router_probs(x, wr, moe_raw)
+    assert bool(jnp.all(jnp.sum(topv2, -1) <= 1.0 + 1e-6))
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives loss == num_experts * E[f*P] == 1."""
+    n, e = 1024, 8
+    probs = jnp.full((n, e), 1.0 / e)
+    topi = jnp.stack([jnp.arange(n) % e, (jnp.arange(n) + 1) % e], axis=1)
+    moe = MoEConfig(num_experts=e, experts_per_token=2, d_expert=4)
+    loss = M.moe_load_balance_loss(probs, topi, moe)
+    np.testing.assert_allclose(float(loss), 1.0, rtol=1e-5)

@@ -1,0 +1,165 @@
+"""Recurrent blocks: RG-LRU, mLSTM, sLSTM — parallel/chunked forms vs exact
+sequential recurrences, decode-step consistency, state handover."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import rglru as R
+from repro.models import xlstm as X
+
+
+# ---------------------------------------------------------------- RG-LRU ---
+
+def test_rglru_scan_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, d = 2, 33, 8
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    bb = jax.random.normal(ks[1], (b, s, d))
+    h0 = jax.random.normal(ks[2], (b, d))
+    hs = R.rglru_scan(a, bb, h0)
+    h = h0
+    for t in range(s):
+        h = R.rglru_step(a[:, t], bb[:, t], h)
+        np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(h),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_block_prefill_then_decode_equals_full():
+    cfg_heads, d, dr = 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 12)
+    w = {
+        "wg": jax.random.normal(ks[0], (d, dr)) * 0.3,
+        "wx": jax.random.normal(ks[1], (d, dr)) * 0.3,
+        "conv_w": jax.random.normal(ks[2], (4, dr)) * 0.3,
+        "conv_b": jnp.zeros((dr,)),
+        "gate_a_w": jax.random.normal(ks[3], (cfg_heads, dr // 2, dr // 2)) * 0.3,
+        "gate_a_b": jnp.zeros((dr,)),
+        "gate_x_w": jax.random.normal(ks[4], (cfg_heads, dr // 2, dr // 2)) * 0.3,
+        "gate_x_b": jnp.zeros((dr,)),
+        "lam": jnp.ones((dr,)),
+        "wo": jax.random.normal(ks[5], (dr, d)) * 0.3,
+    }
+    b, s1, s2 = 1, 7, 3
+    x = jax.random.normal(ks[6], (b, s1 + s2, d))
+    y_full, _ = R.rglru_block(x, w, cfg_heads, mode="train", state=None)
+
+    state = {"h": jnp.zeros((b, dr), jnp.float32),
+             "conv": jnp.zeros((b, 3, dr))}
+    y1, state = R.rglru_block(x[:, :s1], w, cfg_heads, mode="prefill",
+                              state=state)
+    ys = [y1]
+    for t in range(s2):
+        yt, state = R.rglru_block(x[:, s1 + t: s1 + t + 1], w, cfg_heads,
+                                  mode="decode", state=state)
+        ys.append(yt)
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_cat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_causal_conv_state_handover():
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    b, s, d, cw = 2, 10, 4, 4
+    x = jax.random.normal(ks[0], (b, s, d))
+    w = jax.random.normal(ks[1], (cw, d))
+    bias = jnp.zeros((d,))
+    y_full, _ = R.causal_conv1d(x, w, bias)
+    y1, st = R.causal_conv1d(x[:, :6], w, bias)
+    y2, _ = R.causal_conv1d(x[:, 6:], w, bias, state=st)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- mLSTM ---
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**16))
+def test_mlstm_chunkwise_equals_sequential(s, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, h, dh = 2, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    i = jax.random.normal(ks[3], (b, s, h))
+    f = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    h_seq, _ = X.mlstm_sequential(q, k, v, i, f)
+    h_chk, _ = X.mlstm_chunkwise(q, k, v, i, f, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_seq), np.asarray(h_chk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_state_continuation():
+    """chunkwise(state) must continue exactly where sequential left off."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    b, s, h, dh = 1, 24, 2, 4
+    q, k, v = (jax.random.normal(ks[j], (b, s, h, dh)) for j in range(3))
+    i = jax.random.normal(ks[3], (b, s, h))
+    f = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    h_full, st_full = X.mlstm_sequential(q, k, v, i, f)
+    h1, st1 = X.mlstm_chunkwise(q[:, :10], k[:, :10], v[:, :10],
+                                i[:, :10], f[:, :10], chunk=4)
+    h2, st2 = X.mlstm_chunkwise(q[:, 10:], k[:, 10:], v[:, 10:],
+                                i[:, 10:], f[:, 10:], st1, chunk=4)
+    np.testing.assert_allclose(np.asarray(h_full),
+                               np.asarray(jnp.concatenate([h1, h2], 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_decode_step_matches_sequential_tail():
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    b, s, h, dh = 1, 9, 2, 4
+    q, k, v = (jax.random.normal(ks[j], (b, s, h, dh)) for j in range(3))
+    i = jax.random.normal(ks[3], (b, s, h))
+    f = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    h_all, _ = X.mlstm_sequential(q, k, v, i, f)
+    _, st = X.mlstm_sequential(q[:, :-1], k[:, :-1], v[:, :-1],
+                               i[:, :-1], f[:, :-1])
+    h_last, _ = X.mlstm_step(q[:, -1], k[:, -1], v[:, -1], i[:, -1],
+                             f[:, -1], st)
+    np.testing.assert_allclose(np.asarray(h_all[:, -1]), np.asarray(h_last),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- sLSTM ---
+
+def test_slstm_block_decode_consistency():
+    d, dr, hn = 6, 8, 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    w = {
+        "w_in": jax.random.normal(ks[0], (4, d, dr)) * 0.4,
+        "b_in": jnp.zeros((4, dr)),
+        "r": jax.random.normal(ks[1], (4, hn, dr // hn, dr // hn)) * 0.4,
+        "wo": jax.random.normal(ks[2], (dr, d)) * 0.4,
+    }
+    b, s = 2, 11
+    x = jax.random.normal(ks[3], (b, s, d))
+    y_full, _ = X.slstm_block(x, w, hn, mode="train", state=None)
+    st = X.slstm_zero_state(b, dr)
+    ys = []
+    for t in range(s):
+        yt, st = X.slstm_block(x[:, t:t + 1], w, hn, mode="decode", state=st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_forget_gate_stability():
+    """Long constant input must not overflow the stabilised gates."""
+    d, dr, hn = 4, 4, 1
+    w = {
+        "w_in": jnp.ones((4, d, dr)) * 0.1,
+        "b_in": jnp.zeros((4, dr)).at[1].set(5.0),
+        "r": jnp.ones((4, hn, dr, dr)) * 0.1,
+        "wo": jnp.ones((dr, d)) * 0.1,
+    }
+    x = jnp.ones((1, 500, d))
+    y, st = X.slstm_block(x, w, hn, mode="prefill",
+                          state=X.slstm_zero_state(1, dr))
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(st["m"])))
