@@ -1,8 +1,14 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--quick] [--only NAME]``"""
+report.  ``python -m benchmarks.run [--quick] [--only NAME] [--json PATH]``
+
+Besides the CSV tail, every run writes a machine-readable
+``BENCH_throughput.json`` (all rows + metadata) so the perf trajectory is
+tracked across PRs."""
 
 import argparse
 import csv
+import json
+import platform
 import sys
 import time
 
@@ -13,7 +19,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["cost_model", "batch_curve", "throughput",
                              "offload", "attn_schemes", "roofline"])
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' disables; "
+                         "defaults to BENCH_throughput.json on full runs — "
+                         "partial --only runs don't clobber the tracked "
+                         "snapshot unless asked to)")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = "" if args.only else "BENCH_throughput.json"
 
     from benchmarks import (bench_attention_schemes, bench_batch_curve,
                             bench_cost_model, bench_offload, bench_roofline,
@@ -27,12 +40,24 @@ def main() -> None:
         "roofline": bench_roofline.run,           # deliverable (g)
     }
     rows = []
+    timings = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
         rows.extend(fn(quick=args.quick) or [])
-        print(f"   [{name}: {time.perf_counter()-t0:.1f}s]")
+        timings[name] = round(time.perf_counter() - t0, 1)
+        print(f"   [{name}: {timings[name]:.1f}s]")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       "host": platform.node(),
+                       "python": platform.python_version(),
+                       "quick": args.quick,
+                       "bench_seconds": timings,
+                       "rows": rows}, f, indent=1, default=str)
+        print(f"\nwrote {args.json} ({len(rows)} rows)")
 
     # machine-readable tail
     print("\n== CSV ==")

@@ -3,26 +3,15 @@ request workload through the full DeServe stack and account profitability.
 
 This is the paper's §5 workload shrunk to CPU: random prompt/generation
 lengths, replenish-on-finish, stats over the run.  Swap --arch for any of
-the 11 registered architectures.
+the 11 registered architectures; swap --backend to run the same engine
+through the SPMD pipeline (the pod axis is emulated with host devices).
 
     PYTHONPATH=src python examples/offline_serving.py [--arch gemma3-1b]
+        [--backend pipelined --stages 2]
 """
 
 import argparse
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config import get_arch, reduced_config
-from repro.core.cost_model import PLATFORMS, profit_per_hour
-from repro.core.offload import DoubleBufferOffloader
-from repro.models import model as M
-from repro.models.common import Runtime
-from repro.serving.engine import OfflineEngine
-from repro.serving.kv_cache import PoolConfig
-from repro.serving.request import Request, SamplingParams
 
 
 def main():
@@ -31,7 +20,29 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "pipelined"])
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages for --backend pipelined (the "
+                         "reduced archs fit 1-2 stages)")
     args = ap.parse_args()
+
+    if args.backend == "pipelined":
+        from repro.launch.serve import _ensure_host_devices
+        _ensure_host_devices(args.stages)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_arch, reduced_config
+    from repro.core.cost_model import PLATFORMS, profit_per_hour
+    from repro.core.offload import DoubleBufferOffloader
+    from repro.models import model as M
+    from repro.models.common import Runtime
+    from repro.serving.engine import OfflineEngine
+    from repro.serving.kv_cache import PoolConfig
+    from repro.serving.request import Request, SamplingParams
 
     cfg = reduced_config(get_arch(args.arch))
     rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
@@ -43,7 +54,8 @@ def main():
                         max_new_tokens=args.max_new)
     engine = OfflineEngine(cfg, params, rt, mb_size=2, num_microbatches=3,
                            pool=pool, sampling=sp,
-                           offloader=DoubleBufferOffloader(pool, 3))
+                           offloader=DoubleBufferOffloader(pool, 3),
+                           backend=args.backend, n_stages=args.stages)
 
     rng = np.random.RandomState(1)
     reqs = [Request(i, list(rng.randint(1, cfg.vocab_size,
@@ -56,9 +68,9 @@ def main():
 
     rep = engine.throughput_report()
     tps = rep["total_tokens"] / dt
-    print(f"{cfg.name}: served {rep['finished']} requests, "
-          f"{rep['total_tokens']} tokens in {dt:.1f}s ({tps:.1f} tok/s on "
-          f"this CPU host)")
+    print(f"{cfg.name} [{rep['backend']}]: served {rep['finished']} "
+          f"requests, {rep['total_tokens']} tokens in {dt:.1f}s "
+          f"({tps:.1f} tok/s on this CPU host)")
     print(f"offload swaps: {rep['swaps']}")
     print("\nif this were an 8x4090 mining-rate pipeline at 450 tok/s:")
     for name in ("mining", "ionet", "cloud"):

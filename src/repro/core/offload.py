@@ -188,8 +188,12 @@ def host_memory_available() -> bool:
 def pool_shardings(mesh, spec, *, host: bool):
     """NamedSharding for a KV pool buffer; ``host=True`` places it in
     pinned host memory (the paper's CPU-RAM side of the PCIe swap)."""
-    kind = "pinned_host" if (host and host_memory_available()) else "device"
-    return jax.sharding.NamedSharding(mesh, spec, memory_kind=kind)
+    if host and host_memory_available():
+        return jax.sharding.NamedSharding(mesh, spec,
+                                          memory_kind="pinned_host")
+    # None = the backend's default memory kind (CPU backends reject an
+    # explicit "device" kind; TPU default is HBM, which is what we want)
+    return jax.sharding.NamedSharding(mesh, spec)
 
 
 def place_host_store(offloader: "DoubleBufferOffloader", mesh, spec):

@@ -40,6 +40,23 @@ from repro.models import model as model_lib
 from repro.models.common import Runtime, make_layer_plan, rms_norm
 
 
+def _shard_map(f, *, mesh, axis_names, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: new-style (axis_names /
+    check_vma) when present, else ``jax.experimental.shard_map`` with the
+    complementary ``auto`` axis set (manual over ``axis_names`` only)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    # the experimental API cannot partial-auto this body on older jax
+    # (axis_index lowers to an unsupported PartitionId under SPMD
+    # partitioning); every spec only references the manual axes, so run
+    # fully manual — the remaining axes are replicated either way
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 @dataclass(frozen=True)
 class PipelineConfig:
     n_stages: int
@@ -220,9 +237,8 @@ def _pipeline_pass(stage_params, stage_caches, queue, positions_q, cfg, rt,
     )
     out_specs = (P(), [jax.tree.map(lambda _: P("pod"), c)
                        for c in stage_caches])
-    fn = jax.shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
-                       in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    fn = _shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
+                    in_specs=in_specs, out_specs=out_specs)
     return fn(stage_params, stage_caches, queue, positions_q)
 
 
@@ -337,6 +353,159 @@ def pipeline_prefill(params, inputs, caches, cfg: ModelConfig, rt: Runtime,
     logits = embed_lib.unembed(params["embed"], xf[:, -1], cfg)
     new_caches = {"stage": new_stage, "epi_scan": new_epi, "tail": new_tail}
     return logits.reshape(n_mb, mb, -1), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Single-tick circular decode over ENGINE-format paged caches
+# ---------------------------------------------------------------------------
+#
+# The serving engine's PipelinedBackend keeps the §4.3 circular schedule
+# *persistent*: each engine tick injects one microbatch at stage 0 and
+# advances every in-flight microbatch one stage.  Unlike the fixed-batch
+# passes above (which own stage-major dense caches), this path runs over
+# the engine's canonical paged-cache pytree — scan leaves (n_periods, ...)
+# are split into per-stage slices inside the jit, so continuous batching,
+# page tables, and the double-buffer offloader keep operating on the one
+# host-side layout.
+
+
+def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
+                         key, *, cfg: ModelConfig, rt: Runtime, sampling,
+                         n_stages: int, mb_size: int, mesh):
+    """Advance the persistent pipeline by one tick.
+
+    caches:    engine-format paged caches ({"scan": [...], "tail": [...]}).
+    act:       (n_stages, mb_size, 1, D) input activation per stage; row 0
+               is replaced by the embedded ``tokens`` (the injection).
+    tokens:    (mb_size,) int32 — last tokens of the injected microbatch.
+    mb_assign: (n_stages,) int32 — microbatch id each stage processes this
+               tick (-1 = bubble).  ``mb_assign[-1]`` is the draining one.
+    pos_stage: (n_stages, mb_size) int32 absolute positions per stage.
+
+    Returns (sampled tokens (mb_size,) for the draining microbatch —
+    garbage when ``mb_assign[-1] < 0`` —, new caches, new act).
+    """
+    from repro.serving import kv_cache as kvc
+    from repro.serving.sampler import sample
+
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    pps, leftover = split_layers(cfg, n_stages)
+    n_scan = pps * n_stages
+    cd = rt.compute_dtype
+
+    stage_params, epi_scan_params = split_scan_params(params, cfg, n_stages)
+    stage_caches = [jax.tree.map(
+        lambda x: x[:n_scan].reshape((n_stages, pps) + x.shape[1:]), c)
+        for c in caches["scan"]]
+    epi_scan_caches = [jax.tree.map(lambda x: x[n_scan:], c)
+                       for c in caches["scan"]] if leftover else []
+
+    x_inj = embed_lib.embed_tokens(params["embed"], tokens, cfg, cd)[:, None]
+
+    def body(stage_params_l, stage_caches_l, act_l, x_inj, mb_assign,
+             pos_stage):
+        lp = [jax.tree.map(lambda x: x[0], p) for p in stage_params_l]
+        lc = [jax.tree.map(lambda x: x[0], c) for c in stage_caches_l]
+        pod = jax.lax.axis_index("pod")
+        is_last = pod == n_stages - 1
+
+        x_in = jnp.where(pod == 0, x_inj, act_l[0])
+        mb_id = jax.lax.dynamic_index_in_dim(mb_assign, pod, 0,
+                                             keepdims=False)
+        active = mb_id >= 0
+        row0 = jnp.maximum(mb_id, 0) * mb_size
+        pos = jax.lax.dynamic_index_in_dim(pos_stage, pod, 0,
+                                           keepdims=False)
+        p1 = pos[:, None]
+        if cfg.frontend == "vision_patches":
+            from repro.models.common import text_positions3
+            p1 = text_positions3(p1)
+
+        # per-microbatch row views of this stage's period slice (pools
+        # shared, per-slot leaves row-sliced at axis 1 after the period
+        # axis — same convention the single-device backend uses)
+        view = []
+        for c in lc:
+            shared, per = kvc._split_shared(c)
+            per = jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
+                x, row0, mb_size, axis=1), per)
+            view.append({**shared, **per})
+        y, new_view = model_lib.run_periods(
+            lp, x_in, cfg, rt, period_kinds=plan.period_kinds,
+            mode="decode", scan_caches=view, positions=p1)
+
+        new_lc = []
+        for c_old, v_old, v_new in zip(lc, view, new_view):
+            v_new = jax.tree.map(lambda n, o: jnp.where(active, n, o),
+                                 v_new, v_old)               # mask bubbles
+            merged = {}
+            for k in c_old:
+                if k.endswith("_pages"):
+                    merged[k] = v_new[k].astype(c_old[k].dtype)
+                else:
+                    merged[k] = jax.lax.dynamic_update_slice_in_dim(
+                        c_old[k], v_new[k].astype(c_old[k].dtype), row0,
+                        axis=1)
+            new_lc.append(merged)
+
+        # drained activation: the last stage's output, broadcast to all
+        # pods (f32 psum: see the note in _pipeline_pass)
+        y_out = jax.lax.psum(
+            jnp.where(is_last, y, jnp.zeros_like(y)).astype(jnp.float32),
+            "pod").astype(y.dtype)
+        # ship activations one stage downstream for the next tick
+        y_next = jax.lax.ppermute(
+            y, "pod", [(i, (i + 1) % n_stages) for i in range(n_stages)])
+        new_lc = [jax.tree.map(lambda x: x[None], c) for c in new_lc]
+        return y_out, y_next[None], new_lc
+
+    P = jax.sharding.PartitionSpec
+    in_specs = (
+        [jax.tree.map(lambda _: P("pod"), p) for p in stage_params],
+        [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches],
+        P("pod"), P(), P(), P(),
+    )
+    out_specs = (P(), P("pod"),
+                 [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches])
+    fn = _shard_map(body, mesh=mesh, axis_names={"pod"},
+                    in_specs=in_specs, out_specs=out_specs)
+    y_out, new_act, new_stage = fn(stage_params, stage_caches, act, x_inj,
+                                   mb_assign, pos_stage)
+
+    # epilogue + sampling for the draining microbatch (replicated — this is
+    # the paper's return link: (mb,) token ids per tick, not activations)
+    out_mb = mb_assign[n_stages - 1]
+    valid = out_mb >= 0
+    row0 = jnp.maximum(out_mb, 0) * mb_size
+    pos_d = pos_stage[n_stages - 1]
+    p1 = pos_d[:, None]
+    if cfg.frontend == "vision_patches":
+        from repro.models.common import text_positions3
+        p1 = text_positions3(p1)
+    epi_full = {"scan": epi_scan_caches, "tail": caches["tail"]}
+    epi_view = kvc.slot_view(epi_full, row0, mb_size)
+    xf, new_epi_scan, new_tail = _epilogue(
+        params, epi_scan_params, y_out, cfg, rt, mode="decode",
+        caches={"epi_scan": epi_view["scan"], "tail": epi_view["tail"]},
+        positions=p1)
+    logits = embed_lib.unembed(params["embed"], xf[:, 0], cfg)
+    toks = sample(logits, key, sampling)
+
+    new_epi_view = {"scan": new_epi_scan or [], "tail": new_tail}
+    new_epi_view = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
+                                new_epi_view, epi_view)      # mask bubbles
+    epi_merged = kvc.slot_merge(epi_full, new_epi_view, row0)
+
+    new_scan = []
+    for i in range(len(caches["scan"])):
+        st = jax.tree.map(lambda x: x.reshape((n_scan,) + x.shape[2:]),
+                          new_stage[i])
+        if leftover:
+            st = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              st, epi_merged["scan"][i])
+        new_scan.append(st)
+    new_caches = {"scan": new_scan, "tail": epi_merged["tail"]}
+    return toks, new_caches, new_act
 
 
 # ---------------------------------------------------------------------------
@@ -508,9 +677,8 @@ def pipeline_decode_rounds(params, tokens, caches, cur_pos,
                  [jax.tree.map(lambda _: P("pod"), c)
                   for c in caches["stage"]],
                  jax.tree.map(lambda _: P(), epi_state))
-    fn = jax.shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
-                       in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    fn = _shard_map(body, mesh=_ambient_mesh(), axis_names={"pod"},
+                    in_specs=in_specs, out_specs=out_specs)
     outs, new_stage, new_epi = fn(stage_params, caches["stage"], epi_state,
                                   tokens, cur_pos)
     new_caches = {"stage": new_stage, "epi_scan": new_epi["epi_scan"],

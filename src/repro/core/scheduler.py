@@ -103,7 +103,14 @@ def plan_schedule(*, n_stages: int, stage_time: float, latency: float,
     best: Optional[ScheduleChoice] = None
     best_rate = -1.0
     n_star = optimal_microbatches(n_stages, stage_time, latency)
-    for n_b in range(n_stages, max(n_star + 2, max_microbatches) + 1):
+    # search a little past N_B* but never past the hard cap: the caller's
+    # host memory / pipe depth bound wins over the bubble-free optimum
+    if max_microbatches < n_stages:
+        raise ValueError(
+            f"max_microbatches={max_microbatches} < n_stages={n_stages}: "
+            "the circular schedule needs at least one microbatch per stage")
+    hi = min(max(n_star + 2, n_stages), max_microbatches)
+    for n_b in range(n_stages, hi + 1):
         if use_offload:
             m_g = min(offload_lib.global_pool_bytes(offload_bandwidth,
                                                     stage_time),

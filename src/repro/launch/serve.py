@@ -1,32 +1,65 @@
-"""Offline serving driver: DeServe engine on the local device.
+"""Offline serving driver: the DeServe engine over a pluggable backend.
 
 Runs the full serving stack end-to-end on a *reduced* config (CPU-sized) or
 any registered arch: paged KV cache with local+global pools, double-buffer
 offloading, microbatch round-robin, continuous batching, and the §3 profit
 accounting on the measured throughput.
 
+``--backend local`` is the single-device path; ``--backend pipelined``
+drives the same engine through the ``--stages``-stage SPMD pipeline (on a
+CPU host the pod axis is emulated with forced host devices).  ``--plan``
+derives (N_B, per-microbatch batch, pool split) from a *measured* stage
+time plus ``--latency`` via the §4.3 planner instead of the hand-set flags.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
-      --microbatches 2 --mb-size 2 --max-new 24 [--full-size]
+      --backend pipelined --stages 2 --max-new 24 [--plan] [--full-size]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.config import get_arch, reduced_config
-from repro.core.cost_model import PLATFORMS, min_throughput, profit_per_hour
-from repro.core.offload import DoubleBufferOffloader
-from repro.core.scheduler import optimal_microbatches
-from repro.models import model as model_lib
-from repro.models.common import Runtime
-from repro.serving.engine import OfflineEngine
-from repro.serving.kv_cache import PoolConfig
-from repro.serving.request import Request, SamplingParams
+def _ensure_host_devices(n: int) -> None:
+    """Force >= ``n`` host devices for the pod axis — must run before jax
+    initialises its backend (real accelerators ignore the flag)."""
+    import re
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m and int(m.group(1)) >= n:
+        return
+    if m:                               # present but too small: raise it
+        flags = flags.replace(
+            m.group(0), f"--xla_force_host_platform_device_count={n}")
+        os.environ["XLA_FLAGS"] = flags
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def measure_stage_time(cfg, params, rt, n_stages: int) -> float:
+    """Wall-time one single-sequence decode step (compile excluded) and
+    attribute 1/n_stages of it to each stage — the measurement the §4.3
+    planner consumes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as model_lib
+
+    caches = model_lib.init_caches(cfg, 1, 64, rt)
+    fn = jax.jit(lambda p, t, c, cp: model_lib.decode_step(p, t, c, cp,
+                                                           cfg, rt))
+    tok = jnp.zeros((1,), jnp.int32)
+    cur = jnp.ones((1,), jnp.int32)
+    logits, caches = fn(params, tok, caches, cur)        # compile + warm
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    logits, caches = fn(params, tok, caches, cur)
+    jax.block_until_ready(logits)
+    return max(1e-4, (time.perf_counter() - t0) / n_stages)
 
 
 def main() -> None:
@@ -34,33 +67,79 @@ def main() -> None:
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "pipelined"])
+    ap.add_argument("--stages", type=int, default=2,
+                    help="pipeline stages (pipelined backend / --plan)")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--mb-size", type=int, default=2)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan", action="store_true",
+                    help="derive N_B / batch / pools from measured stage "
+                         "time + --latency (OfflineEngine.from_plan)")
+    ap.add_argument("--kv-budget-mb", type=float, default=4.0,
+                    help="per-stage KV byte budget for --plan")
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (needs real accelerators)")
     ap.add_argument("--latency", type=float, default=0.064,
-                    help="assumed link latency for the schedule report")
+                    help="assumed one-way link latency (schedule + --plan)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.backend == "pipelined":
+        _ensure_host_devices(args.stages)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_arch, reduced_config
+    from repro.core.cost_model import PLATFORMS, min_throughput, \
+        profit_per_hour
+    from repro.core.offload import DoubleBufferOffloader
+    from repro.core.scheduler import optimal_microbatches
+    from repro.models import model as model_lib
+    from repro.models.common import Runtime
+    from repro.serving.engine import OfflineEngine
+    from repro.serving.kv_cache import PoolConfig
+    from repro.serving.request import Request, SamplingParams
 
     cfg = get_arch(args.arch)
     if not args.full_size:
         cfg = reduced_config(cfg)
     rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
     print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model} "
-          f"params={cfg.param_count()/1e6:.1f}M")
+          f"params={cfg.param_count()/1e6:.1f}M backend={args.backend}")
 
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed), rt)
-    pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
-                      n_global_pages=16, max_pages_per_seq=16)
-    off = DoubleBufferOffloader(pool, num_microbatches=args.microbatches)
     sp = SamplingParams(temperature=args.temperature,
                         max_new_tokens=args.max_new)
-    engine = OfflineEngine(cfg, params, rt, mb_size=args.mb_size,
-                           num_microbatches=args.microbatches, pool=pool,
-                           sampling=sp, offloader=off, seed=args.seed)
+
+    if args.plan:
+        t_s = measure_stage_time(cfg, params, rt, args.stages)
+        print(f"planned: measured stage_time={t_s*1000:.1f}ms "
+              f"latency={args.latency*1000:.0f}ms "
+              f"kv_budget={args.kv_budget_mb:.1f}MB")
+        engine = OfflineEngine.from_plan(
+            cfg, params, rt, n_stages=args.stages, stage_time=t_s,
+            latency=args.latency, m_kv_bytes=args.kv_budget_mb * 1e6,
+            page_size=args.page_size, max_pages_per_seq=16,
+            max_microbatches=16, mb_size_cap=4, backend=args.backend,
+            sampling=sp, seed=args.seed)
+        print(f"planned: N_B={engine.num_microbatches} "
+              f"mb_size={engine.mb_size} pool=(local={engine.pool.n_local_pages}, "
+              f"global=2x{engine.pool.n_global_pages}) "
+              f"util={engine.schedule_choice.utilisation:.2f}")
+    else:
+        pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
+                          n_global_pages=16, max_pages_per_seq=16)
+        off = DoubleBufferOffloader(pool,
+                                    num_microbatches=args.microbatches)
+        engine = OfflineEngine(cfg, params, rt, mb_size=args.mb_size,
+                               num_microbatches=args.microbatches, pool=pool,
+                               sampling=sp, offloader=off, seed=args.seed,
+                               backend=args.backend, n_stages=args.stages)
 
     rng = np.random.RandomState(args.seed)
     reqs = [Request(i, list(rng.randint(1, cfg.vocab_size,

@@ -1,0 +1,399 @@
+"""Pluggable execution backends for the offline serving engine.
+
+The engine (``repro.serving.engine.OfflineEngine``) owns every piece of
+*bookkeeping* — request queue, decode slots, page allocator, page table,
+positions — while a backend owns the *compute plane*: the device cache
+pytree and every jit entry point.  The seam is three operations:
+
+  ``prefill(tokens, slot, last_index)``  — run one sequence's prompt into
+        the caches at ``slot``, return the last-position logits.
+  ``decode(mb, tokens, cur_pos, key)``   — advance microbatch ``mb`` by one
+        token tick; returns zero or more :class:`DecodeResult`.  A result
+        may be for an *earlier* microbatch: pipelined backends drain with
+        latency, so the engine applies results by the microbatch id they
+        carry, not by the one it just injected.
+  cache ownership — ``set_page_table`` / ``reset_slot`` push the engine's
+        host-side bookkeeping into the device caches.
+
+Two implementations ship:
+
+``LocalBackend``
+    The single-device path: one jitted decode per microbatch tick, one
+    jitted prefill per (padded) prompt length.  Decode slices the
+    microbatch's ``mb_size`` cache rows (never the full batch), so
+    non-microbatch rows are untouched by construction.
+
+``PipelinedBackend``
+    DeServe's §4.3 circular schedule as a *persistent stepper* over the
+    ``N_S``-stage ``shard_map`` pipeline (``repro.core.pipeline``).  Each
+    engine tick injects one microbatch at stage 0 and advances every
+    in-flight microbatch one stage; the microbatch leaving the last stage
+    drains through the shared epilogue + sampler and is returned to the
+    engine ``N_S − 1`` ticks after injection.  Paged KV pools and the
+    §4.2 double-buffer offloader run per stage: stage ``s`` swaps its own
+    period-slice of the global pools when a microbatch arrives at it.
+"""
+
+from __future__ import annotations
+
+import abc
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model as model_lib
+from repro.models.common import Runtime
+from repro.serving import kv_cache as kvc
+from repro.serving.request import SamplingParams
+from repro.serving.sampler import sample
+
+
+@dataclass
+class DecodeResult:
+    """One drained microbatch tick: ``tokens[i]`` is the next token for
+    slot ``mb * mb_size + i`` (the engine decides which rows are live)."""
+    mb: int
+    tokens: np.ndarray                  # (mb_size,) int32
+
+
+# cache-view helpers live with the cache layout; re-exported here because
+# backends are their main consumer
+slot_view = kvc.slot_view
+slot_merge = kvc.slot_merge
+
+
+# ---------------------------------------------------------------------------
+# Interface + shared slot-cache machinery
+# ---------------------------------------------------------------------------
+
+
+class ExecutionBackend(abc.ABC):
+    """Compute plane behind the engine.  Owns caches and jit entries."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def prefill(self, tokens: np.ndarray, slot: int, last_index: int,
+                has_global_pages: bool = True) -> jax.Array:
+        """Prefill one (padded) prompt into ``slot``; returns (V,) logits
+        at ``last_index``.  ``has_global_pages=False`` tells the backend
+        the slot's allocation is all-local, so no offload residency work
+        is needed before the prompt KV is written."""
+
+    @abc.abstractmethod
+    def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
+               key, active: bool = True) -> List[DecodeResult]:
+        """Advance microbatch ``mb`` one tick (``active=False`` advances
+        the pipe without injecting — used to drain)."""
+
+    @abc.abstractmethod
+    def set_page_table(self, table: np.ndarray) -> None:
+        """Push the engine's (batch, max_pages) page table to the device."""
+
+    @abc.abstractmethod
+    def reset_slot(self, slot: int) -> None:
+        """Clear per-slot ring/recurrent state when a slot is reassigned."""
+
+    def busy_microbatches(self) -> set:
+        """Microbatches with an in-flight tick (their slots and cache rows
+        must not be touched by admission)."""
+        return set()
+
+    def pending(self) -> bool:
+        """True while ticks are still in flight (engine keeps draining)."""
+        return False
+
+    @property
+    def swap_count(self) -> int:
+        return 0
+
+
+class _SlotCacheBackend(ExecutionBackend):
+    """Shared prefill / page-table / reset plumbing over engine-format
+    paged caches.  Subclasses implement ``decode``."""
+
+    def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
+                 mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
+                 sampling: SamplingParams):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+        self.mb_size = mb_size
+        self.num_microbatches = num_microbatches
+        self.batch = mb_size * num_microbatches
+        self.pool = pool
+        self.sampling = sampling
+        self.caches = kvc.build_paged_caches(cfg, self.batch, pool, rt)
+        self._prefill_jits: Dict[int, object] = {}
+
+    # -- cache bookkeeping entry points ------------------------------------
+
+    def set_page_table(self, table: np.ndarray) -> None:
+        self.caches = kvc.set_page_table(self.caches, table)
+
+    def reset_slot(self, slot: int) -> None:
+        self.caches = kvc.reset_slot(self.caches, self.cfg, slot, self.rt)
+
+    # -- prefill -----------------------------------------------------------
+
+    def _prefill_residency(self, mb: int) -> None:
+        """Make ``mb``'s global-pool parity resident before prompt KV is
+        written (a prefill may allocate overflow pages from the global
+        pool while a different microbatch's content is resident — without
+        this the next swap would clobber the fresh prompt KV)."""
+
+    def prefill(self, tokens: np.ndarray, slot: int, last_index: int,
+                has_global_pages: bool = True) -> jax.Array:
+        if has_global_pages:
+            self._prefill_residency(slot // self.mb_size)
+        lp = len(tokens)
+        if lp not in self._prefill_jits:
+            self._prefill_jits[lp] = jax.jit(functools.partial(
+                self._prefill_fn, cfg=self.cfg, rt=self.rt))
+        fn = self._prefill_jits[lp]
+        logits, self.caches = fn(self.params, jnp.asarray(tokens)[None],
+                                 self.caches, slot, last_index)
+        return logits
+
+    @staticmethod
+    def _prefill_fn(params, tokens, caches, slot, last_idx, *, cfg, rt):
+        """Prefill one sequence into batch-wide caches at ``slot``: slice
+        the slot row from every per-slot leaf, run the model prefill,
+        splice back."""
+        view = slot_view(caches, slot, 1)
+        logits, new_view = model_lib.prefill(
+            params, {"tokens": tokens}, cfg, rt, 0, caches=view,
+            last_index=jnp.asarray(last_idx).reshape(1))
+
+        # mask ring stale positions beyond the true length
+        def clean(c):
+            if "pos" in c:
+                c = {**c, "pos": jnp.where(c["pos"] <= last_idx,
+                                           c["pos"], -1)}
+            return c
+        new_view = {part: [clean(c) for c in new_view[part]]
+                    for part in ("scan", "tail")}
+        return logits[0], slot_merge(caches, new_view, slot)
+
+
+# ---------------------------------------------------------------------------
+# LocalBackend — the single-device path
+# ---------------------------------------------------------------------------
+
+
+class LocalBackend(_SlotCacheBackend):
+    name = "local"
+
+    def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
+                 mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
+                 sampling: SamplingParams, offloader=None):
+        super().__init__(cfg, params, rt, mb_size=mb_size,
+                         num_microbatches=num_microbatches, pool=pool,
+                         sampling=sampling)
+        self.offloader = offloader
+        self._decode_jit = jax.jit(functools.partial(
+            self._decode_fn, cfg=cfg, rt=rt, sampling=sampling,
+            mb_size=mb_size))
+
+    def _prefill_residency(self, mb: int) -> None:
+        if self.offloader is not None and self.pool.n_global_pages:
+            self.caches = self.offloader.ensure_resident(self.caches, mb)
+
+    def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
+               key, active: bool = True) -> List[DecodeResult]:
+        if not active:
+            return []
+        if self.offloader is not None:
+            self.caches = self.offloader.ensure_resident(self.caches, mb)
+        toks, self.caches = self._decode_jit(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(cur_pos), jnp.int32(mb * self.mb_size), key)
+        return [DecodeResult(mb=mb, tokens=np.asarray(toks))]
+
+    @staticmethod
+    def _decode_fn(params, caches, tokens, cur_pos, row0, key, *, cfg, rt,
+                   sampling, mb_size):
+        """One decode tick over an ``mb_size`` row view of the caches —
+        the full batch is never fed through the model, and rows outside
+        the microbatch are untouched by construction."""
+        view = slot_view(caches, row0, mb_size)
+        logits, new_view = model_lib.decode_step(
+            params, tokens, view, cur_pos, cfg, rt)
+        return sample(logits, key, sampling), slot_merge(caches, new_view,
+                                                         row0)
+
+    @property
+    def swap_count(self) -> int:
+        return self.offloader.swap_count if self.offloader else 0
+
+
+# ---------------------------------------------------------------------------
+# PipelinedBackend — the §4.3 circular schedule as a persistent stepper
+# ---------------------------------------------------------------------------
+
+
+class PipelinedBackend(_SlotCacheBackend):
+    name = "pipelined"
+
+    def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
+                 mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
+                 sampling: SamplingParams, n_stages: int = 2,
+                 offload: bool = False, mesh=None):
+        from repro.core import pipeline as PL
+        from repro.core.offload import DoubleBufferOffloader
+        if num_microbatches < n_stages:
+            raise ValueError(
+                f"continuous batching over a {n_stages}-stage pipe needs "
+                f"N_B >= N_S (got N_B={num_microbatches}); see §4.3 — a "
+                "microbatch must drain before its next injection")
+        super().__init__(cfg, params, rt, mb_size=mb_size,
+                         num_microbatches=num_microbatches, pool=pool,
+                         sampling=sampling)
+        self.n_stages = n_stages
+        self.pps, self.leftover = PL.split_layers(cfg, n_stages)
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < n_stages:
+                raise RuntimeError(
+                    f"pipelined backend needs >= {n_stages} devices for the "
+                    f"pod axis, have {len(devs)} — set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={n_stages} "
+                    "before initialising jax, or reduce --stages")
+            mesh = jax.sharding.Mesh(np.array(devs[:n_stages]), ("pod",))
+        self.mesh = mesh
+        # per-stage input activations: act[s] feeds stage s next tick
+        self.act = jnp.zeros((n_stages, mb_size, 1, cfg.d_model),
+                             rt.compute_dtype)
+        # shift register of in-flight injections: entry for stage s is the
+        # (mb, positions-at-injection) whose activation sits in act[s]
+        self._entries: List[Optional[tuple]] = [None] * n_stages
+        self._tick_jit = jax.jit(functools.partial(
+            PL.pipeline_decode_tick, cfg=cfg, rt=rt, sampling=sampling,
+            n_stages=n_stages, mb_size=mb_size, mesh=mesh))
+
+        # §4.2 offloading, per stage: stage s double-buffers its own
+        # period-slice of the global pools; the epilogue (leftover periods
+        # + tail) forms one extra stage-unit keyed to the draining mb.
+        self._stage_off: List = []
+        self._epi_off = None
+        if offload and pool.n_global_pages:
+            self._stage_off = [DoubleBufferOffloader(pool, num_microbatches)
+                               for _ in range(n_stages)]
+            if self._unit_has_paged(self._epi_view()):
+                self._epi_off = DoubleBufferOffloader(pool, num_microbatches)
+
+    # -- per-stage offload residency ---------------------------------------
+
+    @staticmethod
+    def _unit_has_paged(view: dict) -> bool:
+        return any(isinstance(c, dict) and "k_pages" in c
+                   for part in ("scan", "tail") for c in view[part])
+
+    def _stage_view(self, s: int) -> dict:
+        lo, hi = s * self.pps, (s + 1) * self.pps
+        return {"scan": [jax.tree.map(lambda x: x[lo:hi], c)
+                         for c in self.caches["scan"]], "tail": []}
+
+    def _epi_view(self) -> dict:
+        lo = self.n_stages * self.pps
+        scan = [jax.tree.map(lambda x: x[lo:], c)
+                for c in self.caches["scan"]] if self.leftover else []
+        return {"scan": scan, "tail": self.caches["tail"]}
+
+    def _splice_scan(self, view: dict, lo: int) -> None:
+        new_scan = self.caches["scan"]
+        if view["scan"]:                # epilogue views may carry tail only
+            new_scan = [jax.tree.map(
+                lambda full, part: full.at[lo:lo + part.shape[0]].set(
+                    part.astype(full.dtype)), c_full, c_new)
+                for c_full, c_new in zip(self.caches["scan"], view["scan"])]
+        self.caches = {"scan": new_scan,
+                       "tail": view["tail"] or self.caches["tail"]}
+
+    def _ensure_stage_resident(self, s: int, mb: int) -> None:
+        if not self._stage_off:
+            return
+        view = self._stage_view(s)
+        new = self._stage_off[s].ensure_resident(view, mb)
+        if new is not view:
+            self._splice_scan(new, s * self.pps)
+
+    def _ensure_epi_resident(self, mb: int) -> None:
+        if self._epi_off is None:
+            return
+        view = self._epi_view()
+        new = self._epi_off.ensure_resident(view, mb)
+        if new is not view:
+            self._splice_scan({"scan": new["scan"], "tail": new["tail"]},
+                              self.n_stages * self.pps)
+
+    def _prefill_residency(self, mb: int) -> None:
+        # a prefill writes every period's pools: all stage units + epilogue
+        for s in range(self.n_stages):
+            self._ensure_stage_resident(s, mb)
+        self._ensure_epi_resident(mb)
+
+    # -- the stepper --------------------------------------------------------
+
+    def busy_microbatches(self) -> set:
+        return {e[0] for e in self._entries if e is not None}
+
+    def pending(self) -> bool:
+        return any(e is not None for e in self._entries)
+
+    def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
+               key, active: bool = True) -> List[DecodeResult]:
+        entries = list(self._entries)
+        entries[0] = (mb, np.asarray(cur_pos, np.int32).copy()) \
+            if active else None
+        if not any(e is not None for e in entries):
+            return []
+
+        mb_assign = np.full((self.n_stages,), -1, np.int32)
+        pos_stage = np.zeros((self.n_stages, self.mb_size), np.int32)
+        for s, e in enumerate(entries):
+            if e is not None:
+                mb_assign[s] = e[0]
+                pos_stage[s] = e[1]
+                self._ensure_stage_resident(s, e[0])
+        drained = entries[-1]
+        if drained is not None:
+            self._ensure_epi_resident(drained[0])
+
+        toks, self.caches, self.act = self._tick_jit(
+            self.params, self.caches, self.act,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(mb_assign),
+            jnp.asarray(pos_stage), key)
+        self._entries = [None] + entries[:-1]
+        if drained is None:
+            return []
+        return [DecodeResult(mb=drained[0], tokens=np.asarray(toks))]
+
+    @property
+    def swap_count(self) -> int:
+        n = sum(o.swap_count for o in self._stage_off)
+        return n + (self._epi_off.swap_count if self._epi_off else 0)
+
+
+def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
+                 sampling, offloader=None, n_stages=2,
+                 mesh=None) -> ExecutionBackend:
+    """Engine-side factory: ``kind`` is "local", "pipelined", or an already
+    constructed :class:`ExecutionBackend` (passed through)."""
+    if isinstance(kind, ExecutionBackend):
+        return kind
+    if kind == "local":
+        return LocalBackend(cfg, params, rt, mb_size=mb_size,
+                            num_microbatches=num_microbatches, pool=pool,
+                            sampling=sampling, offloader=offloader)
+    if kind == "pipelined":
+        return PipelinedBackend(cfg, params, rt, mb_size=mb_size,
+                                num_microbatches=num_microbatches, pool=pool,
+                                sampling=sampling, n_stages=n_stages,
+                                offload=offloader is not None, mesh=mesh)
+    raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

@@ -7,31 +7,40 @@ and the slot is immediately replenished from the queue (prefill), matching
 the paper's workload ("replenishing them as the previous requests are
 completed").
 
+Compute is delegated to a pluggable :mod:`repro.serving.backend`: the
+engine keeps every piece of host-side bookkeeping (queue, slots, page
+allocator, page table, positions, stats) and the backend owns the device
+caches and jit entry points.  ``backend="local"`` is the single-device
+path; ``backend="pipelined"`` runs the same continuous-batching loop
+through the ``N_S``-stage SPMD pipeline (``repro.core.pipeline``), where a
+microbatch's decode tick enters the pipe at stage 0 and drains ``N_S − 1``
+engine ticks later — the engine therefore applies decode results by the
+microbatch id they carry, not the one it just injected.
+
 KV placement follows §4.2: microbatch ``m`` draws overflow pages from global
-pool ``G_{m%2}``; an optional :class:`repro.core.offload.DoubleBufferOffloader`
+pool ``G_{m%2}``; the :class:`repro.core.offload.DoubleBufferOffloader`
 swaps the non-resident pool to host between ticks (on TPU this is the
 HBM↔host DMA the paper overlaps with compute; on CPU it is an explicit copy
 — same bookkeeping, same schedule).
 
 Prefill is exact-length (rounded to a multiple of 8 for attention-only
-archs) and one sequence at a time; decode is one fully-batched jit per
-microbatch.  All jit entry points have static shapes.
+archs) and one sequence at a time; decode is one jit over the microbatch's
+``mb_size`` cache rows.  All jit entry points have static shapes.
 """
 
 from __future__ import annotations
 
-import functools
 from collections import deque
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models import model as model_lib
 from repro.models.common import Runtime
 from repro.serving import kv_cache as kvc
+from repro.serving.backend import DecodeResult, ExecutionBackend, make_backend
 from repro.serving.request import (EngineStats, Request, SamplingParams,
                                    SequenceState, Status)
 from repro.serving.sampler import sample
@@ -42,7 +51,8 @@ class OfflineEngine:
                  mb_size: int = 4, num_microbatches: int = 1,
                  pool: Optional[kvc.PoolConfig] = None,
                  sampling: Optional[SamplingParams] = None,
-                 offloader=None, seed: int = 0):
+                 offloader=None, seed: int = 0,
+                 backend="local", n_stages: int = 2, mesh=None):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -51,11 +61,15 @@ class OfflineEngine:
         self.batch = mb_size * num_microbatches
         self.pool = pool or kvc.PoolConfig()
         self.sampling = sampling or SamplingParams()
-        self.offloader = offloader
         self.key = jax.random.PRNGKey(seed)
 
+        self.backend: ExecutionBackend = make_backend(
+            backend, cfg, params, rt, mb_size=mb_size,
+            num_microbatches=num_microbatches, pool=self.pool,
+            sampling=self.sampling, offloader=offloader, n_stages=n_stages,
+            mesh=mesh)
+
         self.alloc = kvc.PageAllocator(self.pool)
-        self.caches = kvc.build_paged_caches(cfg, self.batch, self.pool, rt)
         self.table = np.zeros((self.batch, self.pool.max_pages_per_seq),
                               np.int32)
         self.cur_pos = np.zeros((self.batch,), np.int32)   # next position
@@ -65,16 +79,90 @@ class OfflineEngine:
         self.queue: deque = deque()
         self.finished: List[SequenceState] = []
         self.stats = EngineStats()
-        self._decode_jit = jax.jit(functools.partial(
-            self._decode_fn, cfg=cfg, rt=rt, sampling=self.sampling),
-            static_argnames=("mb",))
-        self._prefill_jits: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    # planned construction (DeServe §4.3: N_B, batch, pools from the link)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_plan(cls, cfg: ModelConfig, params, rt: Runtime, *,
+                  n_stages: int, stage_time: float, latency: float,
+                  m_kv_bytes: float, page_size: int = 16,
+                  max_pages_per_seq: int = 16, bandwidth: float = 0.0,
+                  use_offload: bool = True, max_microbatches: int = 64,
+                  choice=None, mb_size_cap: int = 0, backend="local",
+                  sampling: Optional[SamplingParams] = None, seed: int = 0,
+                  mesh=None) -> "OfflineEngine":
+        """Build an engine whose (N_B, per-microbatch batch, pool split) are
+        *derived* from measured stage time + link latency via
+        ``repro.core.scheduler.plan_schedule`` — the paper's planner —
+        instead of hand-set flags.
+
+        ``m_kv_bytes`` is the per-stage KV budget; ``choice`` may be a
+        pre-computed :class:`repro.core.scheduler.ScheduleChoice` (then the
+        planner is skipped and the choice is honored as-is).
+        ``mb_size_cap`` bounds the per-microbatch batch for reduced/CPU
+        runs where the planned batch would not fit the host.
+        """
+        from repro.core import offload as offload_lib
+        from repro.core.scheduler import plan_schedule
+        if not bandwidth:
+            bandwidth = offload_lib.TPU_HOST_DMA_BW
+        page_bytes = kvc.kv_bytes_per_page(
+            cfg, kvc.PoolConfig(page_size=page_size),
+            dtype_bytes=jnp.dtype(rt.compute_dtype).itemsize)
+        if page_bytes == 0:
+            raise ValueError(
+                f"{cfg.name}: from_plan needs at least one paged-attention "
+                "layer (pure-recurrent archs have no KV pools to plan)")
+        kv_bytes_per_seq = page_bytes * max_pages_per_seq
+        if choice is None:
+            choice = plan_schedule(
+                n_stages=n_stages, stage_time=stage_time, latency=latency,
+                m_kv_bytes=m_kv_bytes, kv_bytes_per_seq=kv_bytes_per_seq,
+                offload_bandwidth=bandwidth, use_offload=use_offload,
+                max_microbatches=max_microbatches)
+        if choice.offload:
+            plan = offload_lib.OffloadPlan.derive(
+                m_kv_bytes=m_kv_bytes, page_bytes=page_bytes,
+                page_size=page_size, max_pages_per_seq=max_pages_per_seq,
+                bandwidth=bandwidth, stage_time=stage_time,
+                n_microbatches=choice.n_microbatches)
+            pool = plan.pool
+        else:
+            pool = kvc.PoolConfig(
+                page_size=page_size,
+                n_local_pages=max(2, int(m_kv_bytes // page_bytes)),
+                n_global_pages=0, max_pages_per_seq=max_pages_per_seq)
+        mb_size = max(1, choice.per_mb_batch)
+        if mb_size_cap:
+            mb_size = min(mb_size, mb_size_cap)
+        offloader = None
+        if choice.offload and pool.n_global_pages:
+            offloader = offload_lib.DoubleBufferOffloader(
+                pool, choice.n_microbatches)
+        eng = cls(cfg, params, rt, mb_size=mb_size,
+                  num_microbatches=choice.n_microbatches, pool=pool,
+                  sampling=sampling, offloader=offloader, seed=seed,
+                  backend=backend, n_stages=n_stages, mesh=mesh)
+        eng.schedule_choice = choice
+        return eng
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
 
     def submit(self, requests: List[Request]) -> None:
+        cap = self.pool.max_pages_per_seq * self.pool.page_size
+        for r in requests:          # validate all before enqueueing any,
+            if len(r.prompt) >= cap:  # so a raise never half-admits a batch
+                raise ValueError(
+                    f"request {r.request_id}: prompt length {len(r.prompt)} "
+                    f">= per-sequence KV capacity {cap} tokens "
+                    f"(max_pages_per_seq={self.pool.max_pages_per_seq} x "
+                    f"page_size={self.pool.page_size}) — no generation "
+                    "budget would remain; raise max_pages_per_seq or "
+                    "truncate the prompt")
         for r in requests:
             self.queue.append(SequenceState(request=r))
 
@@ -85,11 +173,12 @@ class OfflineEngine:
         return self.finished
 
     def step(self) -> bool:
-        """One engine tick: reap finished, admit new, decode one microbatch.
-        Returns False when fully drained."""
+        """One engine tick: reap finished, admit new, tick one microbatch
+        through the backend.  Returns False when fully drained."""
         self._reap()
         self._admit()
-        if not self.active.any() and not self.queue:
+        if not self.active.any() and not self.queue and \
+                not self.backend.pending():
             return False
         mb = self.stats.steps % self.num_microbatches
         self._decode_microbatch(mb)
@@ -117,11 +206,16 @@ class OfflineEngine:
                 self.cur_pos[slot] = 0
                 changed = True
         if changed:
-            self.caches = kvc.set_page_table(self.caches, self.table)
+            self.backend.set_page_table(self.table)
 
     def _admit(self) -> None:
+        # microbatches with a tick in flight must not have their cache rows
+        # (or page-table rows) rewritten under them — skip until drained
+        busy = self.backend.busy_microbatches()
         for slot in range(self.batch):
             if self.slots[slot] is not None or not self.queue:
+                continue
+            if self._mb_of_slot(slot) in busy:
                 continue
             seq = self.queue.popleft()
             try:
@@ -147,11 +241,12 @@ class OfflineEngine:
                          self.pool.max_pages_per_seq * self.pool.page_size)
                     // self.pool.page_size)
         gp = self._mb_of_slot(slot) % 2 if self.pool.n_global_pages else None
-        self.alloc.allocate(slot, n_pages, global_pool=gp)
+        pages = self.alloc.allocate(slot, n_pages, global_pool=gp)
         self.table[slot] = self.alloc.table_row(slot)
+        has_global = any(p >= self.pool.n_local_pages for p in pages)
 
-        self.caches = kvc.reset_slot(self.caches, self.cfg, slot, self.rt)
-        self.caches = kvc.set_page_table(self.caches, self.table)
+        self.backend.reset_slot(slot)
+        self.backend.set_page_table(self.table)
 
         # engine-side generation budget: never outgrow the page allocation
         seq.budget = min(seq.request.sampling.max_new_tokens,
@@ -160,9 +255,8 @@ class OfflineEngine:
         lp = self._prefill_len(plen)
         toks = np.zeros((lp,), np.int32)
         toks[:plen] = prompt
-        fn = self._get_prefill_jit(lp)
-        logits, self.caches = fn(self.params, jnp.asarray(toks)[None],
-                                 self.caches, slot, plen - 1)
+        logits = self.backend.prefill(toks, slot, plen - 1,
+                                      has_global_pages=has_global)
         self.key, sub = jax.random.split(self.key)
         first = int(sample(logits, sub, self.sampling))
         seq.generated.append(first)
@@ -174,68 +268,6 @@ class OfflineEngine:
         self.stats.prefill_tokens += plen
         self.stats.decode_tokens += 1
 
-    def _get_prefill_jit(self, lp: int):
-        if lp not in self._prefill_jits:
-            self._prefill_jits[lp] = jax.jit(functools.partial(
-                self._prefill_fn, cfg=self.cfg, rt=self.rt),
-                static_argnames=())
-        return self._prefill_jits[lp]
-
-    @staticmethod
-    def _prefill_fn(params, tokens, caches, slot, last_idx, *, cfg, rt):
-        """Prefill one sequence into batch-wide caches at ``slot``.
-
-        Works on a batch-1 view: slice slot row from every cache leaf, run the
-        model prefill, splice back.
-        """
-        def take(leaf, stacked):
-            def one(x):
-                if x.ndim == 0:
-                    return x
-                return jax.lax.dynamic_slice_in_dim(
-                    x, slot, 1, axis=1 if stacked else 0)
-            return jax.tree.map(one, leaf)
-
-        def put(full, part, stacked):
-            def one(f, p):
-                if f.ndim == 0:
-                    return f
-                return jax.lax.dynamic_update_slice_in_dim(
-                    f, p.astype(f.dtype), slot, axis=1 if stacked else 0)
-            return jax.tree.map(one, full, part)
-
-        # pools/page tables are shared; batch-ful leaves are sliced
-        def split(c, stacked):
-            shared = {k: v for k, v in c.items() if k.endswith("_pages")}
-            perslot = {k: v for k, v in c.items() if not k.endswith("_pages")}
-            return shared, perslot
-
-        view = {"scan": [], "tail": []}
-        for part, stacked in (("scan", True), ("tail", False)):
-            for c in caches[part]:
-                shared, perslot = split(c, stacked)
-                view[part].append({**shared, **take(perslot, stacked)})
-
-        logits, new_view = model_lib.prefill(
-            params, {"tokens": tokens}, cfg, rt, 0, caches=view,
-            last_index=jnp.asarray(last_idx).reshape(1))
-        # mask ring stale positions beyond the true length
-        def clean(c):
-            if "pos" in c:
-                c = {**c, "pos": jnp.where(c["pos"] <= last_idx, c["pos"], -1)}
-            return c
-        new_caches = {"scan": [], "tail": []}
-        for part, stacked in (("scan", True), ("tail", False)):
-            for c_old, c_new in zip(caches[part], new_view[part]):
-                c_new = clean(c_new)
-                shared, perslot_new = split(c_new, stacked)
-                _, perslot_old = split(c_old, stacked)
-                merged = {**{k: v for k, v in c_new.items()
-                             if k.endswith("_pages")},
-                          **put(perslot_old, perslot_new, stacked)}
-                new_caches[part].append(merged)
-        return logits[0], new_caches
-
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
@@ -243,48 +275,47 @@ class OfflineEngine:
     def _decode_microbatch(self, mb: int) -> None:
         lo = mb * self.mb_size
         hi = lo + self.mb_size
-        if not self.active[lo:hi].any():
+        mb_active = bool(self.active[lo:hi].any())
+        if not mb_active and not self.backend.pending():
             return
-        if self.offloader is not None:
-            self.caches = self.offloader.ensure_resident(self.caches, mb)
-            self.stats.swaps = self.offloader.swap_count
-        tokens = np.zeros((self.batch,), np.int32)
-        for slot in range(lo, hi):
+        tokens = np.zeros((self.mb_size,), np.int32)
+        for i, slot in enumerate(range(lo, hi)):
             seq = self.slots[slot]
             if seq is not None and seq.generated:
-                tokens[slot] = seq.generated[-1]
+                tokens[i] = seq.generated[-1]
         self.key, sub = jax.random.split(self.key)
-        next_tokens, self.caches = self._decode_jit(
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.cur_pos), sub, mb=mb)
-        next_np = np.asarray(next_tokens)
-        for slot in range(lo, hi):
+        results = self.backend.decode(mb, tokens, self.cur_pos[lo:hi], sub,
+                                      active=mb_active)
+        self.stats.swaps = self.backend.swap_count
+        for res in results:
+            self._apply_result(res)
+
+    def _apply_result(self, res: DecodeResult) -> None:
+        """Book one drained microbatch tick (possibly for an earlier
+        microbatch than the one just injected — pipelined backends drain
+        with N_S − 1 ticks of latency)."""
+        lo = res.mb * self.mb_size
+        for i, slot in enumerate(range(lo, lo + self.mb_size)):
             seq = self.slots[slot]
             if seq is None or seq.is_done():
                 continue            # finished at prefill (eos/budget): reap
                                     # next tick, never extend
-            seq.generated.append(int(next_np[slot]))
+            seq.generated.append(int(res.tokens[i]))
             self.cur_pos[slot] += 1
             self.stats.decode_tokens += 1
             need = self.cur_pos[slot] + 1
             have = len(self.alloc.pages_of(slot)) * self.pool.page_size
             if need > have:
-                gp = mb % 2 if self.pool.n_global_pages else None
+                gp = res.mb % 2 if self.pool.n_global_pages else None
                 self.alloc.extend(slot, global_pool=gp)
                 self.table[slot] = self.alloc.table_row(slot)
-                self.caches = kvc.set_page_table(self.caches, self.table)
-
-    @staticmethod
-    def _decode_fn(params, caches, tokens, cur_pos, key, *, cfg, rt,
-                   sampling, mb):
-        logits, new_caches = model_lib.decode_step(
-            params, tokens, caches, cur_pos, cfg, rt)
-        return sample(logits, key, sampling), new_caches
+                self.backend.set_page_table(self.table)
 
     # ------------------------------------------------------------------
 
     def throughput_report(self) -> dict:
         return {
+            "backend": self.backend.name,
             "prefill_tokens": self.stats.prefill_tokens,
             "decode_tokens": self.stats.decode_tokens,
             "total_tokens": self.stats.total_tokens,

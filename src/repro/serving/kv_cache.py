@@ -207,6 +207,46 @@ def reset_slot(caches: dict, cfg: ModelConfig, slot: int,
     return _map_paged_leaves(caches, clear)
 
 
+def _split_shared(c: dict):
+    """Split one layer cache dict into (shared pool leaves, per-slot
+    leaves).  Pool leaves (``*_pages``) are batch-global; everything else
+    (page tables, rings, recurrent states) has a batch axis."""
+    shared = {k: v for k, v in c.items() if k.endswith("_pages")}
+    per = {k: v for k, v in c.items() if not k.endswith("_pages")}
+    return shared, per
+
+
+def slot_view(caches: dict, start, size: int) -> dict:
+    """A ``size``-row view of the batch axis starting at ``start`` (traced
+    values ok).  Per-slot leaves are batched on axis 1 in "scan" (period-
+    stacked) and axis 0 in "tail"; shared page pools pass through whole."""
+    out = {"scan": [], "tail": []}
+    for part, axis in (("scan", 1), ("tail", 0)):
+        for c in caches[part]:
+            shared, per = _split_shared(c)
+            view = jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
+                x, start, size, axis=axis), per)
+            out[part].append({**shared, **view})
+    return out
+
+
+def slot_merge(caches: dict, view: dict, start) -> dict:
+    """Splice an updated row view back into the batch-wide caches.  Pool
+    leaves are taken from the view (decode/prefill write KV into them);
+    per-slot rows are spliced at ``start``."""
+    out = {"scan": [], "tail": []}
+    for part, axis in (("scan", 1), ("tail", 0)):
+        for c_old, c_new in zip(caches[part], view[part]):
+            shared_new, per_new = _split_shared(c_new)
+            _, per_old = _split_shared(c_old)
+            merged = jax.tree.map(
+                lambda f, p: jax.lax.dynamic_update_slice_in_dim(
+                    f, p.astype(f.dtype), start, axis=axis),
+                per_old, per_new)
+            out[part].append({**shared_new, **merged})
+    return out
+
+
 def kv_bytes_per_page(cfg: ModelConfig, pool: PoolConfig,
                       dtype_bytes: int = 2) -> int:
     """Bytes one page occupies across all paged layers (k+v)."""

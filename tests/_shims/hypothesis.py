@@ -1,0 +1,66 @@
+"""Minimal stand-in for the `hypothesis` API surface this repo uses.
+
+Loaded only when the real package is unavailable (see ``conftest.py``):
+``@given`` then runs the test body over a deterministic pseudo-random
+sample of the strategy space instead of hypothesis' adaptive search —
+the properties are still exercised, just without shrinking.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rnd = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s._draw(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-bound parameters from pytest's fixture
+        # resolution (the real hypothesis does the same)
+        sig = inspect.signature(fn)
+        run.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        if hasattr(run, "__wrapped__"):
+            del run.__wrapped__
+        return run
+    return deco

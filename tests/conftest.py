@@ -2,6 +2,14 @@
 real single CPU device; only the SPMD subprocess tests use 8/512 fake
 devices (they spawn fresh interpreters)."""
 
+import os
+import sys
+
+try:                                    # gate, don't require: the container
+    import hypothesis  # noqa: F401     # may not ship hypothesis
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
 import jax
 import jax.numpy as jnp
 import pytest
