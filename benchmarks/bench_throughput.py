@@ -2,28 +2,26 @@
 three serving policies, from the calibrated discrete-event simulator —
 plus a measured engine comparison of the two execution backends."""
 
-import time
-
 from repro.core.simulator import PAPER_TABLE4, table4
 
 LATS = (0.0, 0.016, 0.032, 0.064, 0.256)
 
 
 def _engine_backends(rows, quick: bool):
-    """Measured tok/s through the one engine on both execution backends
+    """Measured tok/s through the LLM front end on both execution backends
     (reduced config; pipelined runs 2 stages when the host has the
-    devices, else a 1-stage pipe — same code path, no fake-device fork)."""
+    devices, else a 1-stage pipe — same code path, no fake-device fork).
+    Timing comes from the engine's own wall clock (``stats.wall_time_s``),
+    with warmup steps (jit compiles + pipe fill) snapshot-subtracted."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.config import get_arch, reduced_config
-    from repro.core.offload import DoubleBufferOffloader
     from repro.models import model as M
     from repro.models.common import Runtime
-    from repro.serving.engine import OfflineEngine
     from repro.serving.kv_cache import PoolConfig
-    from repro.serving.request import Request, SamplingParams
+    from repro.serving.llm import LLM, EngineConfig, SamplingParams
 
     rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
     cfg = reduced_config(get_arch("yi-9b"))
@@ -31,34 +29,41 @@ def _engine_backends(rows, quick: bool):
     pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
                       max_pages_per_seq=8)
     n_req = 6 if quick else 12
-    sp = SamplingParams(temperature=0.0, max_new_tokens=8)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=16 if quick else 24)
     n_stages = 2 if len(jax.devices()) >= 2 else 1
 
     print("\n-- engine backends (measured, reduced config) --")
     for backend in ("local", "pipelined"):
-        eng = OfflineEngine(cfg, params, rt, mb_size=2, num_microbatches=2,
-                            pool=pool, sampling=sp,
-                            offloader=DoubleBufferOffloader(pool, 2),
-                            backend=backend, n_stages=n_stages)
+        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+            mb_size=2, num_microbatches=2, pool=pool, offload=True,
+            backend=backend, n_stages=n_stages))
         rng = np.random.RandomState(0)
-        # fixed prompt length: one prefill compile, burned off in warmup so
-        # the timed section measures steady-state serving, not jit compiles
-        eng.submit([Request(i, list(rng.randint(1, cfg.vocab_size, 8)), sp)
-                    for i in range(n_req)])
-        for _ in range(2 * (2 + n_stages)):     # warmup: compile + fill
-            eng.step()
-        warm = eng.stats.total_tokens
-        t0 = time.perf_counter()
-        eng.run(max_steps=5000)
-        dt = time.perf_counter() - t0
-        rep = eng.throughput_report()
-        tps = (rep["total_tokens"] - warm) / dt
+        # fixed prompt length: one prefill shape.  Warmup is a full pass of
+        # the same workload, so every jit variant compiles there (including
+        # the replenishment-prefill recompile after the caches pick up the
+        # pipeline's NamedSharding) and the timed pass is pure steady state.
+        prompts = [list(rng.randint(1, cfg.vocab_size, 8))
+                   for _ in range(n_req)]
+        llm.generate(prompts, sp, max_steps=5000)       # warmup pass
+        stats = llm.engine.stats
+        warm_tok = stats.total_tokens
+        warm_dec = stats.decode_tokens
+        warm_wall = stats.wall_time_s
+        llm.generate(prompts, sp, max_steps=5000)       # timed pass
+        rep = llm.stats()
+        dt = rep["wall_time_s"] - warm_wall
+        tps = (rep["total_tokens"] - warm_tok) / dt
+        decode_tps = (rep["decode_tokens"] - warm_dec) / dt
         print(f"  {backend:10s} {tps:8.1f} tok/s "
-              f"({rep['finished']} reqs, {rep['swaps']} swaps, "
+              f"({decode_tps:.1f} decode tok/s, {rep['finished']} reqs, "
+              f"{rep['swaps']} swaps, mean latency "
+              f"{rep['mean_latency_steps']:.0f} steps, "
               f"stages={n_stages if backend == 'pipelined' else 1})")
         rows.append({"bench": "engine_backend", "policy": backend,
-                     "tps": tps, "tokens": rep["total_tokens"],
-                     "swaps": rep["swaps"]})
+                     "tps": tps, "decode_tps": decode_tps,
+                     "tokens": rep["total_tokens"],
+                     "swaps": rep["swaps"],
+                     "mean_latency_steps": rep["mean_latency_steps"]})
 
 
 def run(quick: bool = False):

@@ -1,0 +1,79 @@
+"""Perf-regression gate: compare a fresh ``BENCH_throughput.json`` against
+the committed baseline.
+
+Compares the measured engine decode tok/s (``bench == "engine_backend"``
+rows, ``decode_tps`` falling back to ``tps``) per backend.  CI machines are
+noisy and heterogeneous, so the threshold is generous (default: fail only
+when a backend regresses more than 30% below baseline).
+
+    python benchmarks/check_regression.py --baseline BENCH_throughput.json \
+        --new bench_new.json [--threshold 0.30]
+
+Exit code 1 on regression, 0 otherwise (including when either file has no
+comparable rows — a schema change should not hard-fail the gate).
+
+Caveat: a committed baseline measured on one machine gates a run on
+another, so part of the margin absorbs machine-speed differences, not
+code.  CI therefore passes a wider ``--threshold``; the long-term plan
+(ROADMAP) is to re-baseline from a prior CI artifact of the same runner
+class and tighten.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _tps_by_backend(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for row in data.get("rows", []):
+        if row.get("bench") != "engine_backend":
+            continue
+        tps = row.get("decode_tps", row.get("tps"))
+        if tps is not None:           # keep 0.0 — a zero-throughput run
+            out[row.get("policy", "?")] = float(tps)   # must trip the gate
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_throughput.json")
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional drop vs baseline")
+    args = ap.parse_args()
+
+    try:
+        base = _tps_by_backend(args.baseline)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate: no usable baseline ({e}) — skipping")
+        return 0
+    new = _tps_by_backend(args.new)
+    if not base or not new:
+        print("perf gate: no comparable engine_backend rows — skipping")
+        return 0
+
+    failed = False
+    for backend, b_tps in sorted(base.items()):
+        n_tps = new.get(backend)
+        if n_tps is None:
+            print(f"perf gate: {backend}: missing from new run — skipping")
+            continue
+        if b_tps <= 0:
+            print(f"perf gate: {backend}: baseline is {b_tps:.1f} — "
+                  "nothing to compare, skipping")
+            continue
+        drop = 1.0 - n_tps / b_tps
+        status = "OK"
+        if drop > args.threshold:
+            status = "REGRESSION"
+            failed = True
+        print(f"perf gate: {backend}: baseline {b_tps:.1f} -> {n_tps:.1f} "
+              f"decode tok/s ({-drop:+.1%}) [{status}]")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,20 @@
 """End-to-end offline serving driver (deliverable b): serve a batched
-request workload through the full DeServe stack and account profitability.
+request workload through the full DeServe stack via the ``LLM`` API and
+account profitability.
 
 This is the paper's §5 workload shrunk to CPU: random prompt/generation
-lengths, replenish-on-finish, stats over the run.  Swap --arch for any of
-the 11 registered architectures; swap --backend to run the same engine
-through the SPMD pipeline (the pod axis is emulated with host devices).
+lengths, replenish-on-finish, stats over the run — with a *mixed* sampling
+workload: greedy, temperature, top-k, and top-p requests all ride the same
+continuously-batched pipe, each honoring its own ``SamplingParams``.  Swap
+--arch for any of the 11 registered architectures; swap --backend to run
+the same engine through the SPMD pipeline (the pod axis is emulated with
+host devices).
 
     PYTHONPATH=src python examples/offline_serving.py [--arch gemma3-1b]
         [--backend pipelined --stages 2]
 """
 
 import argparse
-import time
 
 
 def main():
@@ -19,7 +22,6 @@ def main():
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--backend", default="local",
                     choices=["local", "pipelined"])
     ap.add_argument("--stages", type=int, default=1,
@@ -31,46 +33,47 @@ def main():
         from repro.launch.serve import _ensure_host_devices
         _ensure_host_devices(args.stages)
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.config import get_arch, reduced_config
     from repro.core.cost_model import PLATFORMS, profit_per_hour
-    from repro.core.offload import DoubleBufferOffloader
-    from repro.models import model as M
-    from repro.models.common import Runtime
-    from repro.serving.engine import OfflineEngine
     from repro.serving.kv_cache import PoolConfig
-    from repro.serving.request import Request, SamplingParams
+    from repro.serving.llm import LLM, EngineConfig, SamplingParams
 
-    cfg = reduced_config(get_arch(args.arch))
-    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
-    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
-
-    pool = PoolConfig(page_size=8, n_local_pages=48, n_global_pages=12,
-                      max_pages_per_seq=8)
-    sp = SamplingParams(temperature=args.temperature, top_p=0.95,
-                        max_new_tokens=args.max_new)
-    engine = OfflineEngine(cfg, params, rt, mb_size=2, num_microbatches=3,
-                           pool=pool, sampling=sp,
-                           offloader=DoubleBufferOffloader(pool, 3),
-                           backend=args.backend, n_stages=args.stages)
+    llm = LLM(args.arch, config=EngineConfig(
+        mb_size=2,
+        num_microbatches=max(3, args.stages),
+        pool=PoolConfig(page_size=8, n_local_pages=48, n_global_pages=12,
+                        max_pages_per_seq=8),
+        offload=True, backend=args.backend, n_stages=args.stages))
 
     rng = np.random.RandomState(1)
-    reqs = [Request(i, list(rng.randint(1, cfg.vocab_size,
-                                        rng.randint(4, 20))), sp)
-            for i in range(args.requests)]
-    engine.submit(reqs)
-    t0 = time.perf_counter()
-    done = engine.run()
-    dt = time.perf_counter() - t0
+    prompts = [list(rng.randint(1, llm.cfg.vocab_size, rng.randint(4, 20)))
+               for _ in range(args.requests)]
+    # one engine, four sampling policies — each request keeps its own
+    policies = [
+        SamplingParams(temperature=0.0, max_new_tokens=args.max_new),
+        SamplingParams(temperature=0.8, top_p=0.95,
+                       max_new_tokens=args.max_new, logprobs=True),
+        SamplingParams(temperature=1.0, top_k=16,
+                       max_new_tokens=args.max_new),
+        SamplingParams(temperature=0.9, top_p=0.9, top_k=32,
+                       max_new_tokens=args.max_new),
+    ]
+    sps = [policies[i % len(policies)] for i in range(args.requests)]
 
-    rep = engine.throughput_report()
-    tps = rep["total_tokens"] / dt
-    print(f"{cfg.name} [{rep['backend']}]: served {rep['finished']} "
-          f"requests, {rep['total_tokens']} tokens in {dt:.1f}s "
-          f"({tps:.1f} tok/s on this CPU host)")
+    outs = llm.generate(prompts, sps)
+    for o in outs[:4]:
+        lp = (f" mean_lp={np.mean(o.logprobs):.2f}"
+              if o.logprobs else "")
+        print(f"  req {o.request_id}: {len(o.token_ids)} toks, "
+              f"finish={o.finish_reason}{lp}")
+
+    rep = llm.stats()
+    print(f"{llm.cfg.name} [{rep['backend']}]: served {rep['finished']} "
+          f"requests, {rep['total_tokens']} tokens in "
+          f"{rep['wall_time_s']:.1f}s ({rep['decode_tok_per_s']:.1f} decode "
+          f"tok/s on this CPU host; mean latency "
+          f"{rep['mean_latency_steps']:.0f} steps)")
     print(f"offload swaps: {rep['swaps']}")
     print("\nif this were an 8x4090 mining-rate pipeline at 450 tok/s:")
     for name in ("mining", "ionet", "cloud"):

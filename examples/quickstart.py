@@ -1,49 +1,45 @@
 """Quickstart: load an assigned architecture at CPU scale, serve a few
-requests offline, inspect the DeServe schedule math.
+requests offline through the ``LLM`` API, inspect the DeServe schedule math.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_arch, list_archs, reduced_config
+from repro.config import list_archs
 from repro.core.cost_model import min_throughput
-from repro.core.offload import DoubleBufferOffloader
 from repro.core.scheduler import (optimal_microbatches, plan_schedule,
                                   schedule_diagram)
-from repro.models import model as M
-from repro.models.common import Runtime
-from repro.serving.engine import OfflineEngine
 from repro.serving.kv_cache import PoolConfig
-from repro.serving.request import Request, SamplingParams
+from repro.serving.llm import LLM, EngineConfig, SamplingParams
 
 
 def main():
     print("registered architectures:", ", ".join(list_archs()))
 
-    # 1. a reduced-config model of an assigned arch (CPU-sized, same family)
-    cfg = reduced_config(get_arch("yi-9b"))
-    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
-    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
-    print(f"\nmodel: {cfg.name}, {cfg.param_count()/1e6:.1f}M params")
+    # 1. the LLM front end: a reduced-config model of an assigned arch
+    #    (CPU-sized, same family) behind the DeServe serving engine —
+    #    paged KV + double-buffer offload
+    llm = LLM("yi-9b", config=EngineConfig(
+        mb_size=2, num_microbatches=2,
+        pool=PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
+                        max_pages_per_seq=8)))
+    print(f"\nmodel: {llm.cfg.name}, {llm.cfg.param_count()/1e6:.1f}M params")
 
-    # 2. the DeServe serving engine: paged KV + double-buffer offload
-    pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
-                      max_pages_per_seq=8)
-    sp = SamplingParams(temperature=0.0, max_new_tokens=12)
-    engine = OfflineEngine(
-        cfg, params, rt, mb_size=2, num_microbatches=2, pool=pool,
-        sampling=sp, offloader=DoubleBufferOffloader(pool, 2))
+    # 2. generate: one greedy batch, then a sampled request on the side
     rng = np.random.RandomState(0)
-    engine.submit([Request(i, list(rng.randint(1, cfg.vocab_size, 6)), sp)
-                   for i in range(5)])
-    done = engine.run()
-    for s in done:
-        print(f"  req {s.request.request_id}: prompt={s.request.prompt} "
-              f"-> {s.generated}")
-    print("engine report:", engine.throughput_report())
+    prompts = [list(rng.randint(1, llm.cfg.vocab_size, 6)) for _ in range(5)]
+    outs = llm.generate(prompts, SamplingParams(temperature=0.0,
+                                                max_new_tokens=12))
+    for o in outs:
+        print(f"  req {o.request_id}: prompt={o.prompt} -> {o.token_ids} "
+              f"({o.finish_reason})")
+    sampled = llm.generate([prompts[0]],
+                           SamplingParams(temperature=0.9, top_p=0.95,
+                                          max_new_tokens=12, logprobs=True))
+    print(f"  sampled req {sampled[0].request_id}: {sampled[0].token_ids} "
+          f"logprobs[0]={sampled[0].logprobs[0]:.2f}")
+    print("engine report:", llm.stats())
 
     # 3. the paper's schedule math for a real deployment
     n_b = optimal_microbatches(n_stages=8, stage_time=0.08, latency=0.064)

@@ -370,7 +370,8 @@ def pipeline_prefill(params, inputs, caches, cfg: ModelConfig, rt: Runtime,
 
 
 def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
-                         key, *, cfg: ModelConfig, rt: Runtime, sampling,
+                         samp_keys, samp_steps, samp_temp, samp_top_k,
+                         samp_top_p, *, cfg: ModelConfig, rt: Runtime,
                          n_stages: int, mb_size: int, mesh):
     """Advance the persistent pipeline by one tick.
 
@@ -381,12 +382,19 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
     mb_assign: (n_stages,) int32 — microbatch id each stage processes this
                tick (-1 = bubble).  ``mb_assign[-1]`` is the draining one.
     pos_stage: (n_stages, mb_size) int32 absolute positions per stage.
+    samp_*:    per-row sampling state of the *draining* microbatch —
+               ``samp_keys`` (mb_size, 2) uint32 base keys, ``samp_steps``
+               (mb_size,) token indices, temperature / top-k / top-p
+               (mb_size,) — captured at its injection, so every request
+               is sampled under its own params regardless of pipe depth.
 
-    Returns (sampled tokens (mb_size,) for the draining microbatch —
-    garbage when ``mb_assign[-1] < 0`` —, new caches, new act).
+    Returns (sampled tokens (mb_size,), model logprobs (mb_size,) for the
+    draining microbatch — garbage when ``mb_assign[-1] < 0`` —, new
+    caches, new act).
     """
     from repro.serving import kv_cache as kvc
-    from repro.serving.sampler import sample
+    from repro.serving.sampler import (fold_in_steps, sample_batched,
+                                       token_logprobs)
 
     plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
     pps, leftover = split_layers(cfg, n_stages)
@@ -489,7 +497,9 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
         caches={"epi_scan": epi_view["scan"], "tail": epi_view["tail"]},
         positions=p1)
     logits = embed_lib.unembed(params["embed"], xf[:, 0], cfg)
-    toks = sample(logits, key, sampling)
+    toks = sample_batched(logits, fold_in_steps(samp_keys, samp_steps),
+                          samp_temp, samp_top_k, samp_top_p)
+    lps = token_logprobs(logits, toks)
 
     new_epi_view = {"scan": new_epi_scan or [], "tail": new_tail}
     new_epi_view = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
@@ -505,7 +515,7 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                               st, epi_merged["scan"][i])
         new_scan.append(st)
     new_caches = {"scan": new_scan, "tail": epi_merged["tail"]}
-    return toks, new_caches, new_act
+    return toks, lps, new_caches, new_act
 
 
 # ---------------------------------------------------------------------------

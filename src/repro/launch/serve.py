@@ -1,25 +1,33 @@
-"""Offline serving driver: the DeServe engine over a pluggable backend.
+"""Offline serving driver: the ``LLM`` front end over a pluggable backend.
 
 Runs the full serving stack end-to-end on a *reduced* config (CPU-sized) or
 any registered arch: paged KV cache with local+global pools, double-buffer
 offloading, microbatch round-robin, continuous batching, and the §3 profit
-accounting on the measured throughput.
+accounting on the measured throughput.  Requests carry *per-request*
+sampling params — ``--mixed`` serves greedy and sampled requests through
+the same engine in one run.
 
 ``--backend local`` is the single-device path; ``--backend pipelined``
 drives the same engine through the ``--stages``-stage SPMD pipeline (on a
 CPU host the pod axis is emulated with forced host devices).  ``--plan``
 derives (N_B, per-microbatch batch, pool split) from a *measured* stage
-time plus ``--latency`` via the §4.3 planner instead of the hand-set flags.
+time plus ``--latency`` via the §4.3 planner (``EngineConfig.plan``)
+instead of the hand-set flags.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
-      --backend pipelined --stages 2 --max-new 24 [--plan] [--full-size]
+      --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed]
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
+
+
+def _with_max_new(sp, max_new: int):
+    return dataclasses.replace(sp, max_new_tokens=max_new)
 
 
 def _ensure_host_devices(n: int) -> None:
@@ -75,6 +83,9 @@ def main() -> None:
     ap.add_argument("--mb-size", type=int, default=2)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mixed", action="store_true",
+                    help="serve a mixed workload: greedy, temperature, "
+                         "top-k, and top-p requests through one engine")
     ap.add_argument("--plan", action="store_true",
                     help="derive N_B / batch / pools from measured stage "
                          "time + --latency (OfflineEngine.from_plan)")
@@ -97,13 +108,12 @@ def main() -> None:
     from repro.config import get_arch, reduced_config
     from repro.core.cost_model import PLATFORMS, min_throughput, \
         profit_per_hour
-    from repro.core.offload import DoubleBufferOffloader
     from repro.core.scheduler import optimal_microbatches
     from repro.models import model as model_lib
     from repro.models.common import Runtime
-    from repro.serving.engine import OfflineEngine
     from repro.serving.kv_cache import PoolConfig
-    from repro.serving.request import Request, SamplingParams
+    from repro.serving.llm import LLM, EngineConfig
+    from repro.serving.request import SamplingParams
 
     cfg = get_arch(args.arch)
     if not args.full_size:
@@ -113,47 +123,59 @@ def main() -> None:
           f"params={cfg.param_count()/1e6:.1f}M backend={args.backend}")
 
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed), rt)
-    sp = SamplingParams(temperature=args.temperature,
-                        max_new_tokens=args.max_new)
 
     if args.plan:
         t_s = measure_stage_time(cfg, params, rt, args.stages)
         print(f"planned: measured stage_time={t_s*1000:.1f}ms "
               f"latency={args.latency*1000:.0f}ms "
               f"kv_budget={args.kv_budget_mb:.1f}MB")
-        engine = OfflineEngine.from_plan(
-            cfg, params, rt, n_stages=args.stages, stage_time=t_s,
-            latency=args.latency, m_kv_bytes=args.kv_budget_mb * 1e6,
-            page_size=args.page_size, max_pages_per_seq=16,
-            max_microbatches=16, mb_size_cap=4, backend=args.backend,
-            sampling=sp, seed=args.seed)
+        econfig = EngineConfig.plan(
+            n_stages=args.stages, stage_time=t_s, latency=args.latency,
+            m_kv_bytes=args.kv_budget_mb * 1e6, page_size=args.page_size,
+            max_pages_per_seq=16, max_microbatches=16, mb_size_cap=4,
+            backend=args.backend, seed=args.seed)
+    else:
+        pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
+                          n_global_pages=16, max_pages_per_seq=16)
+        econfig = EngineConfig(mb_size=args.mb_size,
+                               num_microbatches=args.microbatches, pool=pool,
+                               offload=True, backend=args.backend,
+                               n_stages=args.stages, seed=args.seed)
+
+    llm = LLM(cfg, config=econfig, params=params, rt=rt)
+    engine = llm.engine
+    if args.plan:
         print(f"planned: N_B={engine.num_microbatches} "
               f"mb_size={engine.mb_size} pool=(local={engine.pool.n_local_pages}, "
               f"global=2x{engine.pool.n_global_pages}) "
               f"util={engine.schedule_choice.utilisation:.2f}")
-    else:
-        pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
-                          n_global_pages=16, max_pages_per_seq=16)
-        off = DoubleBufferOffloader(pool,
-                                    num_microbatches=args.microbatches)
-        engine = OfflineEngine(cfg, params, rt, mb_size=args.mb_size,
-                               num_microbatches=args.microbatches, pool=pool,
-                               sampling=sp, offloader=off, seed=args.seed,
-                               backend=args.backend, n_stages=args.stages)
 
     rng = np.random.RandomState(args.seed)
-    reqs = [Request(i, list(rng.randint(1, cfg.vocab_size,
-                                        rng.randint(4, 24))), sp)
-            for i in range(args.requests)]
-    engine.submit(reqs)
+    prompts = [list(rng.randint(1, cfg.vocab_size, rng.randint(4, 24)))
+               for _ in range(args.requests)]
+    if args.mixed:
+        policies = [SamplingParams(temperature=0.0),
+                    SamplingParams(temperature=0.8),
+                    SamplingParams(temperature=1.0, top_k=20),
+                    SamplingParams(temperature=0.9, top_p=0.92)]
+        sps = [_with_max_new(policies[i % len(policies)], args.max_new)
+               for i in range(args.requests)]
+    else:
+        sps = SamplingParams(temperature=args.temperature,
+                             max_new_tokens=args.max_new)
 
-    t0 = time.perf_counter()
-    done = engine.run(max_steps=100_000)
-    dt = time.perf_counter() - t0
-    rep = engine.throughput_report()
-    tps = rep["total_tokens"] / dt
-    print(f"finished {len(done)}/{args.requests} requests in {dt:.2f}s "
-          f"({tps:.1f} tok/s on this host)")
+    outs = llm.generate(prompts, sps)
+    rep = llm.stats()
+    done = [o for o in outs if o.finished]
+    print(f"finished {len(done)}/{args.requests} requests in "
+          f"{rep['wall_time_s']:.2f}s "
+          f"({rep['decode_tok_per_s']:.1f} decode tok/s on this host; "
+          f"mean latency {rep['mean_latency_steps']:.1f} steps / "
+          f"{rep['mean_latency_s']:.2f}s)")
+    reasons = {}
+    for o in outs:
+        reasons[o.finish_reason] = reasons.get(o.finish_reason, 0) + 1
+    print(f"finish reasons: {reasons}")
     print(f"report: {rep}")
 
     n_b = optimal_microbatches(8, 0.08, args.latency)

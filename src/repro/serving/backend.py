@@ -7,11 +7,14 @@ pytree and every jit entry point.  The seam is three operations:
 
   ``prefill(tokens, slot, last_index)``  — run one sequence's prompt into
         the caches at ``slot``, return the last-position logits.
-  ``decode(mb, tokens, cur_pos, key)``   — advance microbatch ``mb`` by one
+  ``decode(mb, tokens, cur_pos, samp)``  — advance microbatch ``mb`` by one
         token tick; returns zero or more :class:`DecodeResult`.  A result
         may be for an *earlier* microbatch: pipelined backends drain with
         latency, so the engine applies results by the microbatch id they
-        carry, not by the one it just injected.
+        carry, not by the one it just injected.  ``samp`` is a per-row
+        :class:`repro.serving.sampler.RowSampling` — every slot carries its
+        own temperature / top-k / top-p and PRNG key, so one compiled
+        decode serves mixed greedy+sampled microbatches.
   cache ownership — ``set_page_table`` / ``reset_slot`` push the engine's
         host-side bookkeeping into the device caches.
 
@@ -49,8 +52,8 @@ from repro.config import ModelConfig
 from repro.models import model as model_lib
 from repro.models.common import Runtime
 from repro.serving import kv_cache as kvc
-from repro.serving.request import SamplingParams
-from repro.serving.sampler import sample
+from repro.serving.sampler import (RowSampling, fold_in_steps,
+                                   sample_batched, token_logprobs)
 
 
 @dataclass
@@ -59,6 +62,8 @@ class DecodeResult:
     slot ``mb * mb_size + i`` (the engine decides which rows are live)."""
     mb: int
     tokens: np.ndarray                  # (mb_size,) int32
+    logprobs: np.ndarray                # (mb_size,) f32 — model logprob of
+                                        # tokens[i] (raw-logits distribution)
 
 
 # cache-view helpers live with the cache layout; re-exported here because
@@ -87,9 +92,10 @@ class ExecutionBackend(abc.ABC):
 
     @abc.abstractmethod
     def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
-               key, active: bool = True) -> List[DecodeResult]:
+               samp: RowSampling, active: bool = True) -> List[DecodeResult]:
         """Advance microbatch ``mb`` one tick (``active=False`` advances
-        the pipe without injecting — used to drain)."""
+        the pipe without injecting — used to drain).  ``samp`` carries the
+        per-row sampling params/keys of the microbatch being injected."""
 
     @abc.abstractmethod
     def set_page_table(self, table: np.ndarray) -> None:
@@ -118,8 +124,7 @@ class _SlotCacheBackend(ExecutionBackend):
     paged caches.  Subclasses implement ``decode``."""
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
-                 mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 sampling: SamplingParams):
+                 mb_size: int, num_microbatches: int, pool: kvc.PoolConfig):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -127,7 +132,6 @@ class _SlotCacheBackend(ExecutionBackend):
         self.num_microbatches = num_microbatches
         self.batch = mb_size * num_microbatches
         self.pool = pool
-        self.sampling = sampling
         self.caches = kvc.build_paged_caches(cfg, self.batch, pool, rt)
         self._prefill_jits: Dict[int, object] = {}
 
@@ -191,41 +195,46 @@ class LocalBackend(_SlotCacheBackend):
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 sampling: SamplingParams, offloader=None):
+                 offloader=None):
         super().__init__(cfg, params, rt, mb_size=mb_size,
-                         num_microbatches=num_microbatches, pool=pool,
-                         sampling=sampling)
+                         num_microbatches=num_microbatches, pool=pool)
         self.offloader = offloader
         self._decode_jit = jax.jit(functools.partial(
-            self._decode_fn, cfg=cfg, rt=rt, sampling=sampling,
-            mb_size=mb_size))
+            self._decode_fn, cfg=cfg, rt=rt, mb_size=mb_size))
 
     def _prefill_residency(self, mb: int) -> None:
         if self.offloader is not None and self.pool.n_global_pages:
             self.caches = self.offloader.ensure_resident(self.caches, mb)
 
     def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
-               key, active: bool = True) -> List[DecodeResult]:
+               samp: RowSampling, active: bool = True) -> List[DecodeResult]:
         if not active:
             return []
         if self.offloader is not None:
             self.caches = self.offloader.ensure_resident(self.caches, mb)
-        toks, self.caches = self._decode_jit(
+        toks, lps, self.caches = self._decode_jit(
             self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(cur_pos), jnp.int32(mb * self.mb_size), key)
-        return [DecodeResult(mb=mb, tokens=np.asarray(toks))]
+            jnp.asarray(cur_pos), jnp.int32(mb * self.mb_size),
+            jnp.asarray(samp.keys), jnp.asarray(samp.steps),
+            jnp.asarray(samp.temp), jnp.asarray(samp.top_k),
+            jnp.asarray(samp.top_p))
+        return [DecodeResult(mb=mb, tokens=np.asarray(toks),
+                             logprobs=np.asarray(lps))]
 
     @staticmethod
-    def _decode_fn(params, caches, tokens, cur_pos, row0, key, *, cfg, rt,
-                   sampling, mb_size):
+    def _decode_fn(params, caches, tokens, cur_pos, row0, keys, steps, temp,
+                   top_k, top_p, *, cfg, rt, mb_size):
         """One decode tick over an ``mb_size`` row view of the caches —
         the full batch is never fed through the model, and rows outside
-        the microbatch are untouched by construction."""
+        the microbatch are untouched by construction.  Sampling is per-row
+        (``sample_batched``) with per-token keys folded in on device."""
         view = slot_view(caches, row0, mb_size)
         logits, new_view = model_lib.decode_step(
             params, tokens, view, cur_pos, cfg, rt)
-        return sample(logits, key, sampling), slot_merge(caches, new_view,
-                                                         row0)
+        toks = sample_batched(logits, fold_in_steps(keys, steps), temp,
+                              top_k, top_p)
+        return toks, token_logprobs(logits, toks), \
+            slot_merge(caches, new_view, row0)
 
     @property
     def swap_count(self) -> int:
@@ -242,8 +251,7 @@ class PipelinedBackend(_SlotCacheBackend):
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 sampling: SamplingParams, n_stages: int = 2,
-                 offload: bool = False, mesh=None):
+                 n_stages: int = 2, offload: bool = False, mesh=None):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
         if num_microbatches < n_stages:
@@ -252,8 +260,7 @@ class PipelinedBackend(_SlotCacheBackend):
                 f"N_B >= N_S (got N_B={num_microbatches}); see §4.3 — a "
                 "microbatch must drain before its next injection")
         super().__init__(cfg, params, rt, mb_size=mb_size,
-                         num_microbatches=num_microbatches, pool=pool,
-                         sampling=sampling)
+                         num_microbatches=num_microbatches, pool=pool)
         self.n_stages = n_stages
         self.pps, self.leftover = PL.split_layers(cfg, n_stages)
         if mesh is None:
@@ -270,10 +277,11 @@ class PipelinedBackend(_SlotCacheBackend):
         self.act = jnp.zeros((n_stages, mb_size, 1, cfg.d_model),
                              rt.compute_dtype)
         # shift register of in-flight injections: entry for stage s is the
-        # (mb, positions-at-injection) whose activation sits in act[s]
+        # (mb, positions-at-injection, RowSampling-at-injection) whose
+        # activation sits in act[s]
         self._entries: List[Optional[tuple]] = [None] * n_stages
         self._tick_jit = jax.jit(functools.partial(
-            PL.pipeline_decode_tick, cfg=cfg, rt=rt, sampling=sampling,
+            PL.pipeline_decode_tick, cfg=cfg, rt=rt,
             n_stages=n_stages, mb_size=mb_size, mesh=mesh))
 
         # §4.2 offloading, per stage: stage s double-buffers its own
@@ -347,9 +355,9 @@ class PipelinedBackend(_SlotCacheBackend):
         return any(e is not None for e in self._entries)
 
     def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
-               key, active: bool = True) -> List[DecodeResult]:
+               samp: RowSampling, active: bool = True) -> List[DecodeResult]:
         entries = list(self._entries)
-        entries[0] = (mb, np.asarray(cur_pos, np.int32).copy()) \
+        entries[0] = (mb, np.asarray(cur_pos, np.int32).copy(), samp) \
             if active else None
         if not any(e is not None for e in entries):
             return []
@@ -364,15 +372,22 @@ class PipelinedBackend(_SlotCacheBackend):
         drained = entries[-1]
         if drained is not None:
             self._ensure_epi_resident(drained[0])
+        # sampling params travel with the microbatch: the tick samples the
+        # *draining* microbatch with the RowSampling captured at injection
+        dsamp = drained[2] if drained is not None \
+            else RowSampling.zeros(self.mb_size)
 
-        toks, self.caches, self.act = self._tick_jit(
+        toks, lps, self.caches, self.act = self._tick_jit(
             self.params, self.caches, self.act,
             jnp.asarray(tokens, jnp.int32), jnp.asarray(mb_assign),
-            jnp.asarray(pos_stage), key)
+            jnp.asarray(pos_stage), jnp.asarray(dsamp.keys),
+            jnp.asarray(dsamp.steps), jnp.asarray(dsamp.temp),
+            jnp.asarray(dsamp.top_k), jnp.asarray(dsamp.top_p))
         self._entries = [None] + entries[:-1]
         if drained is None:
             return []
-        return [DecodeResult(mb=drained[0], tokens=np.asarray(toks))]
+        return [DecodeResult(mb=drained[0], tokens=np.asarray(toks),
+                             logprobs=np.asarray(lps))]
 
     @property
     def swap_count(self) -> int:
@@ -381,8 +396,7 @@ class PipelinedBackend(_SlotCacheBackend):
 
 
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
-                 sampling, offloader=None, n_stages=2,
-                 mesh=None) -> ExecutionBackend:
+                 offloader=None, n_stages=2, mesh=None) -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
@@ -390,10 +404,10 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
     if kind == "local":
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
-                            sampling=sampling, offloader=offloader)
+                            offloader=offloader)
     if kind == "pipelined":
         return PipelinedBackend(cfg, params, rt, mb_size=mb_size,
                                 num_microbatches=num_microbatches, pool=pool,
-                                sampling=sampling, n_stages=n_stages,
+                                n_stages=n_stages,
                                 offload=offloader is not None, mesh=mesh)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

@@ -17,6 +17,14 @@ microbatch's decode tick enters the pipe at stage 0 and drains ``N_S − 1``
 engine ticks later — the engine therefore applies decode results by the
 microbatch id they carry, not the one it just injected.
 
+Sampling is **per request and on device**: every slot carries its own
+temperature / top-k / top-p and a PRNG key derived from
+``(seed, request_id)`` (token ``t`` folds in ``t``), so one engine serves
+mixed greedy+sampled workloads in one continuously-batched pipe and the
+output stream of a request is reproducible across backends, microbatch
+layout, and admission order.  The front door for callers is
+:class:`repro.serving.llm.LLM`; this class is the scheduling core.
+
 KV placement follows §4.2: microbatch ``m`` draws overflow pages from global
 pool ``G_{m%2}``; the :class:`repro.core.offload.DoubleBufferOffloader`
 swaps the non-resident pool to host between ticks (on TPU this is the
@@ -30,8 +38,11 @@ archs) and one sequence at a time; decode is one jit over the microbatch's
 
 from __future__ import annotations
 
+import dataclasses
+import logging
+import time
 from collections import deque
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +54,20 @@ from repro.serving import kv_cache as kvc
 from repro.serving.backend import DecodeResult, ExecutionBackend, make_backend
 from repro.serving.request import (EngineStats, Request, SamplingParams,
                                    SequenceState, Status)
-from repro.serving.sampler import sample
+from repro.serving.sampler import (RowSampling, fold_in_steps,
+                                   sample_batched, token_logprobs)
+
+log = logging.getLogger(__name__)
+
+
+@jax.jit
+def _sample_first(logits, keys, steps, temp, top_k, top_p):
+    """First-token sampling on prefill logits — jitted at module scope so
+    the compile caches across engines/prompts (eager ``lax.cond`` inside
+    ``sample_batched`` would retrace per call)."""
+    toks = sample_batched(logits, fold_in_steps(keys, steps), temp, top_k,
+                          top_p)
+    return toks, token_logprobs(logits, toks)
 
 
 class OfflineEngine:
@@ -60,14 +84,17 @@ class OfflineEngine:
         self.num_microbatches = num_microbatches
         self.batch = mb_size * num_microbatches
         self.pool = pool or kvc.PoolConfig()
-        self.sampling = sampling or SamplingParams()
-        self.key = jax.random.PRNGKey(seed)
+        # default for requests submitted with sampling=None (resolved at
+        # submit(); explicit per-request params always win — the engine
+        # has no global sampling policy)
+        self.default_sampling = sampling or SamplingParams()
+        self.seed = seed
+        self._seed_key = jax.random.PRNGKey(seed)
 
         self.backend: ExecutionBackend = make_backend(
             backend, cfg, params, rt, mb_size=mb_size,
             num_microbatches=num_microbatches, pool=self.pool,
-            sampling=self.sampling, offloader=offloader, n_stages=n_stages,
-            mesh=mesh)
+            offloader=offloader, n_stages=n_stages, mesh=mesh)
 
         self.alloc = kvc.PageAllocator(self.pool)
         self.table = np.zeros((self.batch, self.pool.max_pages_per_seq),
@@ -75,6 +102,11 @@ class OfflineEngine:
         self.cur_pos = np.zeros((self.batch,), np.int32)   # next position
         self.active = np.zeros((self.batch,), bool)
         self.slots: List[Optional[SequenceState]] = [None] * self.batch
+        # per-slot sampling state (set at admission, benign when idle)
+        self.samp_keys = np.zeros((self.batch, 2), np.uint32)
+        self.samp_temp = np.zeros((self.batch,), np.float32)
+        self.samp_top_k = np.zeros((self.batch,), np.int32)
+        self.samp_top_p = np.ones((self.batch,), np.float32)
 
         self.queue: deque = deque()
         self.finished: List[SequenceState] = []
@@ -103,6 +135,9 @@ class OfflineEngine:
         planner is skipped and the choice is honored as-is).
         ``mb_size_cap`` bounds the per-microbatch batch for reduced/CPU
         runs where the planned batch would not fit the host.
+
+        Prefer :meth:`repro.serving.llm.EngineConfig.plan` — this is the
+        low-level entry it resolves to.
         """
         from repro.core import offload as offload_lib
         from repro.core.scheduler import plan_schedule
@@ -152,10 +187,13 @@ class OfflineEngine:
     # public API
     # ------------------------------------------------------------------
 
-    def submit(self, requests: List[Request]) -> None:
+    def submit(self, requests: List[Request]) -> List[SequenceState]:
         cap = self.pool.max_pages_per_seq * self.pool.page_size
         for r in requests:          # validate all before enqueueing any,
-            if len(r.prompt) >= cap:  # so a raise never half-admits a batch
+            if r.sampling is None:  # so a raise never half-admits a batch
+                r.sampling = dataclasses.replace(self.default_sampling)
+            r.sampling.validate()
+            if len(r.prompt) >= cap:
                 raise ValueError(
                     f"request {r.request_id}: prompt length {len(r.prompt)} "
                     f">= per-sequence KV capacity {cap} tokens "
@@ -163,26 +201,60 @@ class OfflineEngine:
                     f"page_size={self.pool.page_size}) — no generation "
                     "budget would remain; raise max_pages_per_seq or "
                     "truncate the prompt")
+        now = time.perf_counter()
+        seqs = []
         for r in requests:
-            self.queue.append(SequenceState(request=r))
+            seq = SequenceState(request=r, submit_step=self.stats.steps,
+                                submit_time=now)
+            self.queue.append(seq)
+            seqs.append(seq)
+        self.stats.queue_depth = len(self.queue)
+        return seqs
 
     def run(self, max_steps: int = 10_000) -> List[SequenceState]:
+        """Step until drained (or until ``max_steps``).  Returns finished
+        sequences.  Exhausting the step budget with work still pending is
+        surfaced: ``stats.aborted`` is set and a warning logged —
+        ``pending()`` lists what was left behind."""
+        self.stats.aborted = False
         for _ in range(max_steps):
             if not self.step():
-                break
+                return self.finished
+        if self.pending():
+            self.stats.aborted = True
+            log.warning(
+                "OfflineEngine.run(max_steps=%d) exhausted its step budget "
+                "with %d request(s) still pending (%d finished) — partial "
+                "drain; raise max_steps or keep stepping", max_steps,
+                len(self.pending()), len(self.finished))
         return self.finished
+
+    def pending(self) -> List[SequenceState]:
+        """Sequences submitted but not finished (queued or in a slot)."""
+        return [s for s in self.slots if s is not None] + list(self.queue)
+
+    def status_counts(self) -> Dict[str, int]:
+        """Per-status sequence counts across queue, slots, and finished."""
+        counts = {s.value: 0 for s in Status}
+        for seq in self.pending():
+            counts[seq.status.value] += 1
+        counts[Status.FINISHED.value] += len(self.finished)
+        return counts
 
     def step(self) -> bool:
         """One engine tick: reap finished, admit new, tick one microbatch
         through the backend.  Returns False when fully drained."""
+        t0 = time.perf_counter()
         self._reap()
         self._admit()
+        self.stats.queue_depth = len(self.queue)
         if not self.active.any() and not self.queue and \
                 not self.backend.pending():
             return False
         mb = self.stats.steps % self.num_microbatches
         self._decode_microbatch(mb)
         self.stats.steps += 1
+        self.stats.wall_time_s += time.perf_counter() - t0
         return True
 
     # ------------------------------------------------------------------
@@ -194,9 +266,12 @@ class OfflineEngine:
 
     def _reap(self) -> None:
         changed = False
+        now = time.perf_counter()
         for slot, seq in enumerate(self.slots):
             if seq is not None and seq.is_done():
                 seq.status = Status.FINISHED
+                seq.finish_step = self.stats.steps
+                seq.finish_time = now
                 self.finished.append(seq)
                 self.stats.finished_requests += 1
                 self.alloc.release(slot)
@@ -204,6 +279,10 @@ class OfflineEngine:
                 self.active[slot] = False
                 self.table[slot] = 0            # park on scratch page 0
                 self.cur_pos[slot] = 0
+                self.samp_temp[slot] = 0.0      # idle rows decode greedily
+                self.samp_top_k[slot] = 0
+                self.samp_top_p[slot] = 1.0
+                self.samp_keys[slot] = 0
                 changed = True
         if changed:
             self.backend.set_page_table(self.table)
@@ -218,9 +297,11 @@ class OfflineEngine:
             if self._mb_of_slot(slot) in busy:
                 continue
             seq = self.queue.popleft()
+            seq.status = Status.PREFILLING
             try:
                 self._prefill_into_slot(seq, slot)
             except MemoryError:
+                seq.status = Status.QUEUED
                 self.queue.appendleft(seq)      # retry when pages free up
                 break
 
@@ -233,10 +314,18 @@ class OfflineEngine:
             return n                            # exact (state correctness)
         return max(8, (n + 7) // 8 * 8)
 
+    def _request_key(self, request_id: int) -> np.ndarray:
+        """Per-request base PRNG key: ``fold_in(PRNGKey(seed), rid)`` —
+        a function of (seed, request_id) only, so token streams reproduce
+        across backends, N_B, and admission order."""
+        return np.asarray(jax.random.fold_in(self._seed_key, request_id),
+                          np.uint32)
+
     def _prefill_into_slot(self, seq: SequenceState, slot: int) -> None:
         prompt = seq.request.prompt
+        sp = seq.request.sampling
         plen = len(prompt)
-        total_budget = plen + seq.request.sampling.max_new_tokens
+        total_budget = plen + sp.max_new_tokens
         n_pages = -(-min(total_budget,
                          self.pool.max_pages_per_seq * self.pool.page_size)
                     // self.pool.page_size)
@@ -249,7 +338,7 @@ class OfflineEngine:
         self.backend.set_page_table(self.table)
 
         # engine-side generation budget: never outgrow the page allocation
-        seq.budget = min(seq.request.sampling.max_new_tokens,
+        seq.budget = min(sp.max_new_tokens,
                          self.pool.max_pages_per_seq * self.pool.page_size
                          - plen)
         lp = self._prefill_len(plen)
@@ -257,8 +346,27 @@ class OfflineEngine:
         toks[:plen] = prompt
         logits = self.backend.prefill(toks, slot, plen - 1,
                                       has_global_pages=has_global)
-        self.key, sub = jax.random.split(self.key)
-        first = int(sample(logits, sub, self.sampling))
+
+        # the first token is sampled with the *request's* params under its
+        # own key (token index 0) — same path as every decode token
+        base = self._request_key(seq.request.request_id)
+        self.samp_keys[slot] = base
+        self.samp_temp[slot] = sp.temperature
+        self.samp_top_k[slot] = sp.top_k
+        self.samp_top_p[slot] = sp.top_p
+        # normalize to a plain single-device array: pipelined backends hand
+        # back NamedSharding-committed logits after the first tick, which
+        # would fork a second _sample_first compile cache entry
+        logits = jnp.asarray(np.asarray(logits))
+        first_arr, first_lp = _sample_first(
+            logits[None], jnp.asarray(base[None]),
+            jnp.zeros((1,), jnp.int32),
+            jnp.asarray(self.samp_temp[slot:slot + 1]),
+            jnp.asarray(self.samp_top_k[slot:slot + 1]),
+            jnp.asarray(self.samp_top_p[slot:slot + 1]))
+        first = int(first_arr[0])
+        if sp.logprobs:
+            seq.logprobs = [float(first_lp[0])]
         seq.generated.append(first)
         seq.slot = slot
         seq.status = Status.DECODING
@@ -272,6 +380,19 @@ class OfflineEngine:
     # decode
     # ------------------------------------------------------------------
 
+    def _row_sampling(self, lo: int, hi: int) -> RowSampling:
+        """Snapshot the per-row sampling state for slots [lo, hi) — copied,
+        because pipelined backends hold it until the tick drains."""
+        steps = np.zeros((hi - lo,), np.int32)
+        for i, slot in enumerate(range(lo, hi)):
+            seq = self.slots[slot]
+            if seq is not None:
+                steps[i] = len(seq.generated)   # index of the token sampled
+        return RowSampling(keys=self.samp_keys[lo:hi].copy(), steps=steps,
+                           temp=self.samp_temp[lo:hi].copy(),
+                           top_k=self.samp_top_k[lo:hi].copy(),
+                           top_p=self.samp_top_p[lo:hi].copy())
+
     def _decode_microbatch(self, mb: int) -> None:
         lo = mb * self.mb_size
         hi = lo + self.mb_size
@@ -283,8 +404,8 @@ class OfflineEngine:
             seq = self.slots[slot]
             if seq is not None and seq.generated:
                 tokens[i] = seq.generated[-1]
-        self.key, sub = jax.random.split(self.key)
-        results = self.backend.decode(mb, tokens, self.cur_pos[lo:hi], sub,
+        results = self.backend.decode(mb, tokens, self.cur_pos[lo:hi],
+                                      self._row_sampling(lo, hi),
                                       active=mb_active)
         self.stats.swaps = self.backend.swap_count
         for res in results:
@@ -301,6 +422,8 @@ class OfflineEngine:
                 continue            # finished at prefill (eos/budget): reap
                                     # next tick, never extend
             seq.generated.append(int(res.tokens[i]))
+            if seq.logprobs is not None:
+                seq.logprobs.append(float(res.logprobs[i]))
             self.cur_pos[slot] += 1
             self.stats.decode_tokens += 1
             need = self.cur_pos[slot] + 1
@@ -314,6 +437,13 @@ class OfflineEngine:
     # ------------------------------------------------------------------
 
     def throughput_report(self) -> dict:
+        lat_steps = [s.latency_steps for s in self.finished
+                     if s.latency_steps is not None]
+        lat_s = [s.latency_s for s in self.finished
+                 if s.latency_s is not None]
+        # per-status counts are O(batch + queue): computed on demand here
+        # (and cached on stats), never in the per-tick loop
+        self.stats.status_counts = self.status_counts()
         return {
             "backend": self.backend.name,
             "prefill_tokens": self.stats.prefill_tokens,
@@ -322,4 +452,12 @@ class OfflineEngine:
             "finished": self.stats.finished_requests,
             "steps": self.stats.steps,
             "swaps": self.stats.swaps,
+            "wall_time_s": self.stats.wall_time_s,
+            "decode_tok_per_s": self.stats.decode_tok_per_s,
+            "queue_depth": self.stats.queue_depth,
+            "status_counts": self.stats.status_counts,
+            "aborted": self.stats.aborted,
+            "mean_latency_steps":
+                float(np.mean(lat_steps)) if lat_steps else 0.0,
+            "mean_latency_s": float(np.mean(lat_s)) if lat_s else 0.0,
         }

@@ -1,0 +1,245 @@
+"""Per-request generation front end: ``LLM`` / ``EngineConfig`` /
+``RequestOutput``.
+
+This is the serving surface callers program against — the engine
+(:class:`repro.serving.engine.OfflineEngine`) stays the scheduling core,
+but nobody should have to scrape ``SequenceState`` internals or hand-wire
+pools/offloaders/backends:
+
+    llm = LLM("yi-9b", config=EngineConfig(mb_size=2, num_microbatches=2))
+    outs = llm.generate(prompts, SamplingParams(temperature=0.8, top_p=0.95))
+    for o in outs:
+        print(o.request_id, o.finish_reason, o.token_ids)
+
+Sampling params are **per request**: ``generate`` accepts one
+``SamplingParams`` for all prompts or one per prompt, and a single engine
+run serves greedy and sampled requests side by side in the same
+continuously-batched pipe.  Outputs are reproducible functions of
+``(config.seed, request_id)`` across backends, microbatch layout, and
+admission order.
+
+``EngineConfig`` consolidates the engine's construction knobs into one
+validated object; ``EngineConfig.plan(...)`` carries the §4.3 planner
+arguments (measured stage time + link latency → N_B / batch / pools) and
+subsumes ``OfflineEngine.from_plan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+from repro.config import ModelConfig, get_arch, reduced_config
+from repro.serving.engine import OfflineEngine
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.request import (FinishReason, Request, SamplingParams,
+                                   SequenceState, Status)
+
+_BACKENDS = ("local", "pipelined")
+
+
+@dataclass
+class EngineConfig:
+    """Everything needed to build an :class:`OfflineEngine`, validated.
+
+    Either set the knobs directly, or build one via :meth:`plan` to derive
+    (``num_microbatches``, ``mb_size``, pool split) from a measured stage
+    time + link latency through the paper's §4.3 planner.
+    """
+    mb_size: int = 4                  # sequences per microbatch
+    num_microbatches: int = 1         # N_B
+    pool: Optional[PoolConfig] = None
+    offload: bool = True              # double-buffer the global pools
+                                      # (no-op when the pool has none)
+    backend: str = "local"            # "local" | "pipelined"
+    n_stages: int = 2                 # N_S (pipelined backend)
+    seed: int = 0
+    mesh: Optional[object] = None
+    plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
+                                      # num_microbatches / pool / offload
+
+    def __post_init__(self) -> None:
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.mb_size < 1:
+            raise ValueError(f"mb_size must be >= 1, got {self.mb_size}")
+        if self.num_microbatches < 1:
+            raise ValueError("num_microbatches must be >= 1, "
+                             f"got {self.num_microbatches}")
+        if self.n_stages < 1:
+            raise ValueError(f"n_stages must be >= 1, got {self.n_stages}")
+        if self.plan_args is None and self.backend == "pipelined" \
+                and self.num_microbatches < self.n_stages:
+            raise ValueError(
+                f"pipelined backend needs num_microbatches >= n_stages "
+                f"(N_B >= N_S), got N_B={self.num_microbatches} < "
+                f"N_S={self.n_stages}")
+
+    @classmethod
+    def plan(cls, *, n_stages: int, stage_time: float, latency: float,
+             m_kv_bytes: float, page_size: int = 16,
+             max_pages_per_seq: int = 16, bandwidth: float = 0.0,
+             use_offload: bool = True, max_microbatches: int = 64,
+             choice=None, mb_size_cap: int = 0, backend: str = "local",
+             seed: int = 0, mesh=None) -> "EngineConfig":
+        """A config whose (N_B, per-microbatch batch, pool split) are
+        derived by ``repro.core.scheduler.plan_schedule`` at build time —
+        the planned counterpart of hand-set knobs (subsumes
+        ``OfflineEngine.from_plan``)."""
+        return cls(backend=backend, n_stages=n_stages, seed=seed, mesh=mesh,
+                   plan_args=dict(
+                       n_stages=n_stages, stage_time=stage_time,
+                       latency=latency, m_kv_bytes=m_kv_bytes,
+                       page_size=page_size,
+                       max_pages_per_seq=max_pages_per_seq,
+                       bandwidth=bandwidth, use_offload=use_offload,
+                       max_microbatches=max_microbatches, choice=choice,
+                       mb_size_cap=mb_size_cap))
+
+    def build(self, cfg: ModelConfig, params, rt) -> OfflineEngine:
+        """Construct the engine this config describes."""
+        if self.plan_args is not None:
+            return OfflineEngine.from_plan(
+                cfg, params, rt, backend=self.backend, seed=self.seed,
+                mesh=self.mesh, **self.plan_args)
+        pool = self.pool or PoolConfig()
+        offloader = None
+        if self.offload and pool.n_global_pages:
+            from repro.core.offload import DoubleBufferOffloader
+            offloader = DoubleBufferOffloader(pool, self.num_microbatches)
+        return OfflineEngine(
+            cfg, params, rt, mb_size=self.mb_size,
+            num_microbatches=self.num_microbatches, pool=pool,
+            offloader=offloader, seed=self.seed, backend=self.backend,
+            n_stages=self.n_stages, mesh=self.mesh)
+
+
+@dataclass
+class RequestOutput:
+    """What a caller gets back for one request — no engine internals."""
+    request_id: int
+    prompt: List[int]
+    token_ids: List[int]              # generated tokens so far
+    finished: bool
+    finish_reason: Optional[str]      # "eos" | "length" | "page_budget";
+                                      # None while in flight / aborted
+    status: str                       # Status value ("queued", ...)
+    logprobs: Optional[List[float]] = None    # per token, if requested
+    latency_steps: Optional[int] = None       # submit -> finish, engine steps
+    latency_s: Optional[float] = None         # submit -> finish, wall clock
+
+    @classmethod
+    def from_seq(cls, seq: SequenceState) -> "RequestOutput":
+        reason = seq.finish_reason()
+        return cls(
+            request_id=seq.request.request_id,
+            prompt=list(seq.request.prompt),
+            token_ids=list(seq.generated),
+            finished=seq.status is Status.FINISHED,
+            finish_reason=reason.value if reason is not None and
+            seq.status is Status.FINISHED else None,
+            status=seq.status.value,
+            logprobs=list(seq.logprobs) if seq.logprobs is not None else None,
+            latency_steps=seq.latency_steps,
+            latency_s=seq.latency_s)
+
+
+class LLM:
+    """Front door for offline generation over the DeServe engine.
+
+    ``model`` is an arch name (``"yi-9b"``) or a :class:`ModelConfig`.
+    By default the registered arch is shrunk with ``reduced_config`` (CPU
+    scale) and parameters are randomly initialised from ``config.seed``;
+    pass ``reduced=False`` and/or ``params=`` for real deployments.
+    """
+
+    def __init__(self, model: Union[str, ModelConfig], *,
+                 config: Optional[EngineConfig] = None, params=None,
+                 rt=None, reduced: bool = True):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import model as model_lib
+        from repro.models.common import Runtime
+
+        cfg = get_arch(model) if isinstance(model, str) else model
+        if reduced and isinstance(model, str):
+            cfg = reduced_config(cfg)
+        self.config = config or EngineConfig()
+        self.cfg = cfg
+        self.rt = rt or Runtime(param_dtype=jnp.float32,
+                                compute_dtype=jnp.float32)
+        if params is None:
+            params = model_lib.init_params(
+                cfg, jax.random.PRNGKey(self.config.seed), self.rt)
+        self.params = params
+        self.engine = self.config.build(cfg, params, self.rt)
+        self._next_id = 0
+
+    # ------------------------------------------------------------------
+
+    def _make_requests(self, prompts: Sequence[Sequence[int]],
+                       sampling_params) -> List[Request]:
+        if sampling_params is None:
+            sampling_params = self.engine.default_sampling
+        if isinstance(sampling_params, SamplingParams):
+            sampling_params = [sampling_params] * len(prompts)
+        if len(sampling_params) != len(prompts):
+            raise ValueError(
+                f"got {len(prompts)} prompts but "
+                f"{len(sampling_params)} sampling_params — pass one "
+                "SamplingParams, or exactly one per prompt")
+        reqs = []
+        for p, sp in zip(prompts, sampling_params):
+            reqs.append(Request(self._next_id, [int(t) for t in p],
+                                dataclasses.replace(sp)))
+            self._next_id += 1
+        return reqs
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sampling_params: Union[SamplingParams,
+                                        Sequence[SamplingParams],
+                                        None] = None, *,
+                 max_steps: int = 100_000) -> List[RequestOutput]:
+        """Generate to completion for every prompt; returns one
+        :class:`RequestOutput` per prompt, in prompt order.  If
+        ``max_steps`` is exhausted first, in-flight outputs come back with
+        ``finished=False`` (and ``engine.stats.aborted`` is set)."""
+        seqs = self._submit(prompts, sampling_params)
+        self.engine.run(max_steps=max_steps)
+        return [RequestOutput.from_seq(s) for s in seqs]
+
+    def generate_iter(self, prompts: Sequence[Sequence[int]],
+                      sampling_params: Union[SamplingParams,
+                                             Sequence[SamplingParams],
+                                             None] = None, *,
+                      max_steps: int = 100_000
+                      ) -> Iterator[List[RequestOutput]]:
+        """Streaming form: yields the full output snapshot (finished and
+        in-flight requests, prompt order) after every engine step, then a
+        final snapshot.  Mirrors ``run()``'s drain surfacing: exhausting
+        ``max_steps`` with work pending sets ``engine.stats.aborted``."""
+        seqs = self._submit(prompts, sampling_params)
+        self.engine.stats.aborted = False
+        steps = 0
+        while steps < max_steps and self.engine.step():
+            steps += 1
+            yield [RequestOutput.from_seq(s) for s in seqs]
+        if steps >= max_steps and self.engine.pending():
+            self.engine.stats.aborted = True
+        yield [RequestOutput.from_seq(s) for s in seqs]
+
+    def _submit(self, prompts, sampling_params) -> List[SequenceState]:
+        reqs = self._make_requests(prompts, sampling_params)
+        return self.engine.submit(reqs)
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict:
+        return self.engine.throughput_report()
+
+
+__all__ = ["LLM", "EngineConfig", "RequestOutput", "SamplingParams",
+           "FinishReason"]

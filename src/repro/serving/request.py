@@ -2,10 +2,9 @@
 
 from __future__ import annotations
 
-import dataclasses
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 class Status(enum.Enum):
@@ -15,6 +14,12 @@ class Status(enum.Enum):
     FINISHED = "finished"
 
 
+class FinishReason(enum.Enum):
+    EOS = "eos"                       # emitted the request's eos token
+    LENGTH = "length"                 # hit sampling.max_new_tokens
+    PAGE_BUDGET = "page_budget"       # hit the per-sequence page capacity
+
+
 @dataclass
 class SamplingParams:
     temperature: float = 0.0          # 0 = greedy
@@ -22,13 +27,26 @@ class SamplingParams:
     top_p: float = 1.0
     max_new_tokens: int = 64
     eos_token: int = -1               # -1 = never terminate early
+    logprobs: bool = False            # record per-token logprobs
+
+    def validate(self) -> "SamplingParams":
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        return self
 
 
 @dataclass
 class Request:
     request_id: int
     prompt: List[int]
-    sampling: SamplingParams = field(default_factory=SamplingParams)
+    # None = use the engine's default_sampling (resolved at submit());
+    # explicit params are honored exactly, per request
+    sampling: Optional[SamplingParams] = None
     # modality payloads for stub frontends (precomputed embeddings)
     frames: Optional[object] = None
     patches: Optional[object] = None
@@ -41,6 +59,12 @@ class SequenceState:
     slot: int = -1                    # decode-batch slot, -1 = unassigned
     generated: List[int] = field(default_factory=list)
     budget: Optional[int] = None      # engine-side cap (page capacity)
+    logprobs: Optional[List[float]] = None    # per generated token, if asked
+    # lifecycle accounting (engine steps + wall clock at submit/finish)
+    submit_step: int = -1
+    finish_step: int = -1
+    submit_time: float = 0.0
+    finish_time: float = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -50,13 +74,40 @@ class SequenceState:
     def total_len(self) -> int:
         return self.prompt_len + len(self.generated)
 
-    def is_done(self) -> bool:
+    def _cap(self) -> int:
         sp = self.request.sampling
-        cap = sp.max_new_tokens if self.budget is None else \
+        return sp.max_new_tokens if self.budget is None else \
             min(sp.max_new_tokens, self.budget)
-        if len(self.generated) >= cap:
+
+    def is_done(self) -> bool:
+        if len(self.generated) >= self._cap():
             return True
-        return bool(self.generated) and self.generated[-1] == sp.eos_token
+        return bool(self.generated) and \
+            self.generated[-1] == self.request.sampling.eos_token
+
+    def finish_reason(self) -> Optional[FinishReason]:
+        """Why the sequence stopped (None while still in flight)."""
+        if not self.is_done():
+            return None
+        sp = self.request.sampling
+        if self.generated and self.generated[-1] == sp.eos_token:
+            return FinishReason.EOS
+        if self.budget is not None and self.budget < sp.max_new_tokens \
+                and len(self.generated) >= self.budget:
+            return FinishReason.PAGE_BUDGET
+        return FinishReason.LENGTH
+
+    @property
+    def latency_steps(self) -> Optional[int]:
+        if self.finish_step < 0 or self.submit_step < 0:
+            return None
+        return self.finish_step - self.submit_step
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_step < 0 or self.submit_step < 0:
+            return None
+        return self.finish_time - self.submit_time
 
 
 @dataclass
@@ -66,7 +117,19 @@ class EngineStats:
     finished_requests: int = 0
     steps: int = 0
     swaps: int = 0                    # page-pool swap events (offload manager)
+    wall_time_s: float = 0.0          # accumulated inside step()
+    queue_depth: int = 0              # requests waiting (refreshed per step)
+    status_counts: Dict[str, int] = field(default_factory=dict)
+                                      # refreshed by throughput_report() /
+                                      # engine.status_counts(), not per tick
+    aborted: bool = False             # run() exhausted max_steps with
+                                      # work still pending
 
     @property
     def total_tokens(self) -> int:
         return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / self.wall_time_s if self.wall_time_s \
+            else 0.0

@@ -1,16 +1,60 @@
 """Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
 
-All functions take fp32 logits (..., V) and return int32 tokens (...,).
-The dispatch is static (SamplingParams fields are compile-time constants for
-a given engine), so the sampled program contains no dead branches.
+Two entry points:
+
+``sample(logits, key, params)``
+    Static dispatch on one :class:`SamplingParams` — the whole batch shares
+    one policy.  Kept for reference decoding and tests.
+
+``sample_batched(logits, keys, temp, top_k, top_p)``
+    Per-row policy with *traced* parameters: every row carries its own
+    temperature / top-k / top-p and its own PRNG key, so one compiled decode
+    program serves a microbatch mixing greedy and sampled requests.  Top-k
+    and top-p are mask-based (no gather/scatter of dynamic extent), so all
+    shapes stay static.  Row semantics:
+
+      - ``temp[i] <= 0``  → greedy (bit-identical to ``argmax`` on the raw
+        logits — a greedy row in a mixed batch equals an all-greedy run).
+      - ``top_k[i] <= 0`` → no top-k truncation.
+      - ``top_p[i] >= 1`` → no nucleus truncation.
+      - ties at the top-k / top-p cutoff are *kept* (same semantics as the
+        static path: the mask is ``logits < cutoff``).
+
+Per-slot keys are derived as ``fold_in(fold_in(PRNGKey(seed), request_id),
+token_index)`` — a function of (seed, request, position) only, so sampled
+outputs are reproducible across backends, microbatch layout, and admission
+order.  :func:`fold_in_steps` performs the last fold inside the jit.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serving.request import SamplingParams
+
+
+@dataclass
+class RowSampling:
+    """Per-row sampling state for one microbatch tick (host-side numpy;
+    the engine slices these out of its per-slot arrays, the backend feeds
+    them to the decode jit)."""
+    keys: np.ndarray                  # (mb, 2) uint32 per-request base keys
+    steps: np.ndarray                 # (mb,) int32 token index being sampled
+    temp: np.ndarray                  # (mb,) float32
+    top_k: np.ndarray                 # (mb,) int32
+    top_p: np.ndarray                 # (mb,) float32
+
+    @classmethod
+    def zeros(cls, n: int) -> "RowSampling":
+        return cls(keys=np.zeros((n, 2), np.uint32),
+                   steps=np.zeros((n,), np.int32),
+                   temp=np.zeros((n,), np.float32),
+                   top_k=np.zeros((n,), np.int32),
+                   top_p=np.ones((n,), np.float32))
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -45,3 +89,66 @@ def sample(logits: jax.Array, key: jax.Array,
     if params.top_p < 1.0:
         logits = _apply_top_p(logits, params.top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Per-row (device-side) sampling
+# ---------------------------------------------------------------------------
+
+
+def fold_in_steps(keys: jax.Array, steps: jax.Array) -> jax.Array:
+    """Per-row ``fold_in``: ``keys`` (B, 2) uint32 per-request base keys,
+    ``steps`` (B,) int32 token indices → (B, 2) per-token keys."""
+    return jax.vmap(jax.random.fold_in)(keys, steps)
+
+
+def sample_batched(logits: jax.Array, keys: jax.Array, temp: jax.Array,
+                   top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Sample one token per row under per-row params (all traced).
+
+    logits (B, V) fp32; keys (B, 2) uint32; temp/top_p (B,) fp32;
+    top_k (B,) int32.  Returns (B,) int32 tokens.
+
+    The sampled path (one sort + softmax/cumsum + per-row categorical) is
+    under a ``lax.cond`` on "any row non-greedy", so all-greedy ticks pay
+    only the argmax.
+    """
+    B, V = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    is_greedy = temp <= 0.0
+
+    def sampled_path(_):
+        x = logits / jnp.where(is_greedy, 1.0, temp)[:, None]
+        # top-k: keep rows' values >= their k-th largest (mask, static
+        # shape); masking the *sorted* copy in place (values >= kth form a
+        # descending prefix) saves re-sorting for the top-p pass below
+        sorted_desc = jnp.sort(x, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(
+            sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+        k_on = top_k[:, None] > 0
+        x = jnp.where(k_on & (x < kth), -jnp.inf, x)
+        sorted_desc = jnp.where(k_on & (sorted_desc < kth), -jnp.inf,
+                                sorted_desc)
+        # top-p: keep the smallest prefix with cumulative prob >= p
+        # (always >= 1 token)
+        probs = jax.nn.softmax(sorted_desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = cum - probs < top_p[:, None]
+        cutoff = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        x = jnp.where(x < cutoff, -jnp.inf, x)
+        return jax.vmap(
+            lambda l, k: jax.random.categorical(k, l, axis=-1))(
+                x, keys).astype(jnp.int32)
+
+    sampled = jax.lax.cond(jnp.any(~is_greedy), sampled_path,
+                           lambda _: greedy_tok, None)
+    return jnp.where(is_greedy, greedy_tok, sampled).astype(jnp.int32)
+
+
+def token_logprobs(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Log-probability of ``tokens`` (B,) under the *model* distribution
+    (raw logits, before any temperature / truncation)."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(lp, tokens[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
