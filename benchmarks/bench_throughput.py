@@ -1,18 +1,20 @@
 """Paper Table 4 (the headline): output throughput vs link latency for the
 three serving policies, from the calibrated discrete-event simulator —
-plus a measured engine comparison of the two execution backends."""
+plus a measured engine comparison of the two execution backends on a
+decode-heavy and a prefill-heavy (``--workload prefill_heavy``) workload."""
 
 from repro.core.simulator import PAPER_TABLE4, table4
 
 LATS = (0.0, 0.016, 0.032, 0.064, 0.256)
 
 
-def _engine_backends(rows, quick: bool):
+def _engine_backends(rows, quick: bool, workload: str = "all"):
     """Measured tok/s through the LLM front end on both execution backends
     (reduced config; pipelined runs 2 stages when the host has the
     devices, else a 1-stage pipe — same code path, no fake-device fork).
-    Timing comes from the engine's own wall clock (``stats.wall_time_s``),
-    with warmup steps (jit compiles + pipe fill) snapshot-subtracted."""
+    Timing comes from the engine's own phase-split clock
+    (``stats.prefill_time_s`` / ``stats.decode_time_s``), with warmup
+    steps (jit compiles + pipe fill) snapshot-subtracted."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -28,47 +30,71 @@ def _engine_backends(rows, quick: bool):
     params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
     pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
                       max_pages_per_seq=8)
-    n_req = 6 if quick else 12
-    sp = SamplingParams(temperature=0.0, max_new_tokens=16 if quick else 24)
     n_stages = 2 if len(jax.devices()) >= 2 else 1
 
-    print("\n-- engine backends (measured, reduced config) --")
-    for backend in ("local", "pipelined"):
-        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
-            mb_size=2, num_microbatches=2, pool=pool, offload=True,
-            backend=backend, n_stages=n_stages))
-        rng = np.random.RandomState(0)
-        # fixed prompt length: one prefill shape.  Warmup is a full pass of
-        # the same workload, so every jit variant compiles there (including
-        # the replenishment-prefill recompile after the caches pick up the
-        # pipeline's NamedSharding) and the timed pass is pure steady state.
-        prompts = [list(rng.randint(1, cfg.vocab_size, 8))
-                   for _ in range(n_req)]
-        llm.generate(prompts, sp, max_steps=5000)       # warmup pass
-        stats = llm.engine.stats
-        warm_tok = stats.total_tokens
-        warm_dec = stats.decode_tokens
-        warm_wall = stats.wall_time_s
-        llm.generate(prompts, sp, max_steps=5000)       # timed pass
-        rep = llm.stats()
-        dt = rep["wall_time_s"] - warm_wall
-        tps = (rep["total_tokens"] - warm_tok) / dt
-        decode_tps = (rep["decode_tokens"] - warm_dec) / dt
-        print(f"  {backend:10s} {tps:8.1f} tok/s "
-              f"({decode_tps:.1f} decode tok/s, {rep['finished']} reqs, "
-              f"{rep['swaps']} swaps, mean latency "
-              f"{rep['mean_latency_steps']:.0f} steps, "
-              f"stages={n_stages if backend == 'pipelined' else 1})")
-        rows.append({"bench": "engine_backend", "policy": backend,
-                     "tps": tps, "decode_tps": decode_tps,
-                     "tokens": rep["total_tokens"],
-                     "swaps": rep["swaps"],
-                     "mean_latency_steps": rep["mean_latency_steps"]})
+    # two workloads: decode-heavy (short prompts, the Table-4 regime) and
+    # prefill-heavy (long prompts, short generations — the open-model
+    # serving regime chunked admission targets).  Both are recorded in
+    # BENCH_throughput.json and gated by benchmarks/check_regression.py.
+    workloads = {
+        "engine_backend": dict(n_req=6 if quick else 12, prompt_len=8,
+                               max_new=16 if quick else 24),
+        "engine_prefill": dict(n_req=6 if quick else 12, prompt_len=48,
+                               max_new=4),
+    }
+    if workload == "decode":
+        workloads.pop("engine_prefill")
+    elif workload == "prefill_heavy":
+        workloads.pop("engine_backend")
+    for bench, wl in workloads.items():
+        print(f"\n-- {bench} (measured, reduced config, "
+              f"prompt={wl['prompt_len']} max_new={wl['max_new']}) --")
+        sp = SamplingParams(temperature=0.0, max_new_tokens=wl["max_new"])
+        for backend in ("local", "pipelined"):
+            llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+                mb_size=2, num_microbatches=2, pool=pool, offload=True,
+                backend=backend, n_stages=n_stages, prefill_chunk=16,
+                max_prefill_tokens_per_tick=32))
+            rng = np.random.RandomState(0)
+            # fixed prompt length: one prefill shape.  Warmup is a full
+            # pass of the same workload, so every jit variant compiles
+            # there and the timed pass is pure steady state.
+            prompts = [list(rng.randint(1, cfg.vocab_size, wl["prompt_len"]))
+                       for _ in range(wl["n_req"])]
+            llm.generate(prompts, sp, max_steps=5000)       # warmup pass
+            stats = llm.engine.stats
+            warm = (stats.total_tokens, stats.decode_tokens,
+                    stats.prefill_tokens, stats.wall_time_s,
+                    stats.decode_time_s, stats.prefill_time_s)
+            llm.generate(prompts, sp, max_steps=5000)       # timed pass
+            rep = llm.stats()
+            dt = rep["wall_time_s"] - warm[3]
+            tps = (rep["total_tokens"] - warm[0]) / dt
+            decode_tps = (rep["decode_tokens"] - warm[1]) / \
+                max(rep["decode_time_s"] - warm[4], 1e-9)
+            prefill_tps = (rep["prefill_tokens"] - warm[2]) / \
+                max(rep["prefill_time_s"] - warm[5], 1e-9)
+            print(f"  {backend:10s} {tps:8.1f} tok/s "
+                  f"({decode_tps:.1f} decode tok/s, "
+                  f"{prefill_tps:.1f} prefill tok/s, {rep['finished']} reqs, "
+                  f"{rep['swaps']} swaps, mean latency "
+                  f"{rep['mean_latency_steps']:.0f} steps, "
+                  f"stages={n_stages if backend == 'pipelined' else 1})")
+            rows.append({"bench": bench, "policy": backend,
+                         "tps": tps, "decode_tps": decode_tps,
+                         "prefill_tps": prefill_tps,
+                         "tokens": rep["total_tokens"],
+                         "swaps": rep["swaps"],
+                         "mean_latency_steps": rep["mean_latency_steps"]})
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, workload: str = "all"):
+    """``workload``: "all" (both engine workloads + Table 4), "decode" or
+    "prefill_heavy" (one measured engine workload, no simulator pass)."""
     rows = []
-    _engine_backends(rows, quick)
+    _engine_backends(rows, quick, workload)
+    if workload != "all":
+        return rows
     res = table4(sim_seconds=200 if quick else 400,
                  warmup=50 if quick else 100)
     print("\n== Table 4: output throughput (tok/s) vs one-way latency ==")

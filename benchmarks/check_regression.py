@@ -1,10 +1,14 @@
 """Perf-regression gate: compare a fresh ``BENCH_throughput.json`` against
 the committed baseline.
 
-Compares the measured engine decode tok/s (``bench == "engine_backend"``
-rows, ``decode_tps`` falling back to ``tps``) per backend.  CI machines are
-noisy and heterogeneous, so the threshold is generous (default: fail only
-when a backend regresses more than 30% below baseline).
+Compares, per backend, the measured engine decode tok/s of the
+decode-heavy workload (``bench == "engine_backend"`` rows, ``decode_tps``
+falling back to ``tps``) AND the prefill tok/s of the prefill-heavy
+workload (``bench == "engine_prefill"`` rows, ``prefill_tps``), so a
+chunked-prefill regression trips the gate independently of decode
+throughput.  CI machines are noisy and heterogeneous, so the threshold is
+generous (default: fail only when a backend regresses more than 30% below
+baseline).
 
     python benchmarks/check_regression.py --baseline BENCH_throughput.json \
         --new bench_new.json [--threshold 0.30]
@@ -24,14 +28,22 @@ import json
 import sys
 
 
-def _tps_by_backend(path: str) -> dict:
+# gated metrics: (bench row kind, preferred field, fallback field, label)
+GATES = (
+    ("engine_backend", "decode_tps", "tps", "decode tok/s"),
+    ("engine_prefill", "prefill_tps", None, "prefill tok/s"),
+)
+
+
+def _tps_by_backend(path: str, bench: str, field: str,
+                    fallback) -> dict:
     with open(path) as f:
         data = json.load(f)
     out = {}
     for row in data.get("rows", []):
-        if row.get("bench") != "engine_backend":
+        if row.get("bench") != bench:
             continue
-        tps = row.get("decode_tps", row.get("tps"))
+        tps = row.get(field, row.get(fallback) if fallback else None)
         if tps is not None:           # keep 0.0 — a zero-throughput run
             out[row.get("policy", "?")] = float(tps)   # must trip the gate
     return out
@@ -45,33 +57,38 @@ def main() -> int:
                     help="max allowed fractional drop vs baseline")
     args = ap.parse_args()
 
-    try:
-        base = _tps_by_backend(args.baseline)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"perf gate: no usable baseline ({e}) — skipping")
-        return 0
-    new = _tps_by_backend(args.new)
-    if not base or not new:
-        print("perf gate: no comparable engine_backend rows — skipping")
-        return 0
-
     failed = False
-    for backend, b_tps in sorted(base.items()):
-        n_tps = new.get(backend)
-        if n_tps is None:
-            print(f"perf gate: {backend}: missing from new run — skipping")
+    compared = False
+    for bench, field, fallback, label in GATES:
+        try:
+            base = _tps_by_backend(args.baseline, bench, field, fallback)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"perf gate: no usable baseline ({e}) — skipping")
+            return 0
+        new = _tps_by_backend(args.new, bench, field, fallback)
+        if not base or not new:
+            print(f"perf gate: no comparable {bench} rows — skipping")
             continue
-        if b_tps <= 0:
-            print(f"perf gate: {backend}: baseline is {b_tps:.1f} — "
-                  "nothing to compare, skipping")
-            continue
-        drop = 1.0 - n_tps / b_tps
-        status = "OK"
-        if drop > args.threshold:
-            status = "REGRESSION"
-            failed = True
-        print(f"perf gate: {backend}: baseline {b_tps:.1f} -> {n_tps:.1f} "
-              f"decode tok/s ({-drop:+.1%}) [{status}]")
+        compared = True
+        for backend, b_tps in sorted(base.items()):
+            n_tps = new.get(backend)
+            if n_tps is None:
+                print(f"perf gate: {bench}/{backend}: missing from new "
+                      "run — skipping")
+                continue
+            if b_tps <= 0:
+                print(f"perf gate: {bench}/{backend}: baseline is "
+                      f"{b_tps:.1f} — nothing to compare, skipping")
+                continue
+            drop = 1.0 - n_tps / b_tps
+            status = "OK"
+            if drop > args.threshold:
+                status = "REGRESSION"
+                failed = True
+            print(f"perf gate: {bench}/{backend}: baseline {b_tps:.1f} -> "
+                  f"{n_tps:.1f} {label} ({-drop:+.1%}) [{status}]")
+    if not compared:
+        print("perf gate: nothing comparable — skipping")
     return 1 if failed else 0
 
 

@@ -24,7 +24,15 @@ def main() -> None:
                          "defaults to BENCH_throughput.json on full runs — "
                          "partial --only runs don't clobber the tracked "
                          "snapshot unless asked to)")
+    ap.add_argument("--workload", default="all",
+                    choices=["all", "decode", "prefill_heavy"],
+                    help="throughput bench workload: 'decode' / "
+                         "'prefill_heavy' run just that measured engine "
+                         "workload (implies --only throughput, no "
+                         "simulator pass)")
     args = ap.parse_args()
+    if args.workload != "all" and args.only is None:
+        args.only = "throughput"
     if args.json is None:
         args.json = "" if args.only else "BENCH_throughput.json"
 
@@ -45,7 +53,10 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
-        rows.extend(fn(quick=args.quick) or [])
+        if name == "throughput":
+            rows.extend(fn(quick=args.quick, workload=args.workload) or [])
+        else:
+            rows.extend(fn(quick=args.quick) or [])
         timings[name] = round(time.perf_counter() - t0, 1)
         print(f"   [{name}: {timings[name]:.1f}s]")
 

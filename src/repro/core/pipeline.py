@@ -519,6 +519,150 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
 
 
 # ---------------------------------------------------------------------------
+# Single-tick chunked prefill over ENGINE-format paged caches
+# ---------------------------------------------------------------------------
+
+
+def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
+                                valid_stage, tables_stage, lasts, *,
+                                cfg: ModelConfig, rt: Runtime,
+                                n_stages: int, mesh):
+    """Advance the persistent *prefill* pipe by one tick.
+
+    The serving engine's ``PipelinedBackend`` keeps a second shift register
+    for prompt chunks: each engine tick injects (at most) one chunk at
+    stage 0 and advances every in-flight chunk one stage, exactly like
+    ``pipeline_decode_tick`` — so a prefill chunk overlaps the in-flight
+    decode microbatches instead of pausing them.
+
+    caches:       engine-format paged caches (every layer paged — the
+                  engine gates ring/recurrent archs to exact prefill).
+    act:          (n_stages, R, C, D) chunk activation per stage input.
+    tokens:       (R, C) int32 — the chunk injected at stage 0 this tick.
+    offs_stage:   (n_stages, R) int32 prefilled-token offsets per stage.
+    valid_stage:  (n_stages, R) int32 real-token counts (0 = bubble row or
+                  bubble stage — every cache write is dropped).
+    tables_stage: (n_stages, R, P) int32 per-row page-table rows (the
+                  device-wide table keeps prefilling slots parked).
+    lasts:        (R,) int32 within-chunk final-token index of the
+                  *draining* chunk.
+
+    Returns (logits (R, V) for the draining chunk — garbage when no chunk
+    drains —, new caches, new act).
+    """
+    pps, leftover = split_layers(cfg, n_stages)
+    n_scan = pps * n_stages
+    plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
+    cd = rt.compute_dtype
+    R, C = tokens.shape
+
+    stage_params, epi_scan_params = split_scan_params(params, cfg, n_stages)
+    stage_caches = [jax.tree.map(
+        lambda x: x[:n_scan].reshape((n_stages, pps) + x.shape[1:]), c)
+        for c in caches["scan"]]
+    epi_scan_caches = [jax.tree.map(lambda x: x[n_scan:], c)
+                       for c in caches["scan"]] if leftover else []
+
+    x_inj = embed_lib.embed_tokens(params["embed"], tokens, cfg, cd)
+
+    def chunk_positions(offs, nv):
+        iota = jnp.arange(C)[None]
+        pos = jnp.where(iota < nv[:, None], offs[:, None] + iota, -1)
+        if cfg.frontend == "vision_patches":
+            from repro.models.common import text_positions3
+            return pos, text_positions3(pos)
+        return pos, pos
+
+    def body(stage_params_l, stage_caches_l, act_l, x_inj, offs_stage,
+             valid_stage, tables_stage):
+        lp = [jax.tree.map(lambda x: x[0], p) for p in stage_params_l]
+        lc = [jax.tree.map(lambda x: x[0], c) for c in stage_caches_l]
+        pod = jax.lax.axis_index("pod")
+        is_last = pod == n_stages - 1
+
+        x_in = jnp.where(pod == 0, x_inj, act_l[0])
+        offs = jax.lax.dynamic_index_in_dim(offs_stage, pod, 0,
+                                            keepdims=False)
+        nv = jax.lax.dynamic_index_in_dim(valid_stage, pod, 0,
+                                          keepdims=False)
+        tabs = jax.lax.dynamic_index_in_dim(tables_stage, pod, 0,
+                                            keepdims=False)     # (R, P)
+        _, p1 = chunk_positions(offs, nv)
+
+        # the chunk's rows are arbitrary slots: run the stage's period
+        # slice with the chunk's own page-table rows; pools are shared,
+        # the parked per-slot table leaves pass through untouched
+        view = [{**c, "page_table": jnp.broadcast_to(
+            tabs[None], (pps,) + tabs.shape)} for c in lc]
+        y, new_view = model_lib.run_periods(
+            lp, x_in, cfg, rt, period_kinds=plan.period_kinds,
+            mode="chunk", scan_caches=view, positions=p1)
+        new_lc = [{**{k: v.astype(c_old[k].dtype)
+                      for k, v in v_new.items() if k.endswith("_pages")},
+                   "page_table": c_old["page_table"]}
+                  for c_old, v_new in zip(lc, new_view)]
+
+        y_out = jax.lax.psum(
+            jnp.where(is_last, y, jnp.zeros_like(y)).astype(jnp.float32),
+            "pod").astype(y.dtype)
+        y_next = jax.lax.ppermute(
+            y, "pod", [(i, (i + 1) % n_stages) for i in range(n_stages)])
+        new_lc = [jax.tree.map(lambda x: x[None], c) for c in new_lc]
+        return y_out, y_next[None], new_lc
+
+    P = jax.sharding.PartitionSpec
+    in_specs = (
+        [jax.tree.map(lambda _: P("pod"), p) for p in stage_params],
+        [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches],
+        P("pod"), P(), P(), P(), P(),
+    )
+    out_specs = (P(), P("pod"),
+                 [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches])
+    fn = _shard_map(body, mesh=mesh, axis_names={"pod"},
+                    in_specs=in_specs, out_specs=out_specs)
+    y_out, new_act, new_stage = fn(stage_params, stage_caches, act, x_inj,
+                                   offs_stage, valid_stage, tables_stage)
+
+    # epilogue for the draining chunk (replicated; the paper's return link
+    # carries (R,) first-token logit rows once per chunk, not activations)
+    offs_d = offs_stage[n_stages - 1]
+    nv_d = valid_stage[n_stages - 1]
+    tabs_d = tables_stage[n_stages - 1]
+    pos_d, p1 = chunk_positions(offs_d, nv_d)
+    epi_view = {
+        "epi_scan": [{**c, "page_table": jnp.broadcast_to(
+            tabs_d[None], (c["page_table"].shape[0],) + tabs_d.shape)}
+            for c in epi_scan_caches],
+        "tail": [{**c, "page_table": tabs_d} for c in caches["tail"]],
+    }
+    xf, new_epi_scan, new_tail = _epilogue(
+        params, epi_scan_params, y_out, cfg, rt, mode="chunk",
+        caches=epi_view, positions=p1)
+    idx = jnp.clip(lasts, 0, C - 1).reshape(R, 1, 1)
+    x_last = jnp.take_along_axis(
+        xf, jnp.broadcast_to(idx, (R, 1, xf.shape[-1])), axis=1)[:, 0]
+    logits = embed_lib.unembed(params["embed"], x_last, cfg)
+
+    keep = lambda n, o: {**{k: v.astype(o[k].dtype) for k, v in n.items()
+                            if k.endswith("_pages")},
+                         "page_table": o["page_table"]}
+    epi_merged_scan = [keep(n, o) for n, o in
+                       zip(new_epi_scan or [], epi_scan_caches)]
+    new_tail = [keep(n, o) for n, o in zip(new_tail, caches["tail"])]
+
+    new_scan = []
+    for i in range(len(caches["scan"])):
+        st = jax.tree.map(lambda x: x.reshape((n_scan,) + x.shape[2:]),
+                          new_stage[i])
+        if leftover:
+            st = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              st, epi_merged_scan[i])
+        new_scan.append(st)
+    new_caches = {"scan": new_scan, "tail": new_tail}
+    return logits, new_caches, new_act
+
+
+# ---------------------------------------------------------------------------
 # Multi-round circular decode (the §4.3 steady state, compiled)
 # ---------------------------------------------------------------------------
 

@@ -83,6 +83,16 @@ def main() -> None:
     ap.add_argument("--mb-size", type=int, default=2)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="tokens per prefill chunk (0 = auto: 32, or the "
+                         "planned per-microbatch batch under --plan)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="prefill token budget per engine tick (0 = one "
+                         "chunk); rows per chunk = budget // chunk")
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=["auto", "chunked", "exact"],
+                    help="chunked admission (fully-paged archs) vs the "
+                         "exact-length fallback; auto picks per arch")
     ap.add_argument("--mixed", action="store_true",
                     help="serve a mixed workload: greedy, temperature, "
                          "top-k, and top-p requests through one engine")
@@ -133,14 +143,20 @@ def main() -> None:
             n_stages=args.stages, stage_time=t_s, latency=args.latency,
             m_kv_bytes=args.kv_budget_mb * 1e6, page_size=args.page_size,
             max_pages_per_seq=16, max_microbatches=16, mb_size_cap=4,
-            backend=args.backend, seed=args.seed)
+            backend=args.backend, seed=args.seed,
+            prefill_chunk=args.prefill_chunk,
+            max_prefill_tokens_per_tick=args.max_prefill_tokens,
+            prefill_mode=args.prefill_mode)
     else:
         pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
                           n_global_pages=16, max_pages_per_seq=16)
         econfig = EngineConfig(mb_size=args.mb_size,
                                num_microbatches=args.microbatches, pool=pool,
                                offload=True, backend=args.backend,
-                               n_stages=args.stages, seed=args.seed)
+                               n_stages=args.stages, seed=args.seed,
+                               prefill_chunk=args.prefill_chunk,
+                               max_prefill_tokens_per_tick=args.max_prefill_tokens,
+                               prefill_mode=args.prefill_mode)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
     engine = llm.engine
@@ -149,6 +165,10 @@ def main() -> None:
               f"mb_size={engine.mb_size} pool=(local={engine.pool.n_local_pages}, "
               f"global=2x{engine.pool.n_global_pages}) "
               f"util={engine.schedule_choice.utilisation:.2f}")
+    print(f"prefill: {'chunked' if engine.chunked_prefill else 'exact'} "
+          f"(chunk={engine.prefill_chunk} tokens, "
+          f"budget={engine.max_prefill_tokens_per_tick} tokens/tick, "
+          f"rows={engine.prefill_rows})")
 
     rng = np.random.RandomState(args.seed)
     prompts = [list(rng.randint(1, cfg.vocab_size, rng.randint(4, 24)))
@@ -169,7 +189,8 @@ def main() -> None:
     done = [o for o in outs if o.finished]
     print(f"finished {len(done)}/{args.requests} requests in "
           f"{rep['wall_time_s']:.2f}s "
-          f"({rep['decode_tok_per_s']:.1f} decode tok/s on this host; "
+          f"({rep['decode_tok_per_s']:.1f} decode tok/s, "
+          f"{rep['prefill_tok_per_s']:.1f} prefill tok/s on this host; "
           f"mean latency {rep['mean_latency_steps']:.1f} steps / "
           f"{rep['mean_latency_s']:.2f}s)")
     reasons = {}

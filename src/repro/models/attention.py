@@ -400,6 +400,53 @@ _flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Chunk-continuation attention (chunked prefill)
+# ---------------------------------------------------------------------------
+
+def chunk_attention(q: jax.Array, k_ctx: jax.Array, v_ctx: jax.Array,
+                    kv_pos: jax.Array, q_pos: jax.Array, *,
+                    window: int = 0) -> jax.Array:
+    """Attention of a prefill *chunk* against gathered cache context.
+
+    q      (B, C, H, Dh)  — the chunk's queries
+    k/v    (B, T, Hk, Dh) — cache context gathered in position order; the
+                            chunk's own keys must already be written into it
+    kv_pos (T,) or (B, T) — absolute position held by each context slot
+    q_pos  (B, C)         — absolute query positions, -1 = padded query
+
+    The mask is ``kv_pos <= q_pos`` (and the sliding window when given), so
+    unwritten / future context slots are dropped.  The math deliberately
+    mirrors one online-softmax step of ``_masked_attention`` (same score
+    scale, same finite ``NEG_INF`` mask, same ``p·v`` then ``/l`` order):
+    when the exact-length path runs a single kv chunk, chunked prefill is
+    bit-identical to it, because the extra masked context slots contribute
+    exact float zeros.  Fully-masked (padded) queries yield finite garbage,
+    never NaN.
+    """
+    b, c, h, dh = q.shape
+    hk = k_ctx.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = jnp.moveaxis(q.reshape(b, c, hk, g, dh), 1, 3)      # (B,Hk,G,C,D)
+
+    s = jnp.einsum("bkgqd,btkd->bkgqt", qg, k_ctx,
+                   preferred_element_type=jnp.float32) * scale
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]
+    mask = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (kv_pos[:, None, :] >= 0)
+    if window > 0:
+        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1), NEG_INF)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.maximum(jnp.sum(p, axis=-1), 1e-30)
+    pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v_ctx.dtype), v_ctx,
+                    preferred_element_type=jnp.float32)
+    out = (pv / l[..., None]).astype(q.dtype)                # (B,Hk,G,C,D)
+    return jnp.moveaxis(out, 3, 1).reshape(b, c, h, dh)
+
+
+# ---------------------------------------------------------------------------
 # Cached decode attention
 # ---------------------------------------------------------------------------
 

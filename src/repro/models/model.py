@@ -260,12 +260,18 @@ def _apply_rope(q, k, positions, cfg: ModelConfig, theta: float):
 
 
 def _write_prefill_paged(cache, k, v, positions):
-    """Scatter a prefill's k/v into the shared page pool."""
-    page_size = cache["k_pages"].shape[1]
+    """Scatter a prefill's k/v into the shared page pool.
+
+    Positions marked ``-1`` (padding) are redirected to an out-of-bounds
+    page index, so jit scatter semantics drop the write — pad tokens never
+    touch a live page."""
+    n_pages, page_size = cache["k_pages"].shape[:2]
     pos = positions.astype(jnp.int32)                     # (B, S)
-    logical = pos // page_size
+    valid = pos >= 0
+    logical = jnp.maximum(pos, 0) // page_size
     page = jnp.take_along_axis(cache["page_table"], logical, axis=1)
-    off = pos % page_size
+    page = jnp.where(valid, page, n_pages)                # OOB -> dropped
+    off = jnp.maximum(pos, 0) % page_size
     return {
         **cache,
         "k_pages": cache["k_pages"].at[page, off].set(k),
@@ -316,11 +322,12 @@ def _write_prefill_cache(cache, k, v, positions):
             out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
                 cache["v_scale"], v_s, 0, 1)
         return out
-    # ring: keep the last C tokens at slot = pos % C
+    # ring: keep the last C tokens at slot = pos % C; pad positions (-1)
+    # scatter out of bounds (dropped) instead of clobbering slot C-1
     b = k.shape[0]
     k_t, v_t = k[:, S - C:], v[:, S - C:]
     pos_t = positions[:, S - C:].astype(jnp.int32)
-    slot = pos_t % C
+    slot = jnp.where(pos_t >= 0, jnp.maximum(pos_t, 0) % C, C)
     bidx = jnp.arange(b)[:, None]
     out = {
         "k": cache["k"].at[bidx, slot].set(k_t),
@@ -390,6 +397,25 @@ def _attn_layer(kind, w, x, cfg: ModelConfig, rt: Runtime, *, positions,
             out = attn_lib.decode_attention(q[:, 0], kf, vf, pc, cur,
                                             window=window)
         out = out[:, None]                                  # (B,1,H,Dh)
+    elif mode == "chunk":
+        # chunked prefill continuation: write this chunk's KV into the
+        # shared pool, then attend the chunk's queries against the row's
+        # whole gathered extent (earlier chunks + this one).  Positions
+        # carry validity: -1 marks padded tokens (writes dropped, queries
+        # fully masked).  Restricted to paged layers — ring/recurrent
+        # kinds take the exact-length fallback path.
+        if "k_pages" not in cache:
+            raise NotImplementedError(
+                "chunked prefill supports paged attention layers only; "
+                "ring (sliding-window) layers must use exact-length prefill")
+        pos2d = positions[0] if positions.ndim == 3 else positions
+        new_cache = _write_prefill_paged(cache, k, v, pos2d)
+        pt = new_cache["page_table"]                        # (B, P)
+        n_ctx = pt.shape[1] * new_cache["k_pages"].shape[1]
+        kg = new_cache["k_pages"][pt].reshape(B, n_ctx, Hk, Dh)
+        vg = new_cache["v_pages"][pt].reshape(B, n_ctx, Hk, Dh)
+        out = attn_lib.chunk_attention(q, kg, vg, jnp.arange(n_ctx), pos2d,
+                                       window=window)
     else:
         if rt.use_pallas:
             from repro.kernels import ops as kops
@@ -420,10 +446,28 @@ def _attn_layer(kind, w, x, cfg: ModelConfig, rt: Runtime, *, positions,
     return x, new_cache
 
 
+def _recurrent_valid(positions, mode):
+    """Per-token validity mask for recurrent state updates.
+
+    Prefill positions marked ``-1`` are right-padding (bucketed prefill):
+    the recurrence must treat them as identity steps so the carried state
+    equals the exact-length result.  Decode/train positions are always
+    real — no mask, no masking cost."""
+    if mode != "prefill":
+        return None
+    pos = positions[0] if positions.ndim == 3 else positions
+    return pos >= 0
+
+
 def _rglru_layer(kind, w, x, cfg, rt, *, positions, mode, cache):
+    if mode == "chunk":
+        raise NotImplementedError(
+            "chunked prefill is not supported for recurrent layers")
     h = rms_norm(x, w["ln1"], cfg.norm_eps)
     y, new_state = rglru_lib.rglru_block(h, w, cfg.num_heads, mode=mode,
-                                         state=cache)
+                                         state=cache,
+                                         valid=_recurrent_valid(positions,
+                                                                mode))
     x = x + y
     if cfg.d_ff > 0:
         h2 = rms_norm(x, w["ln2"], cfg.norm_eps)
@@ -432,16 +476,26 @@ def _rglru_layer(kind, w, x, cfg, rt, *, positions, mode, cache):
 
 
 def _mlstm_layer(kind, w, x, cfg, rt, *, positions, mode, cache):
+    if mode == "chunk":
+        raise NotImplementedError(
+            "chunked prefill is not supported for recurrent layers")
     h = rms_norm(x, w["ln1"], cfg.norm_eps)
     y, new_state = xlstm_lib.mlstm_block(h, w, cfg.num_heads, mode=mode,
-                                         state=cache, chunk=rt.mlstm_chunk)
+                                         state=cache, chunk=rt.mlstm_chunk,
+                                         valid=_recurrent_valid(positions,
+                                                                mode))
     return x + y, new_state
 
 
 def _slstm_layer(kind, w, x, cfg, rt, *, positions, mode, cache):
+    if mode == "chunk":
+        raise NotImplementedError(
+            "chunked prefill is not supported for recurrent layers")
     h = rms_norm(x, w["ln1"], cfg.norm_eps)
     y, new_state = xlstm_lib.slstm_block(h, w, cfg.num_heads, mode=mode,
-                                         state=cache)
+                                         state=cache,
+                                         valid=_recurrent_valid(positions,
+                                                                mode))
     return x + y, new_state
 
 
@@ -653,9 +707,16 @@ def prefill(params, inputs: dict, cfg: ModelConfig, rt: Runtime,
     ``caches`` may be pre-built (e.g. the serving engine's paged pools);
     otherwise dense caches of ``capacity`` slots are created.  When the
     prompt is right-padded, ``last_index`` (B,) selects the true last
-    position for the returned logits."""
+    position for the returned logits — and marks the pad positions with
+    ``-1`` so cache writes drop them and recurrent layers freeze their
+    state across them (bucketed prefill stays state-exact)."""
     x, positions = embed_inputs(params, inputs, cfg, rt, mode="prefill")
     B, S = x.shape[:2]
+    if last_index is not None:
+        li = jnp.asarray(last_index, jnp.int32).reshape(B)
+        pad = jnp.arange(S)[None] > li[:, None]              # (B, S)
+        positions = jnp.where(pad[None] if positions.ndim == 3 else pad,
+                              -1, positions)
     if caches is None:
         caches = init_caches(cfg, B, capacity, rt)
     x, caches = run_layers(params, x, cfg, rt, mode="prefill", caches=caches,
@@ -667,6 +728,42 @@ def prefill(params, inputs: dict, cfg: ModelConfig, rt: Runtime,
         idx = jnp.asarray(last_index, jnp.int32).reshape(B, 1, 1)
         x_last = jnp.take_along_axis(
             x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])), axis=1)[:, 0]
+    logits = embed_lib.unembed(params["embed"], x_last, cfg)
+    return logits, caches
+
+
+def prefill_chunk(params, tokens: jax.Array, caches, offsets: jax.Array,
+                  n_valid: jax.Array, last_in_chunk: jax.Array,
+                  cfg: ModelConfig, rt: Runtime = DEFAULT_RUNTIME):
+    """One chunk of a (batched) chunked prefill.
+
+    tokens        (B, C) int32 — the next C prompt tokens of B sequences
+    offsets       (B,)   int32 — tokens already prefilled per row
+    n_valid       (B,)   int32 — real tokens in this chunk per row (0 = the
+                                 row is padding; its writes are dropped)
+    last_in_chunk (B,)   int32 — within-chunk index of the row's final
+                                 prompt token; only meaningful for rows
+                                 whose chunk is their last
+
+    ``caches`` must be paged-attention caches whose ``page_table`` rows are
+    the rows being prefilled (backends splice the per-request table rows
+    in).  Requires every layer kind to be paged ("attn"/"global") — the
+    engine gates recurrent / sliding-window archs to exact-length prefill.
+    Returns (logits (B, V) f32 at ``last_in_chunk``, new_caches).
+    """
+    cd = rt.compute_dtype
+    B, C = tokens.shape
+    iota = jnp.arange(C)[None]
+    pos = jnp.where(iota < n_valid[:, None], offsets[:, None] + iota, -1)
+    x = embed_lib.embed_tokens(params["embed"], tokens, cfg, cd)
+    positions = text_positions3(pos) if cfg.frontend == "vision_patches" \
+        else pos
+    x, caches = run_layers(params, x, cfg, rt, mode="chunk", caches=caches,
+                           positions=positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    idx = jnp.clip(last_in_chunk, 0, C - 1).reshape(B, 1, 1)
+    x_last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])), axis=1)[:, 0]
     logits = embed_lib.unembed(params["embed"], x_last, cfg)
     return logits, caches
 

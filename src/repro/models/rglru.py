@@ -66,11 +66,15 @@ def rglru_step(a: jax.Array, b: jax.Array, h: jax.Array) -> jax.Array:
 
 
 def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
-                  state: Optional[jax.Array] = None):
+                  state: Optional[jax.Array] = None,
+                  valid: Optional[jax.Array] = None):
     """Depthwise causal temporal conv.
 
     x: (B, S, Dr); w: (cw, Dr); state: (B, cw-1, Dr) trailing inputs of the
-    previous segment (decode / chunked prefill).  Returns (y, new_state).
+    previous segment (decode / chunked prefill).  ``valid`` (B, S) marks
+    real tokens when the segment is right-padded: the carried state is then
+    the window ending at each row's last *valid* input, not the pad tail.
+    Returns (y, new_state).
     """
     cw = w.shape[0]
     bsz, s, dr = x.shape
@@ -81,31 +85,61 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
     for i in range(cw):
         y = y + xp[:, i:i + s].astype(jnp.float32) * w[cw - 1 - i].astype(jnp.float32)
     y = y + b.astype(jnp.float32)
-    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros((bsz, 0, dr), x.dtype)
+    if cw == 1:
+        new_state = jnp.zeros((bsz, 0, dr), x.dtype)
+    elif valid is None:
+        new_state = xp[:, -(cw - 1):]
+    else:
+        # xp index of token j is j + cw - 1; a fully-padded row (last = -1)
+        # lands on xp[:cw-1], i.e. the previous state — unchanged.
+        last = jnp.sum(valid.astype(jnp.int32), axis=1) - 1    # (B,)
+        idx = last[:, None] + 1 + jnp.arange(cw - 1)[None]     # (B, cw-1)
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y.astype(x.dtype), new_state
 
 
 def rglru_block(x: jax.Array, w: dict, num_heads: int, *,
-                mode: str, state: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+                mode: str, state: Optional[dict],
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
     """Full Griffin recurrent mixer (everything between the residual adds).
 
     x: (B, S, D) normalised input.  state: {"h": (B, Dr) fp32,
-    "conv": (B, cw-1, Dr)} or None (train).
+    "conv": (B, cw-1, Dr)} or None (train).  ``valid`` (B, S) marks real
+    tokens of a right-padded prefill: pad steps become recurrence
+    identities (a=1, b=0), so the carried state is that of the last valid
+    token — bucketed prefill stays state-exact.
     """
     gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, w["wg"]).astype(jnp.float32))
     main = jnp.einsum("bsd,de->bse", x, w["wx"])                # (B, S, Dr)
 
     conv_state = state["conv"] if state is not None else None
-    main, new_conv = causal_conv1d(main, w["conv_w"], w["conv_b"], conv_state)
+    main, new_conv = causal_conv1d(main, w["conv_w"], w["conv_b"], conv_state,
+                                   valid=valid)
 
     a, b = rglru_gates(main, w, num_heads)
+    if valid is not None and mode != "decode":
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
     if mode == "decode":
         h = rglru_step(a[:, 0], b[:, 0], state["h"])            # (B, Dr)
         hs = h[:, None]
     else:
         h0 = state["h"] if state is not None else None
         hs = rglru_scan(a, b, h0)                               # (B, S, Dr)
-        h = hs[:, -1]
+        if valid is None:
+            h = hs[:, -1]
+        else:
+            # carry the state of the last *valid* step: prefix values of the
+            # identity-padded scan are bit-exact, but the pad tail is
+            # combined through a different tree — reading hs[:, -1] would
+            # lose bit-equality with the exact-length scan
+            last = jnp.sum(valid.astype(jnp.int32), axis=1) - 1
+            h = jnp.take_along_axis(
+                hs, jnp.maximum(last, 0)[:, None, None].astype(jnp.int32),
+                axis=1)[:, 0]
+            if h0 is not None:
+                h = jnp.where((last >= 0)[:, None], h, h0)
 
     y = hs * gate                                               # fp32
     y = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), w["wo"])

@@ -185,12 +185,20 @@ def mlstm_chunkwise(q, k, v, i_raw, f_raw, state=None, *, chunk: int = 64):
 
 def mlstm_block(x: jax.Array, w: dict, num_heads: int, *, mode: str,
                 state: Optional[dict], chunk: int = 64,
-                use_sequential: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+                use_sequential: bool = False,
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
     """Full mLSTM mixer: up-proj, per-head matrix-memory recurrence, gated
-    output, down-proj.  x (B, S, D) normalised input."""
+    output, down-proj.  x (B, S, D) normalised input.  ``valid`` (B, S)
+    marks real tokens of a right-padded prefill: pad steps force f=1 /
+    i=-inf (the same trick ``mlstm_chunkwise`` uses for its internal
+    padding), so the carried state ignores them."""
     xm = jnp.einsum("bsd,de->bse", x, w["wm"])     # main branch (B,S,Dr)
     xz = jnp.einsum("bsd,de->bse", x, w["wz"])     # gate branch
     q, kk, v, i_raw, f_raw = mlstm_qkv_gates(xm, w, num_heads)
+    if valid is not None and mode != "decode":
+        i_raw = jnp.where(valid[..., None], i_raw, -1e30)
+        f_raw = jnp.where(valid[..., None], f_raw, 40.0)
     if mode == "decode":
         h, new_state = mlstm_step(q[:, 0], kk[:, 0], v[:, 0],
                                   i_raw[:, 0], f_raw[:, 0], state)
@@ -246,11 +254,15 @@ def _slstm_cell(zx, st, r_w, num_heads):
 
 
 def slstm_block(x: jax.Array, w: dict, num_heads: int, *, mode: str,
-                state: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+                state: Optional[dict],
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
     """sLSTM mixer: input projections + sequential recurrence + down-proj.
 
     x (B, S, D).  w: {"w_in": (4, D, Dr), "b_in": (4, Dr),
-    "r": (4, H, dh, dh), "wo": (Dr, D)}.
+    "r": (4, H, dh, dh), "wo": (Dr, D)}.  ``valid`` (B, S) marks real
+    tokens of a right-padded prefill: pad steps carry the state through
+    unchanged (exact identity — the recurrence is sequential).
     """
     b, s, d = x.shape
     zx = (jnp.einsum("bsd,gde->bsge", x, w["w_in"]).astype(jnp.float32)
@@ -261,12 +273,21 @@ def slstm_block(x: jax.Array, w: dict, num_heads: int, *, mode: str,
         st = _slstm_cell(zx[:, 0], st, w["r"].astype(jnp.float32), num_heads)
         hs = st["h"][:, None]
     else:
-        def body(carry, zt):
-            carry = _slstm_cell(zt, carry, w["r"].astype(jnp.float32),
-                                num_heads)
-            return carry, carry["h"]
+        def body(carry, xs):
+            zt, vt = xs
+            new = _slstm_cell(zt, carry, w["r"].astype(jnp.float32),
+                              num_heads)
+            if vt is not None:
+                new = jax.tree.map(
+                    lambda n, o: jnp.where(vt[:, None], n, o), new, carry)
+            return new, new["h"]
 
-        st, hs = jax.lax.scan(body, st, zx.swapaxes(0, 1))
+        vxs = valid.swapaxes(0, 1) if valid is not None else None
+        if vxs is None:
+            st, hs = jax.lax.scan(lambda c, zt: body(c, (zt, None)), st,
+                                  zx.swapaxes(0, 1))
+        else:
+            st, hs = jax.lax.scan(body, st, (zx.swapaxes(0, 1), vxs))
         hs = hs.swapaxes(0, 1)                     # (B,S,Dr)
 
     y = jnp.einsum("bse,ed->bsd", hs.astype(x.dtype), w["wo"])

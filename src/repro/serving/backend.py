@@ -3,10 +3,19 @@
 The engine (``repro.serving.engine.OfflineEngine``) owns every piece of
 *bookkeeping* — request queue, decode slots, page allocator, page table,
 positions — while a backend owns the *compute plane*: the device cache
-pytree and every jit entry point.  The seam is three operations:
+pytree and every jit entry point.  The seam:
 
-  ``prefill(tokens, slot, last_index)``  — run one sequence's prompt into
-        the caches at ``slot``, return the last-position logits.
+  ``prefill_step(chunk)``  — advance the prefill plane one tick,
+        optionally injecting a :class:`PrefillChunk` (a fixed-shape batch
+        of prompt-token rows with their own page-table rows) — compiled
+        once.  Local backends return the chunk's :class:`PrefillResult`
+        immediately; pipelined backends route it stage-to-stage through a
+        second persistent pipe (overlapping in-flight decode) and return
+        it ``N_S − 1`` ticks later.  ``prefill_can_accept`` /
+        ``prefill_pending`` expose the pipe state.
+  ``prefill(tokens, slot, last_index)``  — the exact-length fallback
+        (recurrent / sliding-window archs): run one sequence's (padded)
+        prompt into the caches at ``slot``, return last-position logits.
   ``decode(mb, tokens, cur_pos, samp)``  — advance microbatch ``mb`` by one
         token tick; returns zero or more :class:`DecodeResult`.  A result
         may be for an *earlier* microbatch: pipelined backends drain with
@@ -66,6 +75,39 @@ class DecodeResult:
                                         # tokens[i] (raw-logits distribution)
 
 
+@dataclass
+class PrefillChunk:
+    """One per-tick prefill work unit: up to R rows of C prompt tokens each,
+    batched across queued/continuing sequences.  Shapes are fixed by the
+    engine (``prefill_rows`` x ``prefill_chunk``) so the chunk jit compiles
+    exactly once — padded rows carry ``n_valid == 0``."""
+    tokens: np.ndarray                  # (R, C) int32
+    slots: np.ndarray                   # (R,) int32 slot per row, -1 = pad
+    offsets: np.ndarray                 # (R,) int32 tokens already prefilled
+    n_valid: np.ndarray                 # (R,) int32 real tokens this chunk
+    lasts: np.ndarray                   # (R,) int32 within-chunk index of the
+                                        # final prompt token (-1: not final)
+    tables: np.ndarray                  # (R, max_pages) int32 page-table rows
+                                        # (the device-wide table keeps
+                                        # prefilling slots parked on scratch)
+    seqs: list                          # engine-side SequenceState refs —
+                                        # opaque to the backend
+    residency_mbs: tuple = ()           # microbatch ids (<= one per global-
+                                        # pool parity — the offloader keys
+                                        # host copies by mb, not parity)
+                                        # whose global pages the chunk
+                                        # writes; () = all-local
+
+
+@dataclass
+class PrefillResult:
+    """A drained prefill chunk: ``logits[i]`` are the last-position logits
+    of row ``i`` — meaningful only for rows whose chunk was their last
+    (``chunk.lasts[i] >= 0``)."""
+    chunk: PrefillChunk
+    logits: np.ndarray                  # (R, V) f32
+
+
 # cache-view helpers live with the cache layout; re-exported here because
 # backends are their main consumer
 slot_view = kvc.slot_view
@@ -112,6 +154,29 @@ class ExecutionBackend(abc.ABC):
 
     def pending(self) -> bool:
         """True while ticks are still in flight (engine keeps draining)."""
+        return False
+
+    # -- chunked prefill (batched admission) -------------------------------
+
+    def prefill_step(self, chunk: Optional["PrefillChunk"]
+                     ) -> List["PrefillResult"]:
+        """Advance the prefill plane one engine tick, optionally injecting
+        ``chunk``.  Local backends run the chunk synchronously and return
+        its result immediately; pipelined backends route it stage-to-stage
+        through the pipe (overlapping in-flight decode microbatches) and
+        return it ``N_S - 1`` ticks later.  Returns zero or more drained
+        :class:`PrefillResult`."""
+        if chunk is None:
+            return []
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement chunked prefill")
+
+    def prefill_can_accept(self) -> bool:
+        """True when a new chunk may be injected this tick."""
+        return True
+
+    def prefill_pending(self) -> bool:
+        """True while prefill chunks are still in flight."""
         return False
 
     @property
@@ -164,6 +229,32 @@ class _SlotCacheBackend(ExecutionBackend):
                                  self.caches, slot, last_index)
         return logits
 
+    # -- chunked prefill ---------------------------------------------------
+
+    @staticmethod
+    def _chunk_fn(params, caches, tokens, offsets, n_valid, lasts, tables,
+                  *, cfg, rt):
+        """One prefill chunk over the batch-wide caches.
+
+        Every paged layer's page table is swapped for the chunk's per-row
+        table rows (the device-wide table keeps prefilling slots parked on
+        the scratch page until activation, so in-flight decode ticks can
+        never clobber half-written prompt KV); pools are written in place;
+        the parked per-slot table leaves pass through untouched."""
+        def swap(c, stacked):
+            pt = jnp.broadcast_to(
+                tables[None], (c["page_table"].shape[0],) + tables.shape) \
+                if stacked else tables
+            return {**c, "page_table": pt}
+        view = {"scan": [swap(c, True) for c in caches["scan"]],
+                "tail": [swap(c, False) for c in caches["tail"]]}
+        logits, new = model_lib.prefill_chunk(params, tokens, view, offsets,
+                                              n_valid, lasts, cfg, rt)
+        keep = lambda n, o: {**n, "page_table": o["page_table"]}
+        return logits, {
+            "scan": [keep(n, o) for n, o in zip(new["scan"], caches["scan"])],
+            "tail": [keep(n, o) for n, o in zip(new["tail"], caches["tail"])]}
+
     @staticmethod
     def _prefill_fn(params, tokens, caches, slot, last_idx, *, cfg, rt):
         """Prefill one sequence into batch-wide caches at ``slot``: slice
@@ -201,10 +292,23 @@ class LocalBackend(_SlotCacheBackend):
         self.offloader = offloader
         self._decode_jit = jax.jit(functools.partial(
             self._decode_fn, cfg=cfg, rt=rt, mb_size=mb_size))
+        self._chunk_jit = jax.jit(functools.partial(
+            self._chunk_fn, cfg=cfg, rt=rt))
 
     def _prefill_residency(self, mb: int) -> None:
         if self.offloader is not None and self.pool.n_global_pages:
             self.caches = self.offloader.ensure_resident(self.caches, mb)
+
+    def prefill_step(self, chunk) -> List[PrefillResult]:
+        if chunk is None:
+            return []
+        for mb in chunk.residency_mbs:
+            self._prefill_residency(mb)
+        logits, self.caches = self._chunk_jit(
+            self.params, self.caches, jnp.asarray(chunk.tokens),
+            jnp.asarray(chunk.offsets), jnp.asarray(chunk.n_valid),
+            jnp.asarray(chunk.lasts), jnp.asarray(chunk.tables))
+        return [PrefillResult(chunk=chunk, logits=np.asarray(logits))]
 
     def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
                samp: RowSampling, active: bool = True) -> List[DecodeResult]:
@@ -283,6 +387,16 @@ class PipelinedBackend(_SlotCacheBackend):
         self._tick_jit = jax.jit(functools.partial(
             PL.pipeline_decode_tick, cfg=cfg, rt=rt,
             n_stages=n_stages, mb_size=mb_size, mesh=mesh))
+        # prefill pipe: a second persistent stepper with its own activation
+        # carry / shift register, so prompt chunks flow stage-to-stage and
+        # OVERLAP in-flight decode microbatches instead of pausing them.
+        # Shapes (chunk rows x chunk length) are fixed by the engine; the
+        # activation buffer and jit are built lazily on the first chunk.
+        self._pf_entries: List[Optional[PrefillChunk]] = [None] * n_stages
+        self._pf_act = None
+        self._pf_tick_jit = jax.jit(functools.partial(
+            PL.pipeline_prefill_chunk_tick, cfg=cfg, rt=rt,
+            n_stages=n_stages, mesh=mesh))
 
         # §4.2 offloading, per stage: stage s double-buffers its own
         # period-slice of the global pools; the epilogue (leftover periods
@@ -345,6 +459,57 @@ class PipelinedBackend(_SlotCacheBackend):
         for s in range(self.n_stages):
             self._ensure_stage_resident(s, mb)
         self._ensure_epi_resident(mb)
+
+    # -- the prefill stepper ------------------------------------------------
+
+    def prefill_can_accept(self) -> bool:
+        return self._pf_entries[0] is None
+
+    def prefill_pending(self) -> bool:
+        return any(e is not None for e in self._pf_entries)
+
+    def prefill_step(self, chunk) -> List[PrefillResult]:
+        entries = list(self._pf_entries)
+        if chunk is not None:
+            assert entries[0] is None, "prefill pipe stage 0 is occupied"
+            entries[0] = chunk
+        if not any(e is not None for e in entries):
+            return []
+        ref = next(e for e in entries if e is not None)
+        rows, clen = ref.tokens.shape
+        n_pages_row = ref.tables.shape[1]
+        if self._pf_act is None or self._pf_act.shape[1:3] != (rows, clen):
+            self._pf_act = jnp.zeros(
+                (self.n_stages, rows, clen, self.cfg.d_model),
+                self.rt.compute_dtype)
+
+        tokens = entries[0].tokens if entries[0] is not None \
+            else np.zeros((rows, clen), np.int32)
+        offs = np.zeros((self.n_stages, rows), np.int32)
+        nval = np.zeros((self.n_stages, rows), np.int32)
+        tabs = np.zeros((self.n_stages, rows, n_pages_row), np.int32)
+        for s, e in enumerate(entries):
+            if e is None:
+                continue
+            offs[s], nval[s], tabs[s] = e.offsets, e.n_valid, e.tables
+            for mb in e.residency_mbs:
+                self._ensure_stage_resident(s, mb)
+        drained = entries[-1]
+        if drained is not None:
+            for mb in drained.residency_mbs:
+                self._ensure_epi_resident(mb)
+        lasts = drained.lasts if drained is not None \
+            else np.zeros((rows,), np.int32)
+
+        logits, self.caches, self._pf_act = self._pf_tick_jit(
+            self.params, self.caches, self._pf_act,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(offs),
+            jnp.asarray(nval), jnp.asarray(tabs),
+            jnp.asarray(lasts, jnp.int32))
+        self._pf_entries = [None] + entries[:-1]
+        if drained is None:
+            return []
+        return [PrefillResult(chunk=drained, logits=np.asarray(logits))]
 
     # -- the stepper --------------------------------------------------------
 

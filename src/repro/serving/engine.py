@@ -31,9 +31,27 @@ swaps the non-resident pool to host between ticks (on TPU this is the
 HBM↔host DMA the paper overlaps with compute; on CPU it is an explicit copy
 — same bookkeeping, same schedule).
 
-Prefill is exact-length (rounded to a multiple of 8 for attention-only
-archs) and one sequence at a time; decode is one jit over the microbatch's
-``mb_size`` cache rows.  All jit entry points have static shapes.
+**Prefill is a first-class scheduler phase.**  For fully-paged archs
+(every layer kind "attn"/"global") admission is *chunked*: each tick emits
+at most one :class:`~repro.serving.backend.PrefillChunk` — up to
+``prefill_rows`` queued/continuing prompts x ``prefill_chunk`` tokens,
+budgeted by ``max_prefill_tokens_per_tick`` — through a single
+fixed-shape chunk jit.  Sequences hold their slot across ticks with
+``Status.PREFILLING`` and a ``prefill_pos`` cursor; the first token is
+sampled only when the last chunk lands, under the same reproducible
+``(seed, request_id, token_idx)`` key as every decode token.  The
+device-wide page table keeps prefilling slots parked on the scratch page
+(chunks carry their own table rows), so in-flight decode ticks can never
+clobber half-written prompt KV; a slot's real table row is pushed — and
+the row activated — only once its microbatch has no tick in flight.  On
+the pipelined backend, chunks flow stage-to-stage through a second
+persistent pipe and *overlap* in-flight decode microbatches.
+
+Recurrent and sliding-window archs keep the exact-length fallback (state
+correctness), one sequence at a time, with the pad length bucketed to the
+next power of two so the per-length jit cache stays bounded (pad
+positions are masked end-to-end — see ``model.prefill``).  All jit entry
+points have static shapes.
 """
 
 from __future__ import annotations
@@ -51,7 +69,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models.common import Runtime
 from repro.serving import kv_cache as kvc
-from repro.serving.backend import DecodeResult, ExecutionBackend, make_backend
+from repro.serving.backend import (DecodeResult, ExecutionBackend,
+                                   PrefillChunk, PrefillResult, make_backend)
 from repro.serving.request import (EngineStats, Request, SamplingParams,
                                    SequenceState, Status)
 from repro.serving.sampler import (RowSampling, fold_in_steps,
@@ -76,7 +95,10 @@ class OfflineEngine:
                  pool: Optional[kvc.PoolConfig] = None,
                  sampling: Optional[SamplingParams] = None,
                  offloader=None, seed: int = 0,
-                 backend="local", n_stages: int = 2, mesh=None):
+                 backend="local", n_stages: int = 2, mesh=None,
+                 prefill_chunk: int = 0,
+                 max_prefill_tokens_per_tick: int = 0,
+                 prefill_mode: str = "auto"):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -108,6 +130,43 @@ class OfflineEngine:
         self.samp_top_k = np.zeros((self.batch,), np.int32)
         self.samp_top_p = np.ones((self.batch,), np.float32)
 
+        # ---- chunked-prefill scheduler state -------------------------------
+        # chunked prefill requires every layer's KV to live in the shared
+        # page pools (writes redirect through per-chunk table rows);
+        # recurrent state and sliding-window rings take the exact fallback
+        supports_chunked = all(k in ("attn", "global")
+                               for k in cfg.layer_kinds())
+        if prefill_mode not in ("auto", "chunked", "exact"):
+            raise ValueError(
+                f"prefill_mode must be 'auto'|'chunked'|'exact', "
+                f"got {prefill_mode!r}")
+        if prefill_mode == "chunked" and not supports_chunked:
+            raise ValueError(
+                f"{cfg.name}: prefill_mode='chunked' needs every layer kind "
+                "to be paged ('attn'/'global'); recurrent and sliding-window "
+                "archs must use exact-length prefill")
+        self.chunked_prefill = supports_chunked and prefill_mode != "exact"
+        cap = self.pool.max_pages_per_seq * self.pool.page_size
+        if not prefill_chunk:           # default chunk: 32 tokens, shrunk
+            prefill_chunk = min(32,     # to an explicit per-tick budget
+                                max_prefill_tokens_per_tick or 32)
+        self.prefill_chunk = min(cap, prefill_chunk)
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {self.prefill_chunk}")
+        budget = max_prefill_tokens_per_tick or self.prefill_chunk
+        if budget < self.prefill_chunk:
+            raise ValueError(
+                f"max_prefill_tokens_per_tick={budget} < "
+                f"prefill_chunk={self.prefill_chunk}: the per-tick budget "
+                "must fit at least one chunk")
+        self.max_prefill_tokens_per_tick = budget
+        self.prefill_rows = max(1, budget // self.prefill_chunk)
+        self.prefilling: List[SequenceState] = []   # own a slot, not done
+        self._pending_activation: List[SequenceState] = []
+        self._inject_snap: Dict[int, tuple] = {}    # mb -> (active, seqs)
+                                                    # at decode injection
+
         self.queue: deque = deque()
         self.finished: List[SequenceState] = []
         self.stats = EngineStats()
@@ -124,7 +183,9 @@ class OfflineEngine:
                   use_offload: bool = True, max_microbatches: int = 64,
                   choice=None, mb_size_cap: int = 0, backend="local",
                   sampling: Optional[SamplingParams] = None, seed: int = 0,
-                  mesh=None) -> "OfflineEngine":
+                  mesh=None, prefill_chunk: int = 0,
+                  max_prefill_tokens_per_tick: int = 0,
+                  prefill_mode: str = "auto") -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
         ``repro.core.scheduler.plan_schedule`` — the paper's planner —
@@ -176,10 +237,21 @@ class OfflineEngine:
         if choice.offload and pool.n_global_pages:
             offloader = offload_lib.DoubleBufferOffloader(
                 pool, choice.n_microbatches)
+        if not prefill_chunk:
+            # planner-derived default: a prefill token costs the same model
+            # FLOPs as a decode token, so a chunk of ~per-microbatch-batch
+            # tokens costs <= one decode tick of stage time and never
+            # stretches the stage cadence the planner sized N_B for
+            # (floored at 8 so reduced/CPU runs don't degenerate to
+            # token-at-a-time prefill)
+            prefill_chunk = max(8, mb_size)
         eng = cls(cfg, params, rt, mb_size=mb_size,
                   num_microbatches=choice.n_microbatches, pool=pool,
                   sampling=sampling, offloader=offloader, seed=seed,
-                  backend=backend, n_stages=n_stages, mesh=mesh)
+                  backend=backend, n_stages=n_stages, mesh=mesh,
+                  prefill_chunk=prefill_chunk,
+                  max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
+                  prefill_mode=prefill_mode)
         eng.schedule_choice = choice
         return eng
 
@@ -189,10 +261,20 @@ class OfflineEngine:
 
     def submit(self, requests: List[Request]) -> List[SequenceState]:
         cap = self.pool.max_pages_per_seq * self.pool.page_size
+        resolved = []
         for r in requests:          # validate all before enqueueing any,
-            if r.sampling is None:  # so a raise never half-admits a batch
-                r.sampling = dataclasses.replace(self.default_sampling)
-            r.sampling.validate()
+                                    # so a raise never half-admits a batch.
+            # ``sampling=None`` resolves to the engine default on a private
+            # copy carried by the SequenceState — the caller's (possibly
+            # shared) Request object is never written back
+            sp = dataclasses.replace(r.sampling if r.sampling is not None
+                                     else self.default_sampling)
+            sp.validate()
+            resolved.append(sp)
+            if not r.prompt:
+                raise ValueError(
+                    f"request {r.request_id}: empty prompt — there is no "
+                    "position to prefill or sample the first token from")
             if len(r.prompt) >= cap:
                 raise ValueError(
                     f"request {r.request_id}: prompt length {len(r.prompt)} "
@@ -203,8 +285,9 @@ class OfflineEngine:
                     "truncate the prompt")
         now = time.perf_counter()
         seqs = []
-        for r in requests:
-            seq = SequenceState(request=r, submit_step=self.stats.steps,
+        for r, sp in zip(requests, resolved):
+            seq = SequenceState(request=r, sampling=sp,
+                                submit_step=self.stats.steps,
                                 submit_time=now)
             self.queue.append(seq)
             seqs.append(seq)
@@ -242,19 +325,39 @@ class OfflineEngine:
         return counts
 
     def step(self) -> bool:
-        """One engine tick: reap finished, admit new, tick one microbatch
-        through the backend.  Returns False when fully drained."""
+        """One engine tick: reap finished, run the prefill phase (one
+        budgeted chunk through the prefill plane, or the exact-length
+        fallback admission), tick one microbatch through the backend.
+        Returns False when fully drained."""
         t0 = time.perf_counter()
         self._reap()
-        self._admit()
+        tp = time.perf_counter()
+        if self.chunked_prefill:
+            chunk = self._build_chunk()
+            for res in self.backend.prefill_step(chunk):
+                self._apply_prefill_result(res)
+            self._activate_ready()
+        else:
+            self._admit()
+        tp2 = time.perf_counter()
         self.stats.queue_depth = len(self.queue)
-        if not self.active.any() and not self.queue and \
-                not self.backend.pending():
+        # drained iff no slot is occupied (active, prefilling, or finished-
+        # at-prefill awaiting reap), nothing queued, and neither the decode
+        # nor the prefill plane has ticks in flight
+        if not any(s is not None for s in self.slots) and not self.queue \
+                and not self.backend.pending() \
+                and not self.backend.prefill_pending():
+            self.stats.prefill_time_s += tp2 - tp
+            self.stats.decode_time_s += tp - t0
+            self.stats.wall_time_s += time.perf_counter() - t0
             return False
         mb = self.stats.steps % self.num_microbatches
         self._decode_microbatch(mb)
         self.stats.steps += 1
-        self.stats.wall_time_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.prefill_time_s += tp2 - tp
+        self.stats.decode_time_s += (tp - t0) + (t1 - tp2)
+        self.stats.wall_time_s += t1 - t0
         return True
 
     # ------------------------------------------------------------------
@@ -306,12 +409,154 @@ class OfflineEngine:
                 break
 
     # ------------------------------------------------------------------
-    # prefill
+    # chunked prefill (the default admission path for fully-paged archs)
+    # ------------------------------------------------------------------
+
+    def _allocate_slot(self, seq: SequenceState, slot: int,
+                       global_pool: Optional[int]) -> None:
+        """Allocate the slot's full page budget and bind the sequence to it
+        (raises MemoryError with nothing bound on exhaustion).  The caller
+        decides when to push the slot's real table row: the chunked path
+        parks it until activation (chunks carry their own table rows), the
+        exact path pushes it immediately."""
+        sp = seq.sampling
+        plen = seq.prompt_len
+        total_budget = plen + sp.max_new_tokens
+        n_pages = -(-min(total_budget,
+                         self.pool.max_pages_per_seq * self.pool.page_size)
+                    // self.pool.page_size)
+        pages = self.alloc.allocate(slot, n_pages, global_pool=global_pool)
+        has_global = any(p >= self.pool.n_local_pages for p in pages)
+        seq.global_parity = global_pool if has_global else None
+        seq.slot = slot
+        seq.prefill_pos = 0
+        seq.status = Status.PREFILLING
+        seq.budget = min(sp.max_new_tokens,
+                         self.pool.max_pages_per_seq * self.pool.page_size
+                         - plen)
+        self.slots[slot] = seq
+
+    def _build_chunk(self) -> Optional[PrefillChunk]:
+        """Assemble this tick's prefill work unit: continue partially
+        prefilled sequences first (FIFO), then admit queued prompts into
+        free slots, up to ``prefill_rows`` rows of ``prefill_chunk`` tokens
+        (the ``max_prefill_tokens_per_tick`` budget).  The offloader keys
+        global-pool host copies by *microbatch id*, so all rows drawing on
+        one pool parity must belong to the same microbatch (one per parity
+        can ride along); head-of-line blocking on page exhaustion is
+        preserved — the queue front retries after pages free up."""
+        if not self.backend.prefill_can_accept():
+            return None
+        rows: List[SequenceState] = []
+        # parity -> the single microbatch whose global-pool copy must be
+        # resident for this chunk (the offloader stages copies per mb)
+        parity_mb: Dict[int, Optional[int]] = {0: None, 1: None}
+        for seq in self.prefilling:
+            if len(rows) == self.prefill_rows:
+                break
+            if seq.chunk_inflight:
+                continue
+            mb = self._mb_of_slot(seq.slot)
+            if seq.global_parity is not None:
+                if parity_mb[mb % 2] not in (None, mb):
+                    continue            # another mb owns this parity slice
+                parity_mb[mb % 2] = mb
+            rows.append(seq)
+        if len(rows) < self.prefill_rows and self.queue:
+            free = [s for s in range(self.batch) if self.slots[s] is None]
+            for slot in free:
+                if not self.queue or len(rows) == self.prefill_rows:
+                    break
+                mb = self._mb_of_slot(slot)
+                gp = mb % 2 if self.pool.n_global_pages else None
+                if gp is not None and parity_mb[gp] not in (None, mb):
+                    continue            # slot would pull the wrong mb's copy
+                seq = self.queue[0]
+                try:
+                    self._allocate_slot(seq, slot, gp)
+                except MemoryError:
+                    break               # head-of-line retry next tick
+                self.queue.popleft()
+                if seq.global_parity is not None:
+                    parity_mb[mb % 2] = mb
+                self.prefilling.append(seq)
+                rows.append(seq)
+        if not rows:
+            return None
+
+        R, C = self.prefill_rows, self.prefill_chunk
+        tokens = np.zeros((R, C), np.int32)
+        slots = np.full((R,), -1, np.int32)
+        offsets = np.zeros((R,), np.int32)
+        n_valid = np.zeros((R,), np.int32)
+        lasts = np.full((R,), -1, np.int32)
+        tables = np.zeros((R, self.pool.max_pages_per_seq), np.int32)
+        for i, seq in enumerate(rows):
+            prompt = seq.request.prompt
+            take = min(C, len(prompt) - seq.prefill_pos)
+            tokens[i, :take] = prompt[seq.prefill_pos:seq.prefill_pos + take]
+            slots[i] = seq.slot
+            offsets[i] = seq.prefill_pos
+            n_valid[i] = take
+            if seq.prefill_pos + take == len(prompt):
+                lasts[i] = take - 1
+            tables[i] = self.alloc.table_row(seq.slot)
+            seq.chunk_inflight = True
+        return PrefillChunk(
+            tokens=tokens, slots=slots, offsets=offsets, n_valid=n_valid,
+            lasts=lasts, tables=tables, seqs=rows,
+            residency_mbs=tuple(m for m in parity_mb.values()
+                                if m is not None))
+
+    def _apply_prefill_result(self, res: PrefillResult) -> None:
+        for i, seq in enumerate(res.chunk.seqs):
+            seq.chunk_inflight = False
+            take = int(res.chunk.n_valid[i])
+            seq.prefill_pos += take
+            self.stats.prefill_tokens += take
+            if seq.prefill_pos >= seq.prompt_len:
+                self._finish_prefill(seq, res.logits[i])
+
+    def _finish_prefill(self, seq: SequenceState, logits_row) -> None:
+        """The sequence's last chunk landed: sample its first token (same
+        keying as every decode token) and queue it for activation."""
+        self._sample_first_token(seq, seq.slot, logits_row)
+        self.prefilling.remove(seq)
+        if not seq.is_done():               # finished at prefill (eos /
+            self._pending_activation.append(seq)    # zero budget): reap
+                                                    # without ever decoding
+
+    def _activate_ready(self) -> None:
+        """Push real page-table rows and activate completed prefills whose
+        microbatch has no decode tick in flight (an in-flight tick still
+        writes its bubble rows against the parked table — swapping the row
+        under it would clobber the fresh prompt KV at position 0)."""
+        if not self._pending_activation:
+            return
+        busy = self.backend.busy_microbatches()
+        held, changed = [], False
+        for seq in self._pending_activation:
+            if self._mb_of_slot(seq.slot) in busy:
+                held.append(seq)
+                continue
+            self.table[seq.slot] = self.alloc.table_row(seq.slot)
+            seq.status = Status.DECODING
+            self.active[seq.slot] = True
+            changed = True
+        self._pending_activation = held
+        if changed:
+            self.backend.set_page_table(self.table)
+
+    # ------------------------------------------------------------------
+    # prefill (exact-length fallback: recurrent / sliding-window archs)
     # ------------------------------------------------------------------
 
     def _prefill_len(self, n: int) -> int:
         if self.cfg.recurrent_layer_count() > 0:
-            return n                            # exact (state correctness)
+            # bucket to the next power of two so the per-length jit cache
+            # is bounded (log2 entries); state stays exact — pad positions
+            # are masked through the recurrences (model.prefill)
+            return max(8, 1 << (n - 1).bit_length())
         return max(8, (n + 7) // 8 * 8)
 
     def _request_key(self, request_id: int) -> np.ndarray:
@@ -321,34 +566,13 @@ class OfflineEngine:
         return np.asarray(jax.random.fold_in(self._seed_key, request_id),
                           np.uint32)
 
-    def _prefill_into_slot(self, seq: SequenceState, slot: int) -> None:
-        prompt = seq.request.prompt
-        sp = seq.request.sampling
-        plen = len(prompt)
-        total_budget = plen + sp.max_new_tokens
-        n_pages = -(-min(total_budget,
-                         self.pool.max_pages_per_seq * self.pool.page_size)
-                    // self.pool.page_size)
-        gp = self._mb_of_slot(slot) % 2 if self.pool.n_global_pages else None
-        pages = self.alloc.allocate(slot, n_pages, global_pool=gp)
-        self.table[slot] = self.alloc.table_row(slot)
-        has_global = any(p >= self.pool.n_local_pages for p in pages)
-
-        self.backend.reset_slot(slot)
-        self.backend.set_page_table(self.table)
-
-        # engine-side generation budget: never outgrow the page allocation
-        seq.budget = min(sp.max_new_tokens,
-                         self.pool.max_pages_per_seq * self.pool.page_size
-                         - plen)
-        lp = self._prefill_len(plen)
-        toks = np.zeros((lp,), np.int32)
-        toks[:plen] = prompt
-        logits = self.backend.prefill(toks, slot, plen - 1,
-                                      has_global_pages=has_global)
-
-        # the first token is sampled with the *request's* params under its
-        # own key (token index 0) — same path as every decode token
+    def _sample_first_token(self, seq: SequenceState, slot: int,
+                            logits) -> None:
+        """Set the slot's sampling state and sample the request's first
+        token from its last-position prefill logits — the request's own
+        params under its own key (token index 0), the same path as every
+        decode token.  Shared by the chunked and exact prefill paths."""
+        sp = seq.sampling
         base = self._request_key(seq.request.request_id)
         self.samp_keys[slot] = base
         self.samp_temp[slot] = sp.temperature
@@ -364,17 +588,31 @@ class OfflineEngine:
             jnp.asarray(self.samp_temp[slot:slot + 1]),
             jnp.asarray(self.samp_top_k[slot:slot + 1]),
             jnp.asarray(self.samp_top_p[slot:slot + 1]))
-        first = int(first_arr[0])
         if sp.logprobs:
             seq.logprobs = [float(first_lp[0])]
-        seq.generated.append(first)
-        seq.slot = slot
-        seq.status = Status.DECODING
-        self.slots[slot] = seq
-        self.active[slot] = True
-        self.cur_pos[slot] = plen               # position of `first`
-        self.stats.prefill_tokens += plen
+        seq.generated.append(int(first_arr[0]))
+        self.cur_pos[slot] = seq.prompt_len     # position of the first token
         self.stats.decode_tokens += 1
+
+    def _prefill_into_slot(self, seq: SequenceState, slot: int) -> None:
+        prompt = seq.request.prompt
+        plen = len(prompt)
+        gp = self._mb_of_slot(slot) % 2 if self.pool.n_global_pages else None
+        self._allocate_slot(seq, slot, gp)      # pages + budget + binding
+        self.table[slot] = self.alloc.table_row(slot)
+        self.backend.reset_slot(slot)
+        self.backend.set_page_table(self.table)
+
+        lp = self._prefill_len(plen)
+        toks = np.zeros((lp,), np.int32)
+        toks[:plen] = prompt
+        logits = self.backend.prefill(
+            toks, slot, plen - 1,
+            has_global_pages=seq.global_parity is not None)
+        self._sample_first_token(seq, slot, logits)
+        seq.status = Status.DECODING
+        self.active[slot] = True
+        self.stats.prefill_tokens += plen
 
     # ------------------------------------------------------------------
     # decode
@@ -404,6 +642,13 @@ class OfflineEngine:
             seq = self.slots[slot]
             if seq is not None and seq.generated:
                 tokens[i] = seq.generated[-1]
+        if mb_active:
+            # snapshot which rows (and which sequences) this injection is
+            # for: with chunked prefill a slot can be reassigned, or become
+            # active, while the tick is still in flight — the drained
+            # result must never be booked against the new occupant
+            self._inject_snap[mb] = (self.active[lo:hi].copy(),
+                                     list(self.slots[lo:hi]))
         results = self.backend.decode(mb, tokens, self.cur_pos[lo:hi],
                                       self._row_sampling(lo, hi),
                                       active=mb_active)
@@ -416,11 +661,15 @@ class OfflineEngine:
         microbatch than the one just injected — pipelined backends drain
         with N_S − 1 ticks of latency)."""
         lo = res.mb * self.mb_size
+        snap = self._inject_snap.pop(res.mb, None)
         for i, slot in enumerate(range(lo, lo + self.mb_size)):
             seq = self.slots[slot]
             if seq is None or seq.is_done():
                 continue            # finished at prefill (eos/budget): reap
                                     # next tick, never extend
+            if snap is not None and (not snap[0][i] or snap[1][i] is not seq):
+                continue            # row wasn't live at injection (still
+                                    # prefilling, or slot reassigned)
             seq.generated.append(int(res.tokens[i]))
             if seq.logprobs is not None:
                 seq.logprobs.append(float(res.logprobs[i]))
@@ -453,7 +702,10 @@ class OfflineEngine:
             "steps": self.stats.steps,
             "swaps": self.stats.swaps,
             "wall_time_s": self.stats.wall_time_s,
+            "prefill_time_s": self.stats.prefill_time_s,
+            "decode_time_s": self.stats.decode_time_s,
             "decode_tok_per_s": self.stats.decode_tok_per_s,
+            "prefill_tok_per_s": self.stats.prefill_tok_per_s,
             "queue_depth": self.stats.queue_depth,
             "status_counts": self.stats.status_counts,
             "aborted": self.stats.aborted,

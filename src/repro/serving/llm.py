@@ -56,6 +56,14 @@ class EngineConfig:
     n_stages: int = 2                 # N_S (pipelined backend)
     seed: int = 0
     mesh: Optional[object] = None
+    # chunked prefill: prompts are admitted in budgeted chunks interleaved
+    # with decode ticks (fully-paged archs; recurrent/sliding-window archs
+    # fall back to exact-length prefill).  0 = derive a default — 32
+    # tokens, or ~the planned per-microbatch batch under .plan() so one
+    # chunk costs <= one decode tick of model FLOPs.
+    prefill_chunk: int = 0            # tokens per chunk (0 = auto)
+    max_prefill_tokens_per_tick: int = 0   # per-tick budget (0 = one chunk)
+    prefill_mode: str = "auto"        # "auto" | "chunked" | "exact"
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -70,6 +78,22 @@ class EngineConfig:
                              f"got {self.num_microbatches}")
         if self.n_stages < 1:
             raise ValueError(f"n_stages must be >= 1, got {self.n_stages}")
+        if self.prefill_mode not in ("auto", "chunked", "exact"):
+            raise ValueError("prefill_mode must be 'auto'|'chunked'|'exact'"
+                             f", got {self.prefill_mode!r}")
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, "
+                             f"got {self.prefill_chunk}")
+        if self.max_prefill_tokens_per_tick < 0:
+            raise ValueError("max_prefill_tokens_per_tick must be >= 0, "
+                             f"got {self.max_prefill_tokens_per_tick}")
+        if self.prefill_chunk and self.max_prefill_tokens_per_tick and \
+                self.max_prefill_tokens_per_tick < self.prefill_chunk:
+            raise ValueError(
+                f"max_prefill_tokens_per_tick="
+                f"{self.max_prefill_tokens_per_tick} < prefill_chunk="
+                f"{self.prefill_chunk}: the per-tick budget must fit at "
+                "least one chunk")
         if self.plan_args is None and self.backend == "pipelined" \
                 and self.num_microbatches < self.n_stages:
             raise ValueError(
@@ -83,12 +107,19 @@ class EngineConfig:
              max_pages_per_seq: int = 16, bandwidth: float = 0.0,
              use_offload: bool = True, max_microbatches: int = 64,
              choice=None, mb_size_cap: int = 0, backend: str = "local",
-             seed: int = 0, mesh=None) -> "EngineConfig":
+             seed: int = 0, mesh=None, prefill_chunk: int = 0,
+             max_prefill_tokens_per_tick: int = 0,
+             prefill_mode: str = "auto") -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
         the planned counterpart of hand-set knobs (subsumes
-        ``OfflineEngine.from_plan``)."""
+        ``OfflineEngine.from_plan``).  ``prefill_chunk=0`` derives the
+        chunk from the plan: ~the per-microbatch decode batch, so one
+        chunk costs at most one decode tick of stage time."""
         return cls(backend=backend, n_stages=n_stages, seed=seed, mesh=mesh,
+                   prefill_chunk=prefill_chunk,
+                   max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
+                   prefill_mode=prefill_mode,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, m_kv_bytes=m_kv_bytes,
@@ -103,7 +134,9 @@ class EngineConfig:
         if self.plan_args is not None:
             return OfflineEngine.from_plan(
                 cfg, params, rt, backend=self.backend, seed=self.seed,
-                mesh=self.mesh, **self.plan_args)
+                mesh=self.mesh, prefill_chunk=self.prefill_chunk,
+                max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
+                prefill_mode=self.prefill_mode, **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
         if self.offload and pool.n_global_pages:
@@ -113,7 +146,10 @@ class EngineConfig:
             cfg, params, rt, mb_size=self.mb_size,
             num_microbatches=self.num_microbatches, pool=pool,
             offloader=offloader, seed=self.seed, backend=self.backend,
-            n_stages=self.n_stages, mesh=self.mesh)
+            n_stages=self.n_stages, mesh=self.mesh,
+            prefill_chunk=self.prefill_chunk,
+            max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
+            prefill_mode=self.prefill_mode)
 
 
 @dataclass

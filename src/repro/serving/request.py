@@ -55,16 +55,30 @@ class Request:
 @dataclass
 class SequenceState:
     request: Request
+    # the request's effective SamplingParams, resolved at submit() onto a
+    # private copy — the caller's Request object is never written back
+    # (``request.sampling`` may legitimately stay None)
+    sampling: Optional[SamplingParams] = None
     status: Status = Status.QUEUED
     slot: int = -1                    # decode-batch slot, -1 = unassigned
     generated: List[int] = field(default_factory=list)
     budget: Optional[int] = None      # engine-side cap (page capacity)
     logprobs: Optional[List[float]] = None    # per generated token, if asked
+    # chunked prefill: prompt tokens already written into the KV cache and
+    # whether a chunk for this sequence is currently in the prefill pipe
+    prefill_pos: int = 0
+    chunk_inflight: bool = False
+    global_parity: Optional[int] = None       # global-pool parity of the
+                                              # slot's pages (None=all-local)
     # lifecycle accounting (engine steps + wall clock at submit/finish)
     submit_step: int = -1
     finish_step: int = -1
     submit_time: float = 0.0
     finish_time: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.sampling is None:
+            self.sampling = self.request.sampling
 
     @property
     def prompt_len(self) -> int:
@@ -75,7 +89,7 @@ class SequenceState:
         return self.prompt_len + len(self.generated)
 
     def _cap(self) -> int:
-        sp = self.request.sampling
+        sp = self.sampling
         return sp.max_new_tokens if self.budget is None else \
             min(sp.max_new_tokens, self.budget)
 
@@ -83,13 +97,13 @@ class SequenceState:
         if len(self.generated) >= self._cap():
             return True
         return bool(self.generated) and \
-            self.generated[-1] == self.request.sampling.eos_token
+            self.generated[-1] == self.sampling.eos_token
 
     def finish_reason(self) -> Optional[FinishReason]:
         """Why the sequence stopped (None while still in flight)."""
         if not self.is_done():
             return None
-        sp = self.request.sampling
+        sp = self.sampling
         if self.generated and self.generated[-1] == sp.eos_token:
             return FinishReason.EOS
         if self.budget is not None and self.budget < sp.max_new_tokens \
@@ -118,6 +132,11 @@ class EngineStats:
     steps: int = 0
     swaps: int = 0                    # page-pool swap events (offload manager)
     wall_time_s: float = 0.0          # accumulated inside step()
+    # wall_time_s split by phase so prefill changes are measurable without
+    # confounding decode throughput: prefill covers admission + chunk/exact
+    # prefill work, decode covers the microbatch tick (+ reap)
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
     queue_depth: int = 0              # requests waiting (refreshed per step)
     status_counts: Dict[str, int] = field(default_factory=dict)
                                       # refreshed by throughput_report() /
@@ -131,5 +150,10 @@ class EngineStats:
 
     @property
     def decode_tok_per_s(self) -> float:
-        return self.decode_tokens / self.wall_time_s if self.wall_time_s \
+        return self.decode_tokens / self.decode_time_s if self.decode_time_s \
             else 0.0
+
+    @property
+    def prefill_tok_per_s(self) -> float:
+        return self.prefill_tokens / self.prefill_time_s \
+            if self.prefill_time_s else 0.0

@@ -216,17 +216,22 @@ sps = [SamplingParams(temperature=0.0, max_new_tokens=4),
                       max_new_tokens=4)]
 runs = {}
 for backend in ("local", "pipelined"):
-    llm = LLM("yi-9b", config=EngineConfig(
-        mb_size=2, num_microbatches=2, pool=pool, offload=True,
-        backend=backend, n_stages=2))
-    if prompts is None:
-        prompts = [list(rng.randint(1, llm.cfg.vocab_size, 6))
-                   for _ in range(6)]
-    runs[backend] = {o.request_id: o.token_ids
-                     for o in llm.generate(prompts, sps)}
-    assert all(o_ids for o_ids in runs[backend].values())
-bad = [k for k in runs["local"] if runs["local"][k] != runs["pipelined"][k]]
-assert not bad, (bad, runs)
+    for prefill_mode in ("chunked", "exact"):
+        llm = LLM("yi-9b", config=EngineConfig(
+            mb_size=2, num_microbatches=2, pool=pool, offload=True,
+            backend=backend, n_stages=2, prefill_mode=prefill_mode,
+            prefill_chunk=4, max_prefill_tokens_per_tick=8))
+        if prompts is None:
+            prompts = [list(rng.randint(1, llm.cfg.vocab_size,
+                                        rng.randint(3, 16)))
+                       for _ in range(6)]
+        runs[backend, prefill_mode] = {
+            o.request_id: o.token_ids for o in llm.generate(prompts, sps)}
+        assert all(o_ids for o_ids in runs[backend, prefill_mode].values())
+base = runs["local", "exact"]
+for key, run in runs.items():
+    bad = [k for k in base if base[k] != run[k]]
+    assert not bad, (key, bad, runs)
 print("MIXED-OK")
 """
 
@@ -234,7 +239,9 @@ print("MIXED-OK")
 @pytest.mark.slow
 def test_mixed_sampling_local_pipelined_equivalence():
     """Acceptance: a mixed greedy+sampled workload produces identical
-    per-request token streams on LocalBackend vs the 2-stage pipe."""
+    per-request token streams across LocalBackend vs the 2-stage pipe AND
+    chunked (multi-chunk prompts) vs exact-length prefill — all four
+    combinations bit-identical per request."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     r = subprocess.run([sys.executable, "-c", MIXED_EQUIV_SCRIPT], env=env,
@@ -347,15 +354,17 @@ def test_status_lifecycle_and_counts(rt):
     assert all(s.status is Status.QUEUED for s in seqs)
     assert eng.stats.queue_depth == 3
 
-    # PREFILLING is visible while the backend prefills the admitted seq
+    # PREFILLING is visible while the backend runs the admitted seq's
+    # chunk (chunked admission goes through prefill_step, not prefill)
     seen = []
-    orig = eng.backend.prefill
+    orig = eng.backend.prefill_step
 
-    def spy(*a, **kw):
-        seen.append([s.status for s in seqs])
-        return orig(*a, **kw)
+    def spy(chunk):
+        if chunk is not None:
+            seen.append([s.status for s in seqs])
+        return orig(chunk)
 
-    eng.backend.prefill = spy
+    eng.backend.prefill_step = spy
     assert eng.step()
     assert seen and seen[0][0] is Status.PREFILLING
     assert seqs[0].status is Status.DECODING

@@ -1,0 +1,347 @@
+"""Chunked prefill as a first-class scheduler phase: batched/budgeted
+admission, bit-identity with the exact-length path, prefill through the
+pipe without blocking in-flight decode, page-exhaustion admission, the
+submit() no-mutation contract, phase-split stats, and pow2 bucketing of
+the recurrent exact-length fallback."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.models import model as M
+from repro.serving.engine import OfflineEngine
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.llm import LLM, EngineConfig
+from repro.serving.request import (FinishReason, Request, SamplingParams,
+                                   Status)
+
+POOL = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
+                  max_pages_per_seq=8)
+
+
+def _prompts(cfg, n, seed=0, lo=3, hi=20):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, cfg.vocab_size, rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _mixed_sps(n, max_new=5):
+    pol = [SamplingParams(temperature=0.0, max_new_tokens=max_new),
+           SamplingParams(temperature=1.0, top_k=8, max_new_tokens=max_new),
+           SamplingParams(temperature=0.7, top_p=0.9,
+                          max_new_tokens=max_new)]
+    return [pol[i % len(pol)] for i in range(n)]
+
+
+# ------------------------------------------------------ chunked == exact ---
+
+def test_chunked_prefill_bit_identical_to_exact_local(rt):
+    """Acceptance: multi-chunk prefill (chunk=4, prompts up to 19 tokens,
+    2 rows per tick) produces bit-identical greedy AND sampled token
+    streams to the exact-length path on LocalBackend."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    prompts = _prompts(cfg, 6, seed=3)
+    sps = _mixed_sps(6)
+    runs = {}
+    for mode in ("exact", "chunked"):
+        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+            mb_size=2, num_microbatches=2, pool=POOL, offload=True,
+            prefill_mode=mode, prefill_chunk=4,
+            max_prefill_tokens_per_tick=8))
+        assert llm.engine.chunked_prefill == (mode == "chunked")
+        runs[mode] = {o.request_id: (o.token_ids, o.finish_reason)
+                      for o in llm.generate(prompts, sps)}
+    assert runs["exact"] == runs["chunked"]
+
+
+def test_chunked_prefill_single_fixed_shape_jit(rt):
+    """The chunk jit compiles at one fixed (rows, chunk) shape: the
+    per-length ``_prefill_jits`` dict stays empty on the chunked path
+    even with many distinct prompt lengths."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+        mb_size=2, num_microbatches=1, pool=POOL, prefill_chunk=4))
+    prompts = [list(range(1, 2 + n)) for n in (1, 3, 5, 7, 9, 11)]
+    outs = llm.generate(prompts, SamplingParams(temperature=0.0,
+                                                max_new_tokens=2))
+    assert all(o.finished for o in outs)
+    assert llm.engine.backend._prefill_jits == {}
+
+
+def test_chunked_rejected_for_recurrent_archs(rt):
+    cfg = tiny("recurrentgemma-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    with pytest.raises(ValueError, match="paged"):
+        OfflineEngine(cfg, params, rt, pool=POOL, prefill_mode="chunked")
+    # auto falls back to exact
+    eng = OfflineEngine(cfg, params, rt, pool=POOL)
+    assert not eng.chunked_prefill
+
+
+def test_chunked_prefill_offload_residency_uses_real_microbatch(rt):
+    """With N_B >= 3 the offloader keys host copies by *microbatch id*,
+    not pool parity: a chunk writing global-pool pages of a microbatch-2
+    slot must run with microbatch 2's copy resident, or the prompt KV is
+    staged under the wrong host key and zeroed at the next swap."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    from repro.core.offload import DoubleBufferOffloader
+    # 3 usable local pages force every sequence's pages into the global
+    # pools; slots 0/2 share parity 0 with different microbatch ids
+    pool = PoolConfig(page_size=8, n_local_pages=4, n_global_pages=16,
+                      max_pages_per_seq=8)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=6)
+    prompts = _prompts(cfg, 6, seed=9, lo=6, hi=16)
+    runs = {}
+    for mode in ("exact", "chunked"):
+        eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=3,
+                            pool=pool, sampling=sp,
+                            offloader=DoubleBufferOffloader(pool, 3),
+                            prefill_mode=mode, prefill_chunk=4,
+                            max_prefill_tokens_per_tick=8)
+        eng.submit([Request(i, p, sp) for i, p in enumerate(prompts)])
+        done = eng.run(max_steps=500)
+        assert len(done) == 6
+        runs[mode] = {s.request.request_id: s.generated for s in done}
+        assert eng.backend.swap_count > 0      # offloading actually engaged
+    assert runs["exact"] == runs["chunked"]
+
+
+# ------------------------------------------------- page exhaustion path ---
+
+TINY_POOL = PoolConfig(page_size=4, n_local_pages=4, max_pages_per_seq=4)
+
+
+def _exhaustion_engine(rt, cfg, params, backend, prefill_mode):
+    return OfflineEngine(
+        cfg, params, rt, mb_size=2, num_microbatches=1, pool=TINY_POOL,
+        backend=backend, n_stages=1, prefill_mode=prefill_mode,
+        sampling=SamplingParams(temperature=0.0, max_new_tokens=8))
+
+
+@pytest.mark.parametrize("backend,prefill_mode", [
+    ("local", "chunked"), ("local", "exact"), ("pipelined", "chunked")])
+def test_memory_error_requeues_head_of_line(rt, backend, prefill_mode):
+    """Page exhaustion at admission: the head-of-line request stays QUEUED
+    (never half-admitted) and retries after the running request frees its
+    pages — on both backends and both admission paths."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    eng = _exhaustion_engine(rt, cfg, params, backend, prefill_mode)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=8)
+    # each request needs 3 pages (3 prompt + 8 new = 11 tokens); the pool
+    # has 3 usable pages (page 0 is scratch) — only one fits at a time
+    seqs = eng.submit([Request(i, [3 + i, 4, 5], sp) for i in range(2)])
+    assert eng.step()
+    assert seqs[0].status in (Status.PREFILLING, Status.DECODING)
+    assert seqs[1].status is Status.QUEUED          # requeued, not dropped
+    assert eng.queue and eng.queue[0] is seqs[1]    # head of line
+    done = eng.run(max_steps=300)
+    assert len(done) == 2
+    assert [s.request.request_id for s in done] == [0, 1]
+    for s in done:
+        assert len(s.generated) == 8
+        assert s.finish_reason() is FinishReason.LENGTH
+
+
+@pytest.mark.parametrize("backend", ["local", "pipelined"])
+def test_page_budget_finish_reason(rt, backend):
+    """A request whose max_new_tokens exceeds the slot's page capacity is
+    capped by the engine-side budget and finishes with page_budget."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    eng = OfflineEngine(
+        cfg, params, rt, mb_size=1, num_microbatches=1,
+        pool=PoolConfig(page_size=4, n_local_pages=16, max_pages_per_seq=4),
+        backend=backend, n_stages=1)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=50)
+    eng.submit([Request(0, [3, 4, 5], sp)])
+    done = eng.run(max_steps=300)
+    assert len(done) == 1
+    assert done[0].finish_reason() is FinishReason.PAGE_BUDGET
+    assert len(done[0].generated) == 13             # 16-token cap - 3 prompt
+
+
+# ------------------------------------------------------------ satellites ---
+
+def test_submit_never_mutates_caller_request(rt):
+    """A Request submitted with sampling=None keeps sampling=None: the
+    engine default is resolved onto the SequenceState's private copy, so a
+    caller-shared Request object is never written back."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=1,
+                        pool=POOL,
+                        sampling=SamplingParams(temperature=0.0,
+                                                max_new_tokens=3))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([Request(9, [], None)])
+    shared = Request(0, [3, 4, 5], None)
+    explicit = Request(1, [5, 6, 7], SamplingParams(temperature=0.0,
+                                                    max_new_tokens=2))
+    seqs = eng.submit([shared, explicit])
+    assert shared.sampling is None                  # caller object untouched
+    assert seqs[0].sampling.max_new_tokens == 3     # default resolved
+    assert seqs[1].sampling is not explicit.sampling  # private copy
+    eng.run(max_steps=100)
+    assert shared.sampling is None
+    assert len(seqs[0].generated) == 3 and len(seqs[1].generated) == 2
+    # mutating the engine's copy never leaks back to the caller's params
+    assert explicit.sampling.max_new_tokens == 2
+
+
+def test_stats_split_prefill_decode(rt):
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+        mb_size=2, num_microbatches=1, pool=POOL, prefill_chunk=4))
+    llm.generate(_prompts(cfg, 3, seed=1),
+                 SamplingParams(temperature=0.0, max_new_tokens=3))
+    rep = llm.stats()
+    assert rep["prefill_time_s"] > 0 and rep["decode_time_s"] > 0
+    assert rep["prefill_tok_per_s"] > 0 and rep["decode_tok_per_s"] > 0
+    # the phase clocks partition the wall clock
+    assert rep["prefill_time_s"] + rep["decode_time_s"] <= \
+        rep["wall_time_s"] + 1e-6
+
+
+def test_recurrent_prefill_len_bucketed_pow2(rt):
+    """The exact-length fallback pads recurrent archs to the next power of
+    two (bounded jit cache) — and the padded prefill still matches the
+    exact-length reference bit for bit (state masking)."""
+    cfg = tiny("recurrentgemma-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=24, max_pages_per_seq=8)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4)
+    eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=1,
+                        pool=pool, sampling=sp)
+    assert eng._prefill_len(9) == 16
+    assert eng._prefill_len(17) == 32
+    assert eng._prefill_len(16) == 16
+    prompt = list(np.random.RandomState(2).randint(1, cfg.vocab_size, 9))
+    eng.submit([Request(0, prompt, sp)])
+    done = eng.run(max_steps=100)
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = M.prefill(params, {"tokens": toks}, cfg, rt, 64)
+    ref = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(4):
+        ref.append(int(tok[0]))
+        logits, caches = M.decode_step(
+            params, tok, caches, jnp.asarray([len(prompt) + i], jnp.int32),
+            cfg, rt)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert done[0].generated == ref
+
+
+def test_masked_pad_prefill_matches_exact_logits(rt):
+    """Model-level: prefill with right-padding + last_index returns the
+    exact-length call's last-position logits (pad positions are masked
+    end-to-end, including through the recurrent state).  Tolerance is
+    XLA's length-dependent reduction order, not the masking — the
+    engine-level pow2 test above checks the decoded tokens bit for bit."""
+    for arch in ("recurrentgemma-9b", "xlstm-1.3b"):
+        cfg = tiny(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(1, cfg.vocab_size, 11)
+        exact = jnp.asarray(prompt, jnp.int32)[None]
+        padded = jnp.zeros((1, 16), jnp.int32).at[0, :11].set(exact[0])
+        le, _ = M.prefill(params, {"tokens": exact}, cfg, rt, 32)
+        lp, _ = M.prefill(params, {"tokens": padded}, cfg, rt, 32,
+                          last_index=jnp.asarray([10]))
+        np.testing.assert_allclose(np.asarray(le), np.asarray(lp),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------- prefill through the pipe ---
+
+INTERLEAVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+from repro.config import get_arch, reduced_config
+from repro.models import model as M
+from repro.models.common import Runtime
+import jax, jax.numpy as jnp
+from repro.serving.engine import OfflineEngine
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.request import Request, SamplingParams, Status
+
+rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+cfg = reduced_config(get_arch("yi-9b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
+                  max_pages_per_seq=8)
+# two long-lived decoders in microbatches 0/1; microbatch 2's slot stays
+# free for the long prompt, so its chunked prefill runs while both
+# decoders keep ticking through the pipe
+sp_short = SamplingParams(temperature=0.0, max_new_tokens=60)
+sp_long = SamplingParams(temperature=0.0, max_new_tokens=4)
+rng = np.random.RandomState(5)
+short_prompts = [list(rng.randint(1, cfg.vocab_size, 4)) for _ in range(2)]
+long_prompt = list(rng.randint(1, cfg.vocab_size, 20))
+
+def run(prefill_mode):
+    eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=3,
+                        pool=pool, backend="pipelined", n_stages=2,
+                        prefill_mode=prefill_mode, prefill_chunk=4)
+    eng.submit([Request(i, p, sp_short) for i, p in enumerate(short_prompts)])
+    for _ in range(8):                     # get decode pipelining going
+        assert eng.step()
+    long_seq = eng.submit([Request(2, long_prompt, sp_long)])[0]
+    overlap_steps = 0          # steps where a chunk sits in the prefill
+                               # pipe AND a decode tick is in flight
+    decode_during = 0
+    prefilling_steps = 0
+    while long_seq.status in (Status.QUEUED, Status.PREFILLING):
+        chunk_in_pipe = eng.backend.prefill_pending()
+        busy = bool(eng.backend.busy_microbatches())
+        d0 = eng.stats.decode_tokens
+        assert eng.step()
+        if long_seq.status is Status.PREFILLING:
+            prefilling_steps += 1
+            decode_during += eng.stats.decode_tokens - d0
+            if chunk_in_pipe and busy:
+                overlap_steps += 1
+    done = {s.request.request_id: s.generated
+            for s in eng.run(max_steps=800)}
+    assert len(done) == 3, done
+    return done, overlap_steps, decode_during, prefilling_steps
+
+chunked, overlap, dec_during, pf_steps = run("chunked")
+exact, _, _, pf_steps_exact = run("exact")
+# 20-token prompt / 4-token chunks: PREFILLING spans real engine time, the
+# chunks share engine ticks with in-flight decode microbatches, and decode
+# keeps producing tokens on those very ticks
+assert pf_steps >= 5, pf_steps
+assert overlap >= 2, (overlap, pf_steps)
+assert dec_during >= 3, "decode stalled while the chunk was in the pipe"
+# exact-length prefill is atomic: PREFILLING never spans a step boundary
+assert pf_steps_exact == 0, pf_steps_exact
+# and the interleaving changed no output bits
+assert chunked == exact, (chunked, exact)
+print("INTERLEAVE-OK", overlap, dec_during)
+"""
+
+
+@pytest.mark.slow
+def test_pipelined_chunk_prefill_does_not_block_decode():
+    """Acceptance: a PipelinedBackend prefill chunk flows through its own
+    persistent pipe stage-to-stage — decode microbatches stay in flight
+    (busy_microbatches non-empty) and keep producing tokens on the same
+    engine ticks, and the interleaving is bit-transparent to outputs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", INTERLEAVE_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-2000:]}"
+    assert "INTERLEAVE-OK" in r.stdout
