@@ -11,10 +11,14 @@ generous (default: fail only when a backend regresses more than 30% below
 baseline).
 
     python benchmarks/check_regression.py --baseline BENCH_throughput.json \
-        --new bench_new.json [--threshold 0.30]
+        --new bench_new.json [--threshold 0.30] [--allow-missing]
 
-Exit code 1 on regression, 0 otherwise (including when either file has no
-comparable rows — a schema change should not hard-fail the gate).
+Exit codes: 0 OK, 1 regression, 2 a gated workload key (``engine_backend``
+/ ``engine_prefill`` rows) is missing from the baseline or the new run —
+distinct from a regression so CI can tell "the bench got slower" apart
+from "the bench stopped measuring" (pass ``--allow-missing`` to downgrade
+2 to a skip).  A missing/corrupt baseline *file* still exits 0: a fresh
+clone without committed numbers should not hard-fail the gate.
 
 Caveat: a committed baseline measured on one machine gates a run on
 another, so part of the margin absorbs machine-speed differences, not
@@ -55,9 +59,13 @@ def main() -> int:
     ap.add_argument("--new", required=True)
     ap.add_argument("--threshold", type=float, default=0.30,
                     help="max allowed fractional drop vs baseline")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="treat a missing gated workload key as a skip "
+                         "instead of exit code 2")
     args = ap.parse_args()
 
     failed = False
+    missing = False
     compared = False
     for bench, field, fallback, label in GATES:
         try:
@@ -67,14 +75,20 @@ def main() -> int:
             return 0
         new = _tps_by_backend(args.new, bench, field, fallback)
         if not base or not new:
-            print(f"perf gate: no comparable {bench} rows — skipping")
+            which = "baseline" if not base else "new run"
+            print(f"perf gate: workload {bench!r} has no comparable rows "
+                  f"in the {which} — "
+                  + ("skipping (--allow-missing)" if args.allow_missing
+                     else "exit 2 (the bench stopped measuring it)"))
+            missing = True
             continue
         compared = True
         for backend, b_tps in sorted(base.items()):
             n_tps = new.get(backend)
             if n_tps is None:
                 print(f"perf gate: {bench}/{backend}: missing from new "
-                      "run — skipping")
+                      "run — exit 2")
+                missing = True
                 continue
             if b_tps <= 0:
                 print(f"perf gate: {bench}/{backend}: baseline is "
@@ -89,7 +103,11 @@ def main() -> int:
                   f"{n_tps:.1f} {label} ({-drop:+.1%}) [{status}]")
     if not compared:
         print("perf gate: nothing comparable — skipping")
-    return 1 if failed else 0
+    if failed:
+        return 1
+    if missing and not args.allow_missing:
+        return 2
+    return 0
 
 
 if __name__ == "__main__":

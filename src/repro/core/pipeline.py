@@ -371,8 +371,8 @@ def pipeline_prefill(params, inputs, caches, cfg: ModelConfig, rt: Runtime,
 
 def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                          samp_keys, samp_steps, samp_temp, samp_top_k,
-                         samp_top_p, *, cfg: ModelConfig, rt: Runtime,
-                         n_stages: int, mb_size: int, mesh):
+                         samp_top_p, drop_stage, *, cfg: ModelConfig,
+                         rt: Runtime, n_stages: int, mb_size: int, mesh):
     """Advance the persistent pipeline by one tick.
 
     caches:    engine-format paged caches ({"scan": [...], "tail": [...]}).
@@ -387,10 +387,17 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                (mb_size,) token indices, temperature / top-k / top-p
                (mb_size,) — captured at its injection, so every request
                is sampled under its own params regardless of pipe depth.
+    drop_stage: () int32 fault-injection seam — the stage whose tick is
+               *lost* this tick (-1 = none).  Its microbatch's cache
+               writes are masked exactly like a bubble's and, when it is
+               the draining stage, the drained result is invalid: the
+               caller must treat the microbatch as a lost tick and
+               re-inject it (decode writes are position-keyed, so the
+               retry rewrites identical KV — see serving/engine.py).
 
     Returns (sampled tokens (mb_size,), model logprobs (mb_size,) for the
-    draining microbatch — garbage when ``mb_assign[-1] < 0`` —, new
-    caches, new act).
+    draining microbatch — garbage when ``mb_assign[-1] < 0`` or the last
+    stage was dropped —, new caches, new act).
     """
     from repro.serving import kv_cache as kvc
     from repro.serving.sampler import (fold_in_steps, sample_batched,
@@ -411,7 +418,7 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
     x_inj = embed_lib.embed_tokens(params["embed"], tokens, cfg, cd)[:, None]
 
     def body(stage_params_l, stage_caches_l, act_l, x_inj, mb_assign,
-             pos_stage):
+             pos_stage, drop_stage):
         lp = [jax.tree.map(lambda x: x[0], p) for p in stage_params_l]
         lc = [jax.tree.map(lambda x: x[0], c) for c in stage_caches_l]
         pod = jax.lax.axis_index("pod")
@@ -420,7 +427,7 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
         x_in = jnp.where(pod == 0, x_inj, act_l[0])
         mb_id = jax.lax.dynamic_index_in_dim(mb_assign, pod, 0,
                                              keepdims=False)
-        active = mb_id >= 0
+        active = (mb_id >= 0) & (pod != drop_stage)
         row0 = jnp.maximum(mb_id, 0) * mb_size
         pos = jax.lax.dynamic_index_in_dim(pos_stage, pod, 0,
                                            keepdims=False)
@@ -471,19 +478,20 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
     in_specs = (
         [jax.tree.map(lambda _: P("pod"), p) for p in stage_params],
         [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches],
-        P("pod"), P(), P(), P(),
+        P("pod"), P(), P(), P(), P(),
     )
     out_specs = (P(), P("pod"),
                  [jax.tree.map(lambda _: P("pod"), c) for c in stage_caches])
     fn = _shard_map(body, mesh=mesh, axis_names={"pod"},
                     in_specs=in_specs, out_specs=out_specs)
     y_out, new_act, new_stage = fn(stage_params, stage_caches, act, x_inj,
-                                   mb_assign, pos_stage)
+                                   mb_assign, pos_stage,
+                                   jnp.asarray(drop_stage, jnp.int32))
 
     # epilogue + sampling for the draining microbatch (replicated — this is
     # the paper's return link: (mb,) token ids per tick, not activations)
     out_mb = mb_assign[n_stages - 1]
-    valid = out_mb >= 0
+    valid = (out_mb >= 0) & (jnp.asarray(drop_stage) != n_stages - 1)
     row0 = jnp.maximum(out_mb, 0) * mb_size
     pos_d = pos_stage[n_stages - 1]
     p1 = pos_d[:, None]
@@ -524,8 +532,8 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
 
 
 def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
-                                valid_stage, tables_stage, lasts, *,
-                                cfg: ModelConfig, rt: Runtime,
+                                valid_stage, tables_stage, lasts,
+                                drop_stage, *, cfg: ModelConfig, rt: Runtime,
                                 n_stages: int, mesh):
     """Advance the persistent *prefill* pipe by one tick.
 
@@ -546,15 +554,26 @@ def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
                   device-wide table keeps prefilling slots parked).
     lasts:        (R,) int32 within-chunk final-token index of the
                   *draining* chunk.
+    drop_stage:   () int32 fault-injection seam: the stage whose tick is
+                  lost this tick (-1 = none).  Its chunk's valid counts
+                  are zeroed, so every cache write at that stage is
+                  dropped; the caller re-injects the lost chunk (prompt-KV
+                  writes are offset-keyed, so the retry rewrites identical
+                  pages — see serving/engine.py).
 
     Returns (logits (R, V) for the draining chunk — garbage when no chunk
-    drains —, new caches, new act).
+    drains or the last stage was dropped —, new caches, new act).
     """
     pps, leftover = split_layers(cfg, n_stages)
     n_scan = pps * n_stages
     plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
     cd = rt.compute_dtype
     R, C = tokens.shape
+    # the fault seam: a dropped stage becomes a bubble stage — n_valid 0
+    # masks every one of its cache writes through the chunk recurrences
+    valid_stage = jnp.where(
+        jnp.arange(n_stages)[:, None] == jnp.asarray(drop_stage), 0,
+        valid_stage)
 
     stage_params, epi_scan_params = split_scan_params(params, cfg, n_stages)
     stage_caches = [jax.tree.map(

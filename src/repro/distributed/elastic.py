@@ -9,14 +9,22 @@ testable on CPU:
     largest legal mesh (data dim shrinks first, model dim preserved so TP
     sharding stays valid) and emit a resharding plan.
   * :class:`FailureDetector` — heartbeat bookkeeping with configurable
-    timeout; drives checkpoint-restart (see ``repro.checkpoint``).
+    timeout; drives checkpoint-restart (see ``repro.checkpoint``) and
+    ``OfflineEngine.reshard``.  A device that misses the timeout and then
+    beats again is a *flap* — recorded per device, never silently
+    resurrected.
   * :class:`StragglerMitigator` — EWMA per-stage tick times; flags outliers
     and re-weights microbatch assignment (slow stage gets smaller
     microbatches) or recommends demotion to spare.
+  * :class:`FaultPlan` — deterministic fault injection for tests and
+    drills: drop (lose the microbatch at stage ``s`` at backend tick
+    ``t``) or delay (synthetic straggling) events, consumed by the
+    serving ``PipelinedBackend``.
 
 On a real deployment these drive ``jax.distributed`` re-initialisation plus
 checkpoint restore; the dry-run exercises plan generation for every legal
-device count.
+device count, and the serving engine consumes all four for mid-run
+recovery (see ``docs/architecture.md`` — Fault tolerance & elasticity).
 """
 
 from __future__ import annotations
@@ -96,17 +104,36 @@ class ElasticPlanner:
 @dataclass
 class Heartbeat:
     last_seen: float
-    failures: int = 0
+    failures: int = 0                  # dead->live transitions (flaps)
 
 
 class FailureDetector:
+    """Heartbeat bookkeeping.  ``dead``/``live`` use a strict timeout
+    (``now - last_seen == timeout`` is still live, so a boundary probe can
+    never double-count a failure); a beat from a device that had already
+    missed the timeout is a dead->live *flap* and increments its failure
+    record instead of silently resurrecting it."""
+
     def __init__(self, timeout: float = 30.0):
         self.timeout = timeout
         self._beats: Dict[int, Heartbeat] = {}
 
     def beat(self, device_id: int, now: float) -> None:
-        hb = self._beats.setdefault(device_id, Heartbeat(last_seen=now))
+        hb = self._beats.get(device_id)
+        if hb is None:
+            self._beats[device_id] = Heartbeat(last_seen=now)
+            return
+        if now - hb.last_seen > self.timeout:
+            hb.failures += 1           # resurrection: record the flap
         hb.last_seen = now
+
+    def flap_count(self, device_id: Optional[int] = None) -> int:
+        """Dead->live transitions for one device (0 if unseen), or summed
+        across all devices when ``device_id`` is None."""
+        if device_id is not None:
+            hb = self._beats.get(device_id)
+            return hb.failures if hb is not None else 0
+        return sum(hb.failures for hb in self._beats.values())
 
     def dead(self, now: float) -> List[int]:
         return [d for d, hb in self._beats.items()
@@ -162,11 +189,91 @@ class StragglerMitigator:
                 if t > self.demote_factor * med]
 
     def microbatch_weights(self) -> List[float]:
-        """Relative per-stage work shares ∝ 1/EWMA, normalised to mean 1.
-        Feed into the engine's per-microbatch batch composition."""
+        """Relative per-stage work shares ∝ 1/EWMA.  Observed stages are
+        normalised to mean 1.0 *among themselves*; a cold stage (no
+        observation yet, ewma == 0) gets exactly 1.0 — it must neither be
+        penalised nor skew the normalisation.  Feed into the engine's
+        per-tick admission budget (slow stage → lighter microbatches)."""
         med = self.median()
         if med == 0:
             return [1.0] * self.n_stages
-        inv = [med / t if t > 0 else 1.0 for t in self.ewma]
-        mean = sum(inv) / len(inv)
-        return [w / mean for w in inv]
+        inv = [med / t if t > 0 else None for t in self.ewma]
+        observed = [w for w in inv if w is not None]
+        mean = sum(observed) / len(observed)
+        return [1.0 if w is None else w / mean for w in inv]
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault: at backend tick ``tick`` of ``plane`` ("decode"
+    or "prefill"), stage ``stage`` either *drops* (the microbatch/chunk at
+    that stage is lost — never drains, its remaining cache writes never
+    happen) or is *delayed* (the tick completes but the stage's observed
+    time is inflated by ``delay_s`` — feeds straggler mitigation).  Tick
+    indices are plane-local and count only ticks where the plane actually
+    advanced (something was in flight)."""
+    plane: str                         # "decode" | "prefill"
+    tick: int
+    stage: int
+    kind: str = "drop"                 # "drop" | "delay"
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.plane not in ("decode", "prefill"):
+            raise ValueError(f"plane must be 'decode'|'prefill', "
+                             f"got {self.plane!r}")
+        if self.kind not in ("drop", "delay"):
+            raise ValueError(f"kind must be 'drop'|'delay', "
+                             f"got {self.kind!r}")
+        if self.tick < 0 or self.stage < 0:
+            raise ValueError("tick and stage must be >= 0")
+
+
+class FaultPlan:
+    """A consumable schedule of :class:`FaultEvent`.  The serving
+    ``PipelinedBackend`` calls :meth:`take` once per plane tick; consumed
+    events move to ``triggered`` so tests can assert the plan fired."""
+
+    def __init__(self, events=()):
+        self.events: List[FaultEvent] = sorted(events,
+                                               key=lambda e: e.tick)
+        self.triggered: List[FaultEvent] = []
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def take(self, plane: str, tick: int) -> List[FaultEvent]:
+        hit = [e for e in self.events
+               if e.plane == plane and e.tick == tick]
+        if hit:
+            self.events = [e for e in self.events if e not in hit]
+            self.triggered.extend(hit)
+        return hit
+
+    def pending(self) -> int:
+        return len(self.events)
+
+    @classmethod
+    def parse(cls, specs) -> "FaultPlan":
+        """Build a plan from CLI specs: ``kind@plane:tick:stage[:delay_s]``
+        e.g. ``drop@decode:12:1`` or ``delay@prefill:3:0:0.25``."""
+        events = []
+        for spec in specs:
+            try:
+                kind, rest = spec.split("@", 1)
+                parts = rest.split(":")
+                plane, tick, stage = parts[0], int(parts[1]), int(parts[2])
+                delay = float(parts[3]) if len(parts) > 3 else 0.0
+            except (ValueError, IndexError) as e:
+                raise ValueError(
+                    f"bad fault spec {spec!r} (want "
+                    f"kind@plane:tick:stage[:delay_s], e.g. "
+                    f"drop@decode:12:1): {e}") from e
+            events.append(FaultEvent(plane=plane, tick=tick, stage=stage,
+                                     kind=kind, delay_s=delay))
+        return cls(events)

@@ -14,8 +14,16 @@ derives (N_B, per-microbatch batch, pool split) from a *measured* stage
 time plus ``--latency`` via the §4.3 planner (``EngineConfig.plan``)
 instead of the hand-set flags.
 
+Resilience drills (pipelined backend): ``--inject-fault
+kind@plane:tick:stage[:delay_s]`` (repeatable) drops or delays a stage
+tick mid-run — the engine re-injects the lost work and outputs stay
+bit-identical; ``--reshard-at STEP:STAGES`` tears the backend down at
+engine step STEP and rebuilds it with STAGES pipeline stages, replaying
+the page table so in-flight requests resume without recompute.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
-      --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed]
+      --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed] \\
+      [--inject-fault drop@decode:12:1] [--reshard-at 20:1]
 """
 
 from __future__ import annotations
@@ -96,6 +104,17 @@ def main() -> None:
     ap.add_argument("--mixed", action="store_true",
                     help="serve a mixed workload: greedy, temperature, "
                          "top-k, and top-p requests through one engine")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="kind@plane:tick:stage[:delay_s]",
+                    help="drop/delay a pipeline stage tick (repeatable; "
+                         "pipelined backend), e.g. drop@decode:12:1 or "
+                         "delay@prefill:3:0:0.25 — lost work is "
+                         "re-injected, outputs stay bit-identical")
+    ap.add_argument("--reshard-at", default="",
+                    metavar="STEP:STAGES",
+                    help="tear down and rebuild the pipelined backend "
+                         "with STAGES stages after engine step STEP "
+                         "(page table replayed, no token recomputed)")
     ap.add_argument("--plan", action="store_true",
                     help="derive N_B / batch / pools from measured stage "
                          "time + --latency (OfflineEngine.from_plan)")
@@ -108,8 +127,24 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    reshard_at, reshard_stages = 0, 0
+    if args.reshard_at:
+        try:
+            step_s, stages_s = args.reshard_at.split(":")
+            reshard_at, reshard_stages = int(step_s), int(stages_s)
+        except ValueError:
+            raise SystemExit(f"--reshard-at wants STEP:STAGES, "
+                             f"got {args.reshard_at!r}")
+        if reshard_at < 1 or reshard_stages < 1:
+            raise SystemExit("--reshard-at wants STEP >= 1 and "
+                             f"STAGES >= 1, got {args.reshard_at!r}")
+        if args.backend != "pipelined":
+            raise SystemExit("--reshard-at requires --backend pipelined")
+    if args.inject_fault and args.backend != "pipelined":
+        raise SystemExit("--inject-fault requires --backend pipelined")
+
     if args.backend == "pipelined":
-        _ensure_host_devices(args.stages)
+        _ensure_host_devices(max(args.stages, reshard_stages))
 
     import jax
     import jax.numpy as jnp
@@ -124,6 +159,10 @@ def main() -> None:
     from repro.serving.kv_cache import PoolConfig
     from repro.serving.llm import LLM, EngineConfig
     from repro.serving.request import SamplingParams
+
+    from repro.distributed.elastic import FaultPlan
+    fault_plan = FaultPlan.parse(args.inject_fault) if args.inject_fault \
+        else None
 
     cfg = get_arch(args.arch)
     if not args.full_size:
@@ -144,19 +183,27 @@ def main() -> None:
             m_kv_bytes=args.kv_budget_mb * 1e6, page_size=args.page_size,
             max_pages_per_seq=16, max_microbatches=16, mb_size_cap=4,
             backend=args.backend, seed=args.seed,
+            # reshard refuses while offloaded pools hold host content
+            # (host-store migration is a ROADMAP item): plan without
+            # offload when a reshard drill is scheduled
+            use_offload=not reshard_at,
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
-            prefill_mode=args.prefill_mode)
+            prefill_mode=args.prefill_mode, fault_plan=fault_plan)
     else:
+        # reshard carries the caches over; offloaded global pools would
+        # need host-store migration, so drills run with all-local pools
+        n_global = 0 if reshard_at else 16
         pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
-                          n_global_pages=16, max_pages_per_seq=16)
+                          n_global_pages=n_global, max_pages_per_seq=16)
         econfig = EngineConfig(mb_size=args.mb_size,
                                num_microbatches=args.microbatches, pool=pool,
                                offload=True, backend=args.backend,
                                n_stages=args.stages, seed=args.seed,
                                prefill_chunk=args.prefill_chunk,
                                max_prefill_tokens_per_tick=args.max_prefill_tokens,
-                               prefill_mode=args.prefill_mode)
+                               prefill_mode=args.prefill_mode,
+                               fault_plan=fault_plan)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
     engine = llm.engine
@@ -184,8 +231,32 @@ def main() -> None:
         sps = SamplingParams(temperature=args.temperature,
                              max_new_tokens=args.max_new)
 
-    outs = llm.generate(prompts, sps)
+    if reshard_at:
+        step = 0
+        resharded = False
+        for outs in llm.generate_iter(prompts, sps):
+            step += 1
+            if step == reshard_at:
+                rplan = engine.reshard(n_stages=reshard_stages)
+                resharded = True
+                print(f"resharded at step {step}: {args.stages} -> "
+                      f"{reshard_stages} stages "
+                      f"(params_move={rplan['params_move']}, "
+                      f"batch_reshard={rplan['batch_reshard']})")
+        if not resharded:
+            raise SystemExit(
+                f"--reshard-at {args.reshard_at}: the workload finished "
+                f"after {step} step(s), before step {reshard_at} — the "
+                "drill never resharded; lower STEP or grow the workload")
+    else:
+        outs = llm.generate(prompts, sps)
     rep = llm.stats()
+    if fault_plan is not None:
+        print(f"faults: {len(fault_plan.triggered)} triggered, "
+              f"{fault_plan.pending()} never reached "
+              f"(decode ticks lost {rep['decode_ticks_lost']}, "
+              f"prefill chunks lost {rep['prefill_chunks_lost']}, "
+              "all re-injected)")
     done = [o for o in outs if o.finished]
     print(f"finished {len(done)}/{args.requests} requests in "
           f"{rep['wall_time_s']:.2f}s "

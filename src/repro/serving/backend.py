@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import abc
 import functools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -68,11 +69,15 @@ from repro.serving.sampler import (RowSampling, fold_in_steps,
 @dataclass
 class DecodeResult:
     """One drained microbatch tick: ``tokens[i]`` is the next token for
-    slot ``mb * mb_size + i`` (the engine decides which rows are live)."""
+    slot ``mb * mb_size + i`` (the engine decides which rows are live).
+    ``lost=True`` marks a *fault*: the microbatch's tick was dropped by a
+    failed stage — ``tokens``/``logprobs`` are garbage and the engine must
+    re-inject the microbatch instead of booking them."""
     mb: int
     tokens: np.ndarray                  # (mb_size,) int32
     logprobs: np.ndarray                # (mb_size,) f32 — model logprob of
                                         # tokens[i] (raw-logits distribution)
+    lost: bool = False
 
 
 @dataclass
@@ -103,9 +108,11 @@ class PrefillChunk:
 class PrefillResult:
     """A drained prefill chunk: ``logits[i]`` are the last-position logits
     of row ``i`` — meaningful only for rows whose chunk was their last
-    (``chunk.lasts[i] >= 0``)."""
+    (``chunk.lasts[i] >= 0``).  ``lost=True`` marks a dropped chunk tick:
+    ``logits`` are garbage and the engine must re-emit the chunk."""
     chunk: PrefillChunk
     logits: np.ndarray                  # (R, V) f32
+    lost: bool = False
 
 
 # cache-view helpers live with the cache layout; re-exported here because
@@ -178,6 +185,11 @@ class ExecutionBackend(abc.ABC):
     def prefill_pending(self) -> bool:
         """True while prefill chunks are still in flight."""
         return False
+
+    def drain_stage_times(self) -> List[tuple]:
+        """(stage, seconds) tick-time observations since the last call —
+        non-empty only on staged (pipelined) backends."""
+        return []
 
     @property
     def swap_count(self) -> int:
@@ -355,7 +367,8 @@ class PipelinedBackend(_SlotCacheBackend):
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 n_stages: int = 2, offload: bool = False, mesh=None):
+                 n_stages: int = 2, offload: bool = False, mesh=None,
+                 fault_plan=None):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
         if num_microbatches < n_stages:
@@ -397,6 +410,28 @@ class PipelinedBackend(_SlotCacheBackend):
         self._pf_tick_jit = jax.jit(functools.partial(
             PL.pipeline_prefill_chunk_tick, cfg=cfg, rt=rt,
             n_stages=n_stages, mesh=mesh))
+
+        # fault injection (tests / drills): a FaultPlan consumed one event
+        # set per plane tick.  Drops null the shift-register entry (the
+        # microbatch/chunk is lost — the engine re-injects it); the
+        # drop_stage marker threaded into the tick jit re-masks the same
+        # stage's cache writes — redundant under this caller, but it keeps
+        # the fault seam explicit for direct users of the tick functions.
+        # Delays inflate the stage-time observations that feed straggler
+        # mitigation.
+        if fault_plan is not None:
+            bad = [e for e in fault_plan.events if e.stage >= n_stages]
+            if bad:
+                raise ValueError(
+                    f"fault plan targets stage(s) "
+                    f"{sorted({e.stage for e in bad})} but the pipe has "
+                    f"only {n_stages} stage(s) — fix the "
+                    "kind@plane:tick:stage spec")
+        self.fault_plan = fault_plan
+        self._decode_ticks = 0          # plane-local tick counters: only
+        self._prefill_ticks = 0         # ticks where the pipe advanced
+        self._stage_times: List[tuple] = []   # (stage, seconds) since the
+                                              # last drain_stage_times()
 
         # §4.2 offloading, per stage: stage s double-buffers its own
         # period-slice of the global pools; the epilogue (leftover periods
@@ -460,6 +495,41 @@ class PipelinedBackend(_SlotCacheBackend):
             self._ensure_stage_resident(s, mb)
         self._ensure_epi_resident(mb)
 
+    # -- fault injection ----------------------------------------------------
+
+    def _take_faults(self, plane: str, tick: int, entries: list):
+        """Consume this tick's fault events: drops null the shift-register
+        entry (the payload is *lost* — the engine re-injects it) and
+        return the dropped stage for the in-jit write mask; delays are
+        returned as per-stage synthetic seconds for straggler tracking."""
+        drop_stage, delays, lost = -1, {}, []
+        if self.fault_plan is not None:
+            for ev in self.fault_plan.take(plane, tick):
+                if ev.kind == "drop":
+                    if entries[ev.stage] is not None:
+                        lost.append(entries[ev.stage])
+                        entries[ev.stage] = None
+                    drop_stage = ev.stage
+                else:
+                    delays[ev.stage] = delays.get(ev.stage, 0.0) + ev.delay_s
+        return drop_stage, delays, lost
+
+    def _observe_stages(self, dt: float, delays: dict) -> None:
+        # uniform share of the tick's dispatch time per stage, plus any
+        # injected synthetic delay (the deterministic signal tests use —
+        # dispatch is async, so dt alone is a weak lower bound)
+        share = dt / self.n_stages
+        for s in range(self.n_stages):
+            self._stage_times.append((s, share + delays.get(s, 0.0)))
+        if len(self._stage_times) > 4096:       # standalone use: the
+            del self._stage_times[:-4096]       # engine drains every step
+
+    def drain_stage_times(self) -> List[tuple]:
+        """(stage, seconds) observations since the last call — feed into
+        ``StragglerMitigator.observe``."""
+        out, self._stage_times = self._stage_times, []
+        return out
+
     # -- the prefill stepper ------------------------------------------------
 
     def prefill_can_accept(self) -> bool:
@@ -475,6 +545,17 @@ class PipelinedBackend(_SlotCacheBackend):
             entries[0] = chunk
         if not any(e is not None for e in entries):
             return []
+        tick = self._prefill_ticks
+        self._prefill_ticks += 1
+        drop_stage, delays, lost = self._take_faults("prefill", tick,
+                                                     entries)
+        results = [PrefillResult(chunk=c,
+                                 logits=np.zeros((c.tokens.shape[0], 1),
+                                                 np.float32), lost=True)
+                   for c in lost]
+        if not any(e is not None for e in entries):
+            self._pf_entries = [None] * self.n_stages
+            return results
         ref = next(e for e in entries if e is not None)
         rows, clen = ref.tokens.shape
         n_pages_row = ref.tables.shape[1]
@@ -501,15 +582,18 @@ class PipelinedBackend(_SlotCacheBackend):
         lasts = drained.lasts if drained is not None \
             else np.zeros((rows,), np.int32)
 
+        t0 = time.perf_counter()
         logits, self.caches, self._pf_act = self._pf_tick_jit(
             self.params, self.caches, self._pf_act,
             jnp.asarray(tokens, jnp.int32), jnp.asarray(offs),
             jnp.asarray(nval), jnp.asarray(tabs),
-            jnp.asarray(lasts, jnp.int32))
+            jnp.asarray(lasts, jnp.int32), jnp.int32(drop_stage))
+        self._observe_stages(time.perf_counter() - t0, delays)
         self._pf_entries = [None] + entries[:-1]
         if drained is None:
-            return []
-        return [PrefillResult(chunk=drained, logits=np.asarray(logits))]
+            return results
+        return results + [PrefillResult(chunk=drained,
+                                        logits=np.asarray(logits))]
 
     # -- the stepper --------------------------------------------------------
 
@@ -526,6 +610,17 @@ class PipelinedBackend(_SlotCacheBackend):
             if active else None
         if not any(e is not None for e in entries):
             return []
+        tick = self._decode_ticks
+        self._decode_ticks += 1
+        drop_stage, delays, lost = self._take_faults("decode", tick, entries)
+        results = [DecodeResult(mb=e[0],
+                                tokens=np.zeros((self.mb_size,), np.int32),
+                                logprobs=np.zeros((self.mb_size,),
+                                                  np.float32), lost=True)
+                   for e in lost]
+        if not any(e is not None for e in entries):
+            self._entries = [None] * self.n_stages
+            return results
 
         mb_assign = np.full((self.n_stages,), -1, np.int32)
         pos_stage = np.zeros((self.n_stages, self.mb_size), np.int32)
@@ -542,17 +637,21 @@ class PipelinedBackend(_SlotCacheBackend):
         dsamp = drained[2] if drained is not None \
             else RowSampling.zeros(self.mb_size)
 
+        t0 = time.perf_counter()
         toks, lps, self.caches, self.act = self._tick_jit(
             self.params, self.caches, self.act,
             jnp.asarray(tokens, jnp.int32), jnp.asarray(mb_assign),
             jnp.asarray(pos_stage), jnp.asarray(dsamp.keys),
             jnp.asarray(dsamp.steps), jnp.asarray(dsamp.temp),
-            jnp.asarray(dsamp.top_k), jnp.asarray(dsamp.top_p))
+            jnp.asarray(dsamp.top_k), jnp.asarray(dsamp.top_p),
+            jnp.int32(drop_stage))
+        self._observe_stages(time.perf_counter() - t0, delays)
         self._entries = [None] + entries[:-1]
         if drained is None:
-            return []
-        return [DecodeResult(mb=drained[0], tokens=np.asarray(toks),
-                             logprobs=np.asarray(lps))]
+            return results
+        return results + [DecodeResult(mb=drained[0],
+                                       tokens=np.asarray(toks),
+                                       logprobs=np.asarray(lps))]
 
     @property
     def swap_count(self) -> int:
@@ -561,12 +660,17 @@ class PipelinedBackend(_SlotCacheBackend):
 
 
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
-                 offloader=None, n_stages=2, mesh=None) -> ExecutionBackend:
+                 offloader=None, n_stages=2, mesh=None,
+                 fault_plan=None) -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
         return kind
     if kind == "local":
+        if fault_plan is not None:
+            raise ValueError(
+                "fault injection (FaultPlan) requires the pipelined "
+                "backend — the local backend has no stages to drop")
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
                             offloader=offloader)
@@ -574,5 +678,6 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
         return PipelinedBackend(cfg, params, rt, mb_size=mb_size,
                                 num_microbatches=num_microbatches, pool=pool,
                                 n_stages=n_stages,
-                                offload=offloader is not None, mesh=mesh)
+                                offload=offloader is not None, mesh=mesh,
+                                fault_plan=fault_plan)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

@@ -98,7 +98,7 @@ class OfflineEngine:
                  backend="local", n_stages: int = 2, mesh=None,
                  prefill_chunk: int = 0,
                  max_prefill_tokens_per_tick: int = 0,
-                 prefill_mode: str = "auto"):
+                 prefill_mode: str = "auto", fault_plan=None):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -113,10 +113,41 @@ class OfflineEngine:
         self.seed = seed
         self._seed_key = jax.random.PRNGKey(seed)
 
+        # fault recovery re-injects a lost microbatch/chunk with the same
+        # tokens at the same positions, which is only bit-transparent when
+        # every cache write is position-keyed (paged KV, ring slots).
+        # Recurrent state updates are cumulative — re-applying one would
+        # double-step the state — so fault injection is gated to archs
+        # without recurrent layers (snapshot/restore is a follow-on).
+        if fault_plan is not None and cfg.recurrent_layer_count() > 0:
+            raise ValueError(
+                f"{cfg.name}: fault injection needs position-idempotent "
+                "cache writes; recurrent layers accumulate state and "
+                "cannot replay a lost tick without a state snapshot")
+        self._offloader = offloader
+        self._mesh = mesh
+        self.n_stages = n_stages
+
         self.backend: ExecutionBackend = make_backend(
             backend, cfg, params, rt, mb_size=mb_size,
             num_microbatches=num_microbatches, pool=self.pool,
-            offloader=offloader, n_stages=n_stages, mesh=mesh)
+            offloader=offloader, n_stages=n_stages, mesh=mesh,
+            fault_plan=fault_plan)
+
+        # elastic control plane: per-stage EWMA tick times (feeds the
+        # admission budget) + the planner/mesh-plan bookkeeping reshard()
+        # updates.  Only staged backends report times; the straggler is
+        # None on the local path.
+        from repro.distributed.elastic import (ElasticPlanner, MeshPlan,
+                                               StragglerMitigator)
+        stages = getattr(self.backend, "n_stages", None)
+        self.straggler = StragglerMitigator(stages) if stages else None
+        self._elastic = ElasticPlanner(model_parallel=1,
+                                       pod_size=1 << 30)
+        self._mesh_plan = MeshPlan(shape=(stages or 1, 1),
+                                   axes=("data", "model"),
+                                   devices_used=stages or 1,
+                                   devices_spare=0)
 
         self.alloc = kvc.PageAllocator(self.pool)
         self.table = np.zeros((self.batch, self.pool.max_pages_per_seq),
@@ -185,7 +216,8 @@ class OfflineEngine:
                   sampling: Optional[SamplingParams] = None, seed: int = 0,
                   mesh=None, prefill_chunk: int = 0,
                   max_prefill_tokens_per_tick: int = 0,
-                  prefill_mode: str = "auto") -> "OfflineEngine":
+                  prefill_mode: str = "auto",
+                  fault_plan=None) -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
         ``repro.core.scheduler.plan_schedule`` — the paper's planner —
@@ -251,7 +283,7 @@ class OfflineEngine:
                   backend=backend, n_stages=n_stages, mesh=mesh,
                   prefill_chunk=prefill_chunk,
                   max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
-                  prefill_mode=prefill_mode)
+                  prefill_mode=prefill_mode, fault_plan=fault_plan)
         eng.schedule_choice = choice
         return eng
 
@@ -324,6 +356,141 @@ class OfflineEngine:
         counts[Status.FINISHED.value] += len(self.finished)
         return counts
 
+    # ------------------------------------------------------------------
+    # elastic re-sharding (mesh resize mid-run)
+    # ------------------------------------------------------------------
+
+    def reshard(self, live_devices: Optional[int] = None, *,
+                n_stages: Optional[int] = None, detector=None,
+                now: Optional[float] = None) -> dict:
+        """Rebuild the pipelined backend with a new stage count mid-run,
+        keeping every in-flight request's progress.
+
+        The target is either an explicit ``n_stages`` or derived from the
+        live-device count (directly, or from a
+        :class:`~repro.distributed.elastic.FailureDetector` at ``now``)
+        through :class:`~repro.distributed.elastic.ElasticPlanner` — the
+        pipe depth becomes the largest power of two that the live devices,
+        ``num_microbatches`` (N_B >= N_S) and the local device count
+        admit.
+
+        Sequence: (1) drain the old pipe (both planes) so no tick is lost,
+        (2) carry the engine-format cache pytree over — its layout is
+        n_stages-independent, stage slicing happens inside the tick jit —
+        (3) rebuild :class:`PipelinedBackend` on a fresh ``pod`` mesh
+        (params re-split by ``split_scan_params`` at trace time), and
+        (4) replay the engine's device-wide page table into the fresh
+        backend.  ``seq``/``prefill_pos`` cursors are engine state and
+        survive untouched, so no completed token is ever recomputed.
+
+        Returns the planner's resharding plan.  Raises on the local
+        backend, and — until host-store migration lands — on a backend
+        whose offloaded global pools hold non-resident content.
+        """
+        from repro.distributed.elastic import MeshPlan
+        from repro.serving.backend import PipelinedBackend
+        if not isinstance(self.backend, PipelinedBackend):
+            raise ValueError(
+                "reshard: only the pipelined backend has a stage mesh to "
+                f"rebuild (backend is {self.backend.name!r})")
+        if detector is not None:
+            if now is None:
+                now = time.monotonic()
+            live_devices = len(detector.live(now))
+        if n_stages is None:
+            if live_devices is None:
+                raise ValueError(
+                    "reshard: pass live_devices=, detector=, or n_stages=")
+            from repro.models.common import make_layer_plan
+            plan = self._elastic.plan(live_devices)
+            n_periods = make_layer_plan(self.cfg.num_layers,
+                                        self.cfg.block_pattern).n_periods
+            n_stages = max(1, min(plan.data, self.num_microbatches,
+                                  len(jax.devices()), n_periods))
+        if n_stages > self.num_microbatches:
+            raise ValueError(
+                f"reshard: N_B >= N_S requires n_stages <= "
+                f"{self.num_microbatches}, got {n_stages}")
+        new_plan = MeshPlan(shape=(n_stages, 1), axes=("data", "model"),
+                            devices_used=n_stages,
+                            devices_spare=max(0, (live_devices or n_stages)
+                                              - n_stages))
+        reshard_plan = self._elastic.resharding_plan(self._mesh_plan,
+                                                     new_plan)
+
+        offs = list(self.backend._stage_off)
+        if self.backend._epi_off is not None:
+            offs.append(self.backend._epi_off)
+        if any(o._host or any(v is not None for v in o.resident.values())
+               for o in offs):
+            raise NotImplementedError(
+                "reshard: offloaded global pools hold per-stage host "
+                "content keyed to the old stage split — host-store "
+                "migration is a follow-on (ROADMAP); reshard before the "
+                "offloader engages, or run without global pools")
+
+        # (1) drain both planes: every in-flight tick completes and books
+        # normally, so nothing is recomputed and recurrent/ring state in
+        # the carried caches is consistent
+        tokens0 = np.zeros((self.mb_size,), np.int32)
+        pos0 = np.zeros((self.mb_size,), np.int32)
+        while self.backend.pending():
+            for res in self.backend.decode(0, tokens0, pos0,
+                                           RowSampling.zeros(self.mb_size),
+                                           active=False):
+                self._apply_result(res)
+        while self.backend.prefill_pending():
+            for res in self.backend.prefill_step(None):
+                self._apply_prefill_result(res)
+        self._activate_ready()          # pipe empty -> nothing is busy
+
+        # (2)+(3) carry caches (host round-trip: the old arrays are
+        # committed to the old pod mesh), rebuild on a fresh mesh
+        caches = jax.tree.map(lambda x: np.asarray(x), self.backend.caches)
+        fault_plan = self.backend.fault_plan
+        if fault_plan is not None:
+            # a fault planned for a stage that no longer exists cannot
+            # happen — prune instead of tripping the new backend's
+            # stage-bounds validation mid-run.  Pending tick indices stay
+            # plane-local: they are carried below so an event scheduled
+            # for absolute tick T still fires at T.
+            gone = [e for e in fault_plan.events if e.stage >= n_stages]
+            if gone:
+                log.warning("reshard: dropping %d pending fault event(s) "
+                            "targeting stages >= %d: %s", len(gone),
+                            n_stages, gone)
+                fault_plan.events = [e for e in fault_plan.events
+                                     if e.stage < n_stages]
+        if self._mesh is not None:
+            log.warning("reshard: the engine's custom mesh is built for "
+                        "%d stage(s) — the rebuilt backend uses a default "
+                        "mesh over jax.devices()[:%d]",
+                        self.backend.n_stages, n_stages)
+        old_ticks = (self.backend._decode_ticks, self.backend._prefill_ticks)
+        log.info("reshard: %d -> %d stages (%s)", self.backend.n_stages,
+                 n_stages, {k: v for k, v in reshard_plan.items()
+                            if k not in ("old", "new")})
+        self.backend = make_backend(
+            "pipelined", self.cfg, self.params, self.rt,
+            mb_size=self.mb_size, num_microbatches=self.num_microbatches,
+            pool=self.pool, offloader=self._offloader, n_stages=n_stages,
+            mesh=None, fault_plan=fault_plan)
+        # plane tick counters survive the rebuild, so FaultPlan tick
+        # indices keep their absolute meaning across a reshard
+        self.backend._decode_ticks, self.backend._prefill_ticks = old_ticks
+        self.backend.caches = jax.tree.map(jnp.asarray, caches)
+
+        # (4) replay the device-wide page table; per-slot ring/recurrent
+        # state rode along inside the cache pytree
+        self.backend.set_page_table(self.table)
+
+        from repro.distributed.elastic import StragglerMitigator
+        self.straggler = StragglerMitigator(n_stages)
+        self.n_stages = n_stages
+        self._mesh_plan = new_plan
+        self.stats.reshards += 1
+        return reshard_plan
+
     def step(self) -> bool:
         """One engine tick: reap finished, run the prefill phase (one
         budgeted chunk through the prefill plane, or the exact-length
@@ -353,6 +520,9 @@ class OfflineEngine:
             return False
         mb = self.stats.steps % self.num_microbatches
         self._decode_microbatch(mb)
+        if self.straggler is not None:
+            for s, dt in self.backend.drain_stage_times():
+                self.straggler.observe(s, dt)
         self.stats.steps += 1
         t1 = time.perf_counter()
         self.stats.prefill_time_s += tp2 - tp
@@ -436,6 +606,20 @@ class OfflineEngine:
                          - plen)
         self.slots[slot] = seq
 
+    def _tick_prefill_rows(self) -> int:
+        """Per-tick admission width: the configured ``prefill_rows``,
+        lightened while a pipeline stage is straggling (the §4.3 ring tick
+        is set by the slowest stage, so extra admission work must shrink
+        with it — ``StragglerMitigator.microbatch_weights`` are mean-1
+        inverse EWMAs, and the minimum weight scales the per-tick token
+        budget, floored at one chunk).  The chunk's device shapes stay
+        fixed at (prefill_rows, prefill_chunk); only fewer rows fill."""
+        if self.straggler is None or not self.straggler.stragglers():
+            return self.prefill_rows
+        w_min = min(self.straggler.microbatch_weights())
+        budget = int(self.max_prefill_tokens_per_tick * min(1.0, w_min))
+        return max(1, min(self.prefill_rows, budget // self.prefill_chunk))
+
     def _build_chunk(self) -> Optional[PrefillChunk]:
         """Assemble this tick's prefill work unit: continue partially
         prefilled sequences first (FIFO), then admit queued prompts into
@@ -447,12 +631,13 @@ class OfflineEngine:
         preserved — the queue front retries after pages free up."""
         if not self.backend.prefill_can_accept():
             return None
+        rows_cap = self._tick_prefill_rows()
         rows: List[SequenceState] = []
         # parity -> the single microbatch whose global-pool copy must be
         # resident for this chunk (the offloader stages copies per mb)
         parity_mb: Dict[int, Optional[int]] = {0: None, 1: None}
         for seq in self.prefilling:
-            if len(rows) == self.prefill_rows:
+            if len(rows) == rows_cap:
                 break
             if seq.chunk_inflight:
                 continue
@@ -462,10 +647,10 @@ class OfflineEngine:
                     continue            # another mb owns this parity slice
                 parity_mb[mb % 2] = mb
             rows.append(seq)
-        if len(rows) < self.prefill_rows and self.queue:
+        if len(rows) < rows_cap and self.queue:
             free = [s for s in range(self.batch) if self.slots[s] is None]
             for slot in free:
-                if not self.queue or len(rows) == self.prefill_rows:
+                if not self.queue or len(rows) == rows_cap:
                     break
                 mb = self._mb_of_slot(slot)
                 gp = mb % 2 if self.pool.n_global_pages else None
@@ -509,6 +694,16 @@ class OfflineEngine:
                                 if m is not None))
 
     def _apply_prefill_result(self, res: PrefillResult) -> None:
+        if res.lost:
+            # a stage fault dropped the chunk mid-pipe: no prompt token
+            # landed (prefill_pos untouched), so clearing the in-flight
+            # flag makes _build_chunk re-emit the identical chunk —
+            # prompt-KV writes are offset-keyed, the retry rewrites the
+            # same pages and outputs stay bit-identical
+            for seq in res.chunk.seqs:
+                seq.chunk_inflight = False
+            self.stats.prefill_chunks_lost += 1
+            return
         for i, seq in enumerate(res.chunk.seqs):
             seq.chunk_inflight = False
             take = int(res.chunk.n_valid[i])
@@ -660,6 +855,17 @@ class OfflineEngine:
         """Book one drained microbatch tick (possibly for an earlier
         microbatch than the one just injected — pipelined backends drain
         with N_S − 1 ticks of latency)."""
+        if res.lost:
+            # a stage fault dropped the microbatch's tick: nothing was
+            # booked (seq/cur_pos cursors only advance on a drained
+            # result), so recovery is to discard the injection snapshot
+            # and let the round-robin re-inject the microbatch with the
+            # same tokens at the same positions on its next turn — the
+            # retry rewrites identical position-keyed KV and samples
+            # under the same (seed, request_id, token_idx) keys
+            self._inject_snap.pop(res.mb, None)
+            self.stats.decode_ticks_lost += 1
+            return
         lo = res.mb * self.mb_size
         snap = self._inject_snap.pop(res.mb, None)
         for i, slot in enumerate(range(lo, lo + self.mb_size)):
@@ -709,6 +915,9 @@ class OfflineEngine:
             "queue_depth": self.stats.queue_depth,
             "status_counts": self.stats.status_counts,
             "aborted": self.stats.aborted,
+            "decode_ticks_lost": self.stats.decode_ticks_lost,
+            "prefill_chunks_lost": self.stats.prefill_chunks_lost,
+            "reshards": self.stats.reshards,
             "mean_latency_steps":
                 float(np.mean(lat_steps)) if lat_steps else 0.0,
             "mean_latency_s": float(np.mean(lat_s)) if lat_s else 0.0,

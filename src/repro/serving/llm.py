@@ -64,6 +64,11 @@ class EngineConfig:
     prefill_chunk: int = 0            # tokens per chunk (0 = auto)
     max_prefill_tokens_per_tick: int = 0   # per-tick budget (0 = one chunk)
     prefill_mode: str = "auto"        # "auto" | "chunked" | "exact"
+    # deterministic fault injection (tests / drills): a
+    # repro.distributed.elastic.FaultPlan consumed by the pipelined
+    # backend — dropped ticks are re-injected by the engine, outputs stay
+    # bit-identical to an undisturbed run
+    fault_plan: Optional[object] = None
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -100,6 +105,10 @@ class EngineConfig:
                 f"pipelined backend needs num_microbatches >= n_stages "
                 f"(N_B >= N_S), got N_B={self.num_microbatches} < "
                 f"N_S={self.n_stages}")
+        if self.fault_plan is not None and self.backend != "pipelined":
+            raise ValueError(
+                "fault_plan requires backend='pipelined' — the local "
+                "backend has no stages to drop")
 
     @classmethod
     def plan(cls, *, n_stages: int, stage_time: float, latency: float,
@@ -109,7 +118,8 @@ class EngineConfig:
              choice=None, mb_size_cap: int = 0, backend: str = "local",
              seed: int = 0, mesh=None, prefill_chunk: int = 0,
              max_prefill_tokens_per_tick: int = 0,
-             prefill_mode: str = "auto") -> "EngineConfig":
+             prefill_mode: str = "auto",
+             fault_plan: Optional[object] = None) -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
         the planned counterpart of hand-set knobs (subsumes
@@ -119,7 +129,7 @@ class EngineConfig:
         return cls(backend=backend, n_stages=n_stages, seed=seed, mesh=mesh,
                    prefill_chunk=prefill_chunk,
                    max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
-                   prefill_mode=prefill_mode,
+                   prefill_mode=prefill_mode, fault_plan=fault_plan,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, m_kv_bytes=m_kv_bytes,
@@ -136,7 +146,8 @@ class EngineConfig:
                 cfg, params, rt, backend=self.backend, seed=self.seed,
                 mesh=self.mesh, prefill_chunk=self.prefill_chunk,
                 max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
-                prefill_mode=self.prefill_mode, **self.plan_args)
+                prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
+                **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
         if self.offload and pool.n_global_pages:
@@ -149,7 +160,7 @@ class EngineConfig:
             n_stages=self.n_stages, mesh=self.mesh,
             prefill_chunk=self.prefill_chunk,
             max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
-            prefill_mode=self.prefill_mode)
+            prefill_mode=self.prefill_mode, fault_plan=self.fault_plan)
 
 
 @dataclass

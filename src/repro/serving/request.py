@@ -143,6 +143,11 @@ class EngineStats:
                                       # engine.status_counts(), not per tick
     aborted: bool = False             # run() exhausted max_steps with
                                       # work still pending
+    # fault tolerance / elasticity (see engine._apply_result /
+    # _apply_prefill_result / reshard)
+    decode_ticks_lost: int = 0        # dropped decode ticks (re-injected)
+    prefill_chunks_lost: int = 0      # dropped prefill chunks (re-emitted)
+    reshards: int = 0                 # mid-run backend rebuilds
 
     @property
     def total_tokens(self) -> int:

@@ -1,0 +1,110 @@
+"""Shared cross-backend equivalence fixture.
+
+Every resilience/parity test in this repo asks the same question: does a
+set of requests produce *bit-identical* per-request token streams under
+two engine configurations (local vs pipelined, chunked vs exact prefill,
+faulted vs undisturbed, resharded vs static)?  This module is the one
+parametrized answer — build the runs with :func:`run_llm` /
+:func:`golden_runs`, compare with :func:`assert_equivalent`.
+
+Importable both from the pytest process (tests dir is on ``sys.path``)
+and from the SPMD subprocess scripts (they add the tests dir to
+``PYTHONPATH`` — see :func:`subprocess_env`).  No conftest / fixture
+dependencies on purpose.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def subprocess_env(extra: Optional[dict] = None) -> dict:
+    """Environment for the SPMD subprocess tests: repo ``src`` plus this
+    directory (so scripts can ``import equivalence``)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here])
+    env.update(extra or {})
+    return env
+
+
+def random_prompts(cfg, n: int, seed: int = 0, lo: int = 3,
+                   hi: int = 20) -> List[List[int]]:
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, cfg.vocab_size, rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def mixed_sps(n: int, max_new: int = 5):
+    """Greedy + temperature + top-k + top-p cycled over ``n`` requests —
+    one engine run serves all of them through the same pipe."""
+    from repro.serving.request import SamplingParams
+    pol = [SamplingParams(temperature=0.0, max_new_tokens=max_new),
+           SamplingParams(temperature=1.0, top_k=8, max_new_tokens=max_new),
+           SamplingParams(temperature=0.7, top_p=0.9,
+                          max_new_tokens=max_new),
+           SamplingParams(temperature=1.5, max_new_tokens=max_new)]
+    return [pol[i % len(pol)] for i in range(n)]
+
+
+def run_llm(cfg, params, rt, prompts, sps, *, max_steps: int = 2000,
+            step_hook: Optional[Callable] = None, **config_kw):
+    """One full engine run; returns ``({request_id: (tokens, reason)},
+    llm)``.
+
+    ``config_kw`` goes straight into :class:`EngineConfig` — backend,
+    n_stages, prefill_mode, fault_plan, pool, ...  ``step_hook(engine,
+    step_index)`` (if given) fires after every engine step: the seam the
+    fault/reshard tests use to disturb a run mid-flight."""
+    from repro.serving.llm import LLM, EngineConfig
+    llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(**config_kw))
+    if step_hook is None:
+        outs = llm.generate(prompts, sps, max_steps=max_steps)
+    else:
+        seqs = llm._submit(prompts, sps)
+        step = 0
+        while step < max_steps and llm.engine.step():
+            step_hook(llm.engine, step)
+            step += 1
+        from repro.serving.llm import RequestOutput
+        outs = [RequestOutput.from_seq(s) for s in seqs]
+    assert all(o.finished for o in outs), \
+        f"unfinished requests: {[o.request_id for o in outs if not o.finished]}"
+    return {o.request_id: (tuple(o.token_ids), o.finish_reason)
+            for o in outs}, llm
+
+
+def golden_runs(cfg, params, rt, prompts, sps, variants: Dict[str, dict],
+                *, max_steps: int = 2000) -> Dict[str, dict]:
+    """Run the same request set under every variant's EngineConfig kwargs
+    (plus optional ``step_hook``); returns {label: outputs}."""
+    runs = {}
+    for label, kw in variants.items():
+        kw = dict(kw)
+        hook = kw.pop("step_hook", None)
+        runs[label], _ = run_llm(cfg, params, rt, prompts, sps,
+                                 max_steps=max_steps, step_hook=hook, **kw)
+    return runs
+
+
+def assert_equivalent(runs: Dict[str, dict], base: Optional[str] = None):
+    """Token-level equality of every run against ``base`` (default: the
+    first label).  Failures name the variant, the request, and both
+    streams."""
+    labels = list(runs)
+    base = base or labels[0]
+    ref = runs[base]
+    for label in labels:
+        if label == base:
+            continue
+        run = runs[label]
+        assert set(run) == set(ref), \
+            f"{label}: request ids differ from {base}: " \
+            f"{sorted(set(run) ^ set(ref))}"
+        bad = {rid: (ref[rid], run[rid]) for rid in ref
+               if run[rid] != ref[rid]}
+        assert not bad, f"{label} != {base}: {bad}"

@@ -3,7 +3,6 @@ construction, submit-time admission control, and Local == Pipelined greedy
 equivalence through the N_S-stage shard_map pipe (subprocess, fake devices).
 """
 
-import os
 import subprocess
 import sys
 
@@ -150,14 +149,13 @@ def test_pipelined_backend_rejects_shallow_queue(rt):
 EQUIV_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import jax, jax.numpy as jnp, numpy as np
+import jax, jax.numpy as jnp
+from equivalence import assert_equivalent, golden_runs, random_prompts
 from repro.config import get_arch, reduced_config
 from repro.models import model as M
 from repro.models.common import Runtime
-from repro.serving.engine import OfflineEngine
 from repro.serving.kv_cache import PoolConfig
-from repro.serving.request import Request, SamplingParams
-from repro.core.offload import DoubleBufferOffloader
+from repro.serving.request import SamplingParams
 
 rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
 arch = os.environ["PIPE_ARCH"]
@@ -170,25 +168,13 @@ params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
 pool = PoolConfig(page_size=4, n_local_pages=32, n_global_pages=12,
                   max_pages_per_seq=6)
 sp = SamplingParams(temperature=0.0, max_new_tokens=6)
-
-def reqs():
-    rng = np.random.RandomState(7)
-    return [Request(i, list(rng.randint(1, cfg.vocab_size,
-                                        rng.randint(3, 10))), sp)
-            for i in range(10)]        # > slots: replenishment mid-flight
-
-runs = {}
-for backend in ("local", "pipelined"):
-    eng = OfflineEngine(cfg, params, rt, mb_size=2, num_microbatches=3,
-                        pool=pool, sampling=sp,
-                        offloader=DoubleBufferOffloader(pool, 3),
-                        backend=backend, n_stages=2)
-    eng.submit(reqs())
-    runs[backend] = {s.request.request_id: s.generated
-                     for s in eng.run(max_steps=800)}
-    assert len(runs[backend]) == 10, (backend, len(runs[backend]))
-bad = [k for k in runs["local"] if runs["local"][k] != runs["pipelined"][k]]
-assert not bad, bad
+# 10 requests > slots: replenishment while the pipe is in flight
+prompts = random_prompts(cfg, 10, seed=7, lo=3, hi=10)
+runs = golden_runs(cfg, params, rt, prompts, sp, {
+    backend: dict(backend=backend, n_stages=2, mb_size=2,
+                  num_microbatches=3, pool=pool, offload=True)
+    for backend in ("local", "pipelined")}, max_steps=800)
+assert_equivalent(runs, base="local")
 print("OK")
 """
 
@@ -199,10 +185,9 @@ def test_local_pipelined_greedy_equivalence(arch):
     """Acceptance: identical greedy token streams per request on
     LocalBackend vs PipelinedBackend, offloading enabled, continuous
     batching replenishing slots while the pipe is in flight."""
-    env = dict(os.environ)
-    env["PIPE_ARCH"] = arch
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], env=env,
+    from equivalence import subprocess_env
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT],
+                       env=subprocess_env({"PIPE_ARCH": arch}),
                        capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-2000:]}"
     assert "OK" in r.stdout

@@ -1,10 +1,13 @@
-"""Control-plane logic: sharding rules, elastic planner, failure detector,
-straggler mitigation — pure CPU, no devices."""
+"""Control-plane logic: sharding rules, elastic planner (property-style
+over every legal device count), failure detector (flap accounting, timeout
+boundary), straggler mitigation — pure CPU, no devices."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
 
 from conftest import tiny
@@ -106,6 +109,49 @@ def test_planner_full_and_degraded():
         pl.plan(8)
 
 
+MP, POD = 16, 256
+_PLANNER = ElasticPlanner(model_parallel=MP, pod_size=POD)
+
+
+def _check_plan_invariants(live: int) -> None:
+    plan = _PLANNER.plan(live)
+    # accounting: used + spare == live, shape product == used <= live
+    assert plan.devices_used + plan.devices_spare == live
+    assert plan.devices_used <= live
+    prod = 1
+    for d in plan.shape:
+        prod *= d
+    assert prod == plan.devices_used
+    # data axis: largest power of two that fits
+    assert plan.data & (plan.data - 1) == 0 and plan.data >= 1
+    # model axis preserved (TP sharding stays valid on every resize)
+    assert plan.model == MP
+    # pod axis only with >= 2 full pods live
+    if live // POD >= 2:
+        assert plan.axes == ("pod", "data", "model")
+        assert plan.shape[plan.axes.index("pod")] == live // POD
+    else:
+        assert plan.axes == ("data", "model")
+
+
+@settings(max_examples=60, deadline=None)
+@given(live=st.integers(min_value=MP, max_value=4 * POD))
+def test_planner_properties_sampled(live):
+    """Property-style: the planner's invariants hold for sampled device
+    counts across [model_parallel, 4*pod_size] (hypothesis, or the
+    deterministic shim when the real package is absent)."""
+    _check_plan_invariants(live)
+
+
+def test_planner_properties_exhaustive():
+    """The full sweep is cheap (pure python): every legal device count in
+    [model_parallel, 4*pod_size], plus the reject below it."""
+    for live in range(MP, 4 * POD + 1):
+        _check_plan_invariants(live)
+    with pytest.raises(RuntimeError):
+        _PLANNER.plan(MP - 1)
+
+
 def test_resharding_plan_cheap_vs_heavy():
     pl = ElasticPlanner(model_parallel=16, pod_size=256)
     a, b = pl.plan(512), pl.plan(400)
@@ -129,6 +175,40 @@ def test_failure_detector():
     assert not fd.should_restart(now=5.0, required=4)
 
 
+def test_failure_detector_flap_accounting():
+    """A device that misses the timeout and then beats again is a
+    dead->live flap: recorded per device, never silently resurrected."""
+    fd = FailureDetector(timeout=10.0)
+    fd.beat(0, now=0.0)
+    fd.beat(1, now=0.0)
+    assert fd.flap_count() == 0
+    fd.beat(0, now=11.0)                # was dead (11 > 10): flap
+    assert fd.flap_count(0) == 1
+    assert fd.flap_count(1) == 0
+    assert fd.flap_count() == 1
+    assert fd.live(now=11.0) == [0]     # back, but on the record
+    fd.beat(0, now=30.0)                # dead again (30-11 > 10): flap 2
+    assert fd.flap_count(0) == 2
+    assert fd.flap_count(99) == 0       # unseen device
+    # a healthy cadence never counts
+    for t in (5.0, 12.0, 20.0):
+        fd.beat(1, now=t)
+    assert fd.flap_count(1) == 0
+
+
+def test_failure_detector_timeout_boundary():
+    """``now - last_seen == timeout`` is still live: a boundary probe must
+    not flag the device dead, and a boundary beat must not count a flap
+    (no double-counting at the edge)."""
+    fd = FailureDetector(timeout=10.0)
+    fd.beat(0, now=0.0)
+    assert fd.dead(now=10.0) == []      # exactly at timeout: alive
+    assert fd.live(now=10.0) == [0]
+    fd.beat(0, now=10.0)                # boundary beat: not a flap
+    assert fd.flap_count(0) == 0
+    assert fd.dead(now=20.0 + 1e-9) == [0]    # strictly past: dead
+
+
 def test_straggler_mitigation():
     sm = StragglerMitigator(n_stages=4, slow_factor=1.5, demote_factor=3.0)
     for _ in range(10):
@@ -142,3 +222,35 @@ def test_straggler_mitigation():
     for _ in range(20):
         sm.observe(3, 0.5)
     assert 3 in sm.demotions()
+
+
+def test_microbatch_weights_properties():
+    """Satellite coverage: observed weights normalise to mean 1.0, a cold
+    (ewma == 0) stage gets exactly weight 1.0 without skewing the others,
+    and demotions() ⊆ stragglers() whenever demote_factor > slow_factor."""
+    # all observed -> mean exactly 1.0
+    sm = StragglerMitigator(n_stages=4)
+    for s, t in enumerate([0.1, 0.2, 0.1, 0.4]):
+        sm.observe(s, t)
+    w = sm.microbatch_weights()
+    assert np.isclose(np.mean(w), 1.0)
+    assert w[3] < w[1] < w[0]
+
+    # one cold stage: pinned at 1.0, the observed ones still mean-1
+    sm = StragglerMitigator(n_stages=4)
+    for s, t in ((0, 0.1), (1, 0.3), (3, 0.2)):
+        sm.observe(s, t)
+    w = sm.microbatch_weights()
+    assert w[2] == 1.0
+    assert np.isclose(np.mean([w[0], w[1], w[3]]), 1.0)
+
+    # nothing observed at all: everyone 1.0
+    assert StragglerMitigator(n_stages=3).microbatch_weights() == [1.0] * 3
+
+    # demotions ⊆ stragglers for any demote_factor > slow_factor
+    sm = StragglerMitigator(n_stages=5, slow_factor=1.5, demote_factor=3.0)
+    for _ in range(10):
+        for s, t in enumerate([0.1, 0.1, 0.16, 0.4, 0.1]):
+            sm.observe(s, t)
+    assert set(sm.demotions()) <= set(sm.stragglers())
+    assert 3 in sm.stragglers()

@@ -4,7 +4,6 @@ pipelined per request), LLM / EngineConfig / RequestOutput lifecycle,
 status/stats accounting, and run() drain surfacing."""
 
 import logging
-import os
 import subprocess
 import sys
 
@@ -14,6 +13,8 @@ import numpy as np
 import pytest
 
 from conftest import tiny
+from equivalence import assert_equivalent, golden_runs, run_llm, \
+    subprocess_env
 from repro.models import model as M
 from repro.serving.kv_cache import PoolConfig
 from repro.serving.llm import LLM, EngineConfig, RequestOutput
@@ -151,15 +152,12 @@ def test_mixed_batch_greedy_rows_bit_identical_to_all_greedy(rt):
     params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
     prompts = _prompts(cfg, 4)
 
-    mixed = LLM(cfg, params=params, rt=rt, config=EngineConfig(
-        mb_size=4, num_microbatches=1, pool=POOL))
-    mixed_out = {o.request_id: o.token_ids
-                 for o in mixed.generate(prompts, _mixed_sps())}
-
-    greedy = LLM(cfg, params=params, rt=rt, config=EngineConfig(
-        mb_size=4, num_microbatches=1, pool=POOL))
-    greedy_out = {o.request_id: o.token_ids for o in greedy.generate(
-        prompts, SamplingParams(temperature=0.0, max_new_tokens=5))}
+    mixed_out, _ = run_llm(cfg, params, rt, prompts, _mixed_sps(),
+                           mb_size=4, num_microbatches=1, pool=POOL)
+    greedy_out, _ = run_llm(cfg, params, rt, prompts,
+                            SamplingParams(temperature=0.0,
+                                           max_new_tokens=5),
+                            mb_size=4, num_microbatches=1, pool=POOL)
 
     assert mixed_out[0] == greedy_out[0]        # the greedy request
     # sampled rows proved they're actually sampling (almost surely differ)
@@ -174,15 +172,12 @@ def test_mixed_sampling_reproducible_across_layout_and_order(rt):
     prompts = _prompts(cfg, 4, seed=5)
     sps = _mixed_sps(max_new=4)
 
-    def by_llm(mb_size, n_mb):
-        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
-            mb_size=mb_size, num_microbatches=n_mb, pool=POOL))
-        return {o.request_id: o.token_ids
-                for o in llm.generate(prompts, sps)}
-
-    a = by_llm(4, 1)
-    b = by_llm(2, 2)
-    assert a == b
+    runs = golden_runs(cfg, params, rt, prompts, sps, {
+        "4x1": dict(mb_size=4, num_microbatches=1, pool=POOL),
+        "2x2": dict(mb_size=2, num_microbatches=2, pool=POOL),
+    })
+    assert_equivalent(runs, base="4x1")
+    a = {rid: list(toks) for rid, (toks, _) in runs["4x1"].items()}
 
     # admission order: same request ids submitted shuffled
     def by_order(order):
@@ -199,14 +194,21 @@ def test_mixed_sampling_reproducible_across_layout_and_order(rt):
 MIXED_EQUIV_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import numpy as np
+import jax
+import jax.numpy as jnp
+from equivalence import assert_equivalent, golden_runs, random_prompts
+from repro.config import get_arch, reduced_config
+from repro.models import model as M
+from repro.models.common import Runtime
 from repro.serving.kv_cache import PoolConfig
-from repro.serving.llm import LLM, EngineConfig, SamplingParams
+from repro.serving.llm import SamplingParams
 
+rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+cfg = reduced_config(get_arch("yi-9b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
 pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
                   max_pages_per_seq=8)
-rng = np.random.RandomState(3)
-prompts = None
+prompts = random_prompts(cfg, 6, seed=3, lo=3, hi=16)
 sps = [SamplingParams(temperature=0.0, max_new_tokens=4),
        SamplingParams(temperature=1.0, top_k=8, max_new_tokens=4),
        SamplingParams(temperature=0.7, top_p=0.9, max_new_tokens=4),
@@ -214,24 +216,12 @@ sps = [SamplingParams(temperature=0.0, max_new_tokens=4),
        SamplingParams(temperature=1.5, max_new_tokens=4),
        SamplingParams(temperature=1.0, top_k=4, top_p=0.8,
                       max_new_tokens=4)]
-runs = {}
-for backend in ("local", "pipelined"):
-    for prefill_mode in ("chunked", "exact"):
-        llm = LLM("yi-9b", config=EngineConfig(
-            mb_size=2, num_microbatches=2, pool=pool, offload=True,
-            backend=backend, n_stages=2, prefill_mode=prefill_mode,
-            prefill_chunk=4, max_prefill_tokens_per_tick=8))
-        if prompts is None:
-            prompts = [list(rng.randint(1, llm.cfg.vocab_size,
-                                        rng.randint(3, 16)))
-                       for _ in range(6)]
-        runs[backend, prefill_mode] = {
-            o.request_id: o.token_ids for o in llm.generate(prompts, sps)}
-        assert all(o_ids for o_ids in runs[backend, prefill_mode].values())
-base = runs["local", "exact"]
-for key, run in runs.items():
-    bad = [k for k in base if base[k] != run[k]]
-    assert not bad, (key, bad, runs)
+common = dict(pool=pool, offload=True, mb_size=2, num_microbatches=2,
+              n_stages=2, prefill_chunk=4, max_prefill_tokens_per_tick=8)
+runs = golden_runs(cfg, params, rt, prompts, sps, {
+    f"{backend}/{mode}": dict(backend=backend, prefill_mode=mode, **common)
+    for backend in ("local", "pipelined") for mode in ("chunked", "exact")})
+assert_equivalent(runs, base="local/exact")
 print("MIXED-OK")
 """
 
@@ -242,10 +232,9 @@ def test_mixed_sampling_local_pipelined_equivalence():
     per-request token streams across LocalBackend vs the 2-stage pipe AND
     chunked (multi-chunk prompts) vs exact-length prefill — all four
     combinations bit-identical per request."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", MIXED_EQUIV_SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=560)
+    r = subprocess.run([sys.executable, "-c", MIXED_EQUIV_SCRIPT],
+                       env=subprocess_env(), capture_output=True, text=True,
+                       timeout=560)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-2000:]}"
     assert "MIXED-OK" in r.stdout
 

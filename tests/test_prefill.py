@@ -4,7 +4,6 @@ pipe without blocking in-flight decode, page-exhaustion admission, the
 submit() no-mutation contract, phase-split stats, and pow2 bucketing of
 the recurrent exact-length fallback."""
 
-import os
 import subprocess
 import sys
 
@@ -14,6 +13,8 @@ import numpy as np
 import pytest
 
 from conftest import tiny
+from equivalence import (assert_equivalent, mixed_sps, random_prompts,
+                         run_llm, subprocess_env)
 from repro.models import model as M
 from repro.serving.engine import OfflineEngine
 from repro.serving.kv_cache import PoolConfig
@@ -24,19 +25,8 @@ from repro.serving.request import (FinishReason, Request, SamplingParams,
 POOL = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
                   max_pages_per_seq=8)
 
-
-def _prompts(cfg, n, seed=0, lo=3, hi=20):
-    rng = np.random.RandomState(seed)
-    return [list(rng.randint(1, cfg.vocab_size, rng.randint(lo, hi)))
-            for _ in range(n)]
-
-
-def _mixed_sps(n, max_new=5):
-    pol = [SamplingParams(temperature=0.0, max_new_tokens=max_new),
-           SamplingParams(temperature=1.0, top_k=8, max_new_tokens=max_new),
-           SamplingParams(temperature=0.7, top_p=0.9,
-                          max_new_tokens=max_new)]
-    return [pol[i % len(pol)] for i in range(n)]
+_prompts = random_prompts               # shared fixture (tests/equivalence)
+_mixed_sps = mixed_sps
 
 
 # ------------------------------------------------------ chunked == exact ---
@@ -51,14 +41,12 @@ def test_chunked_prefill_bit_identical_to_exact_local(rt):
     sps = _mixed_sps(6)
     runs = {}
     for mode in ("exact", "chunked"):
-        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
-            mb_size=2, num_microbatches=2, pool=POOL, offload=True,
-            prefill_mode=mode, prefill_chunk=4,
-            max_prefill_tokens_per_tick=8))
+        runs[mode], llm = run_llm(
+            cfg, params, rt, prompts, sps, mb_size=2, num_microbatches=2,
+            pool=POOL, offload=True, prefill_mode=mode, prefill_chunk=4,
+            max_prefill_tokens_per_tick=8)
         assert llm.engine.chunked_prefill == (mode == "chunked")
-        runs[mode] = {o.request_id: (o.token_ids, o.finish_reason)
-                      for o in llm.generate(prompts, sps)}
-    assert runs["exact"] == runs["chunked"]
+    assert_equivalent(runs, base="exact")
 
 
 def test_chunked_prefill_single_fixed_shape_jit(rt):
@@ -93,7 +81,6 @@ def test_chunked_prefill_offload_residency_uses_real_microbatch(rt):
     staged under the wrong host key and zeroed at the next swap."""
     cfg = tiny("yi-9b")
     params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
-    from repro.core.offload import DoubleBufferOffloader
     # 3 usable local pages force every sequence's pages into the global
     # pools; slots 0/2 share parity 0 with different microbatch ids
     pool = PoolConfig(page_size=8, n_local_pages=4, n_global_pages=16,
@@ -102,17 +89,12 @@ def test_chunked_prefill_offload_residency_uses_real_microbatch(rt):
     prompts = _prompts(cfg, 6, seed=9, lo=6, hi=16)
     runs = {}
     for mode in ("exact", "chunked"):
-        eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=3,
-                            pool=pool, sampling=sp,
-                            offloader=DoubleBufferOffloader(pool, 3),
-                            prefill_mode=mode, prefill_chunk=4,
-                            max_prefill_tokens_per_tick=8)
-        eng.submit([Request(i, p, sp) for i, p in enumerate(prompts)])
-        done = eng.run(max_steps=500)
-        assert len(done) == 6
-        runs[mode] = {s.request.request_id: s.generated for s in done}
-        assert eng.backend.swap_count > 0      # offloading actually engaged
-    assert runs["exact"] == runs["chunked"]
+        runs[mode], llm = run_llm(
+            cfg, params, rt, prompts, sp, max_steps=500, mb_size=1,
+            num_microbatches=3, pool=pool, offload=True, prefill_mode=mode,
+            prefill_chunk=4, max_prefill_tokens_per_tick=8)
+        assert llm.engine.backend.swap_count > 0   # offloading engaged
+    assert_equivalent(runs, base="exact")
 
 
 # ------------------------------------------------- page exhaustion path ---
@@ -339,9 +321,8 @@ def test_pipelined_chunk_prefill_does_not_block_decode():
     persistent pipe stage-to-stage — decode microbatches stay in flight
     (busy_microbatches non-empty) and keep producing tokens on the same
     engine ticks, and the interleaving is bit-transparent to outputs."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", INTERLEAVE_SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=560)
+    r = subprocess.run([sys.executable, "-c", INTERLEAVE_SCRIPT],
+                       env=subprocess_env(), capture_output=True, text=True,
+                       timeout=560)
     assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-2000:]}"
     assert "INTERLEAVE-OK" in r.stdout
