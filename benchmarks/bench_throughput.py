@@ -1,7 +1,9 @@
 """Paper Table 4 (the headline): output throughput vs link latency for the
 three serving policies, from the calibrated discrete-event simulator —
 plus a measured engine comparison of the two execution backends on a
-decode-heavy and a prefill-heavy (``--workload prefill_heavy``) workload."""
+decode-heavy and a prefill-heavy (``--workload prefill_heavy``) workload,
+plus the Table-4-shaped ``latency_curve`` on the REAL engine over
+simulated WAN links (virtual clock, circular vs round-flush)."""
 
 from repro.core.simulator import PAPER_TABLE4, table4
 
@@ -88,13 +90,104 @@ def _engine_backends(rows, quick: bool, workload: str = "all"):
                          "mean_latency_steps": rep["mean_latency_steps"]})
 
 
+def _latency_curve(rows, quick: bool):
+    """The Table-4-shaped curve on the REAL engine: decode tok/s vs
+    one-way link latency, planner-chosen N_B circular schedule vs the
+    round-flush (vLLM-PP) N_B = N_S baseline, through
+    ``SimulatedLinkTransport`` on a virtual clock (fixed virtual stage
+    time, so the numbers are machine-independent and the run costs CPU
+    milliseconds).  Each cell is cross-checked against the discrete-event
+    simulator's round-time mechanics (``sim_tps`` — the same
+    ``PipelineSimulator._round_time`` code that produces Table 4).
+    Recorded in BENCH_throughput.json; check_regression.py reports it as
+    informational (non-gated) until CI history exists."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_arch, reduced_config
+    from repro.core.scheduler import optimal_microbatches
+    from repro.core.simulator import PipelineSimulator, SimConfig
+    from repro.models import model as M
+    from repro.models.common import Runtime
+    from repro.serving.kv_cache import PoolConfig
+    from repro.distributed.transport import SimulatedLinkTransport
+    from repro.serving.llm import LLM, EngineConfig, SamplingParams
+
+    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    cfg = reduced_config(get_arch("yi-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=64, n_global_pages=0,
+                      max_pages_per_seq=4)
+    n_stages = 2 if len(jax.devices()) >= 2 else 1
+    T = 0.016                           # virtual stage time (seconds)
+    lats = (0.0, 0.064) if quick else (0.0, 0.016, 0.032, 0.064)
+    max_new = 10 if quick else 16
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new)
+    rng = np.random.RandomState(0)
+
+    print(f"\n-- latency_curve (real engine, virtual clock: "
+          f"T_S={T*1000:.0f}ms, {n_stages} stage(s)) --")
+    for lat in lats:
+        # planner-chosen depth, floored so the L=0 cell still has a few
+        # microbatches in flight; ONE admission wave (n_req == circular
+        # slots) so steady state dominates — a lone tail request cannot
+        # hide latency under any schedule and would blur the comparison
+        n_b_star = max(4, min(12, optimal_microbatches(n_stages, T, lat)))
+        n_req = n_b_star
+        prompts = [list(rng.randint(1, cfg.vocab_size, 6))
+                   for _ in range(n_req)]
+        for policy, n_b, schedule in (
+                ("circular", n_b_star, "circular"),
+                ("round_flush", n_stages, "round_flush")):
+            tr = SimulatedLinkTransport.uniform(n_stages, lat,
+                                                stage_time_s=T)
+            llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+                mb_size=1, num_microbatches=n_b, pool=pool, offload=False,
+                backend="pipelined", n_stages=n_stages, transport=tr,
+                schedule=schedule, prefill_chunk=8,
+                max_prefill_tokens_per_tick=8))
+            outs = llm.generate(prompts, sp, max_steps=5000)
+            assert all(o.finished for o in outs)
+            rep = llm.stats()
+            vtps = rep["virtual_decode_tok_per_s"]
+            # DES cross-check: the simulator's round-time mechanics at
+            # this exact (N_S, N_B, T_S, L) — steady state, no prefill
+            sim = PipelineSimulator(SimConfig(
+                policy="vllm_pp" if schedule == "round_flush"
+                else "deserve_pp", n_stages=n_stages, latency=lat))
+            sim_tps = n_b / sim._round_time(T, n_b)
+            print(f"  L={lat*1000:5.1f}ms {policy:12s} N_B={n_b:2d} "
+                  f"{vtps:7.1f} virtual tok/s (sim predicts "
+                  f"{sim_tps:7.1f})")
+            rows.append({"bench": "latency_curve", "policy": policy,
+                         "latency": lat, "vtps": vtps, "sim_tps": sim_tps,
+                         "n_b": n_b, "n_stages": n_stages,
+                         "virtual_time_s":
+                             rep["transport"]["virtual_time_s"]})
+    by = {(r["policy"], r["latency"]): r["vtps"] for r in rows
+          if r["bench"] == "latency_curve"}
+    hi = max(lats)
+    ratio = by[("circular", hi)] / by[("round_flush", hi)]
+    print(f"  circular/round_flush at {hi*1000:.0f}ms: {ratio:.1f}x "
+          "(acceptance floor: 3x)")
+    rows.append({"bench": "latency_curve", "policy": "speedup",
+                 "latency": hi, "ratio": ratio})
+
+
 def run(quick: bool = False, workload: str = "all"):
-    """``workload``: "all" (both engine workloads + Table 4), "decode" or
-    "prefill_heavy" (one measured engine workload, no simulator pass)."""
+    """``workload``: "all" (both engine workloads + Table 4), "decode" /
+    "prefill_heavy" (one measured engine workload, no simulator pass),
+    or "latency_curve" (throughput-vs-link-latency on the real engine
+    over simulated WAN links, cross-checked against the DES)."""
     rows = []
+    if workload == "latency_curve":
+        _latency_curve(rows, quick)
+        return rows
     _engine_backends(rows, quick, workload)
     if workload != "all":
         return rows
+    _latency_curve(rows, quick)         # virtual clock — CPU-cheap
     res = table4(sim_seconds=200 if quick else 400,
                  warmup=50 if quick else 100)
     print("\n== Table 4: output throughput (tok/s) vs one-way latency ==")

@@ -10,6 +10,12 @@ throughput.  CI machines are noisy and heterogeneous, so the threshold is
 generous (default: fail only when a backend regresses more than 30% below
 baseline).
 
+The ``latency_curve`` workload (virtual-clock decode tok/s vs simulated
+link latency, circular vs round-flush — see ``bench_throughput.py``) is
+registered as *informational*: its deltas are printed per
+(policy, latency) cell but never fail the gate, until enough CI history
+exists to promote it into ``GATES``.
+
     python benchmarks/check_regression.py --baseline BENCH_throughput.json \
         --new bench_new.json [--threshold 0.30] [--allow-missing]
 
@@ -38,6 +44,13 @@ GATES = (
     ("engine_prefill", "prefill_tps", None, "prefill tok/s"),
 )
 
+# informational metrics: compared and printed, but NEVER fail the gate
+# (no CI history yet — promote to GATES once re-baselined from CI
+# artifacts, see ROADMAP).  Rows are keyed (policy, latency).
+INFORMATIONAL = (
+    ("latency_curve", "vtps", "virtual decode tok/s"),
+)
+
 
 def _tps_by_backend(path: str, bench: str, field: str,
                     fallback) -> dict:
@@ -50,6 +63,18 @@ def _tps_by_backend(path: str, bench: str, field: str,
         tps = row.get(field, row.get(fallback) if fallback else None)
         if tps is not None:           # keep 0.0 — a zero-throughput run
             out[row.get("policy", "?")] = float(tps)   # must trip the gate
+    return out
+
+
+def _rows_by_policy_latency(path: str, bench: str, field: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for row in data.get("rows", []):
+        if row.get("bench") != bench or field not in row:
+            continue
+        out[(row.get("policy", "?"),
+             float(row.get("latency", 0.0)))] = float(row[field])
     return out
 
 
@@ -103,6 +128,28 @@ def main() -> int:
                   f"{n_tps:.1f} {label} ({-drop:+.1%}) [{status}]")
     if not compared:
         print("perf gate: nothing comparable — skipping")
+
+    # non-gated, informational only: report the delta, never fail
+    for bench, field, label in INFORMATIONAL:
+        try:
+            base = _rows_by_policy_latency(args.baseline, bench, field)
+            new = _rows_by_policy_latency(args.new, bench, field)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not base and not new:
+            continue
+        for key in sorted(set(base) | set(new)):
+            b, n = base.get(key), new.get(key)
+            pol, lat = key
+            tag = f"{bench}/{pol}@{lat * 1000:.0f}ms"
+            if b is None or n is None:
+                print(f"perf info: {tag}: only in "
+                      f"{'new run' if b is None else 'baseline'} "
+                      f"({label} {n if b is None else b:.1f}) [INFO]")
+            elif b > 0:
+                print(f"perf info: {tag}: {b:.1f} -> {n:.1f} {label} "
+                      f"({n / b - 1.0:+.1%}) [INFO, non-gated]")
+
     if failed:
         return 1
     if missing and not args.allow_missing:

@@ -25,11 +25,14 @@ def main() -> None:
                          "partial --only runs don't clobber the tracked "
                          "snapshot unless asked to)")
     ap.add_argument("--workload", default="all",
-                    choices=["all", "decode", "prefill_heavy"],
+                    choices=["all", "decode", "prefill_heavy",
+                             "latency_curve"],
                     help="throughput bench workload: 'decode' / "
                          "'prefill_heavy' run just that measured engine "
                          "workload (implies --only throughput, no "
-                         "simulator pass)")
+                         "simulator pass); 'latency_curve' sweeps "
+                         "simulated link latency on the real engine "
+                         "(virtual clock, circular vs round-flush)")
     args = ap.parse_args()
     if args.workload != "all" and args.only is None:
         args.only = "throughput"

@@ -1,0 +1,81 @@
+"""Networked serving end-to-end: registry match -> DeploymentPlan ->
+per-link simulated WAN transport -> the real engine on a virtual clock.
+
+The run demonstrates the paper's headline mechanics without any real
+network: the same mixed greedy+sampled workload is served (1) over
+zero-cost in-process links, (2) over the deployment's simulated WAN
+links with the planner-chosen N_B circular schedule, and (3) over the
+same links with the round-flush (vLLM-PP) baseline schedule — outputs
+are bit-identical in all three, while the virtual clock shows the
+circular schedule hiding the link latency and round-flush paying it
+every token round.
+
+    PYTHONPATH=src python examples/networked_serving.py
+"""
+
+import numpy as np
+
+from repro.config import get_arch, reduced_config
+from repro.core.scheduler import optimal_microbatches
+from repro.distributed.transport import (DeploymentPlan,
+                                         SimulatedLinkTransport)
+from repro.framework.registry import Registry
+from repro.serving.kv_cache import PoolConfig
+from repro.serving.llm import LLM, EngineConfig, SamplingParams
+
+
+def main():
+    # --- a fleet registers; the registry builds the latency-minimising
+    # pipeline; its match output IS the deployment plan -----------------
+    reg = Registry()
+    for i in range(2):
+        reg.register_machine(f"west{i}", 24 << 30, "us-west", stake=30.0)
+    reg.register_machine("east0", 24 << 30, "us-east", stake=30.0)
+    task = reg.register_task("alice", "yi-9b", 55 << 30,
+                             n_requests=64, max_price=0.9)
+    match = reg.match(task.task_id)
+    plan = DeploymentPlan.from_match(match)
+    print(plan.describe())
+
+    # --- the engine: reduced config, single host — the deployment's
+    # links are simulated on a virtual clock, so this runs anywhere -----
+    cfg = reduced_config(get_arch("yi-9b"))
+    pool = PoolConfig(page_size=8, n_local_pages=64, n_global_pages=0,
+                      max_pages_per_seq=4)
+    T = 0.016                                   # virtual stage seconds
+    L = plan.max_link_latency
+    n_star = optimal_microbatches(1, T, L)      # 1-stage pipe on this host
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, cfg.vocab_size, 6))
+               for _ in range(n_star)]
+    sps = [SamplingParams(temperature=0.0 if i % 2 == 0 else 0.8,
+                          max_new_tokens=12) for i in range(n_star)]
+
+    def serve(label, n_b, schedule, transport):
+        llm = LLM(cfg, config=EngineConfig(
+            backend="pipelined", n_stages=1, mb_size=1,
+            num_microbatches=n_b, pool=pool, offload=False,
+            transport=transport, schedule=schedule, prefill_chunk=8))
+        outs = llm.generate(prompts, sps)
+        rep = llm.stats()
+        vtps = rep.get("virtual_decode_tok_per_s")
+        print(f"  {label:22s} N_B={n_b:2d} "
+              + (f"{vtps:7.1f} tok/s on the virtual clock"
+                 if vtps else "   (no clock: in-process links)"))
+        return [tuple(o.token_ids) for o in outs], vtps
+
+    print(f"\nserving over max link {L * 1000:.0f}ms "
+          f"(virtual T_S={T * 1000:.0f}ms):")
+    base, _ = serve("in-process", n_star, "circular", None)
+    links = lambda: SimulatedLinkTransport.uniform(1, L, stage_time_s=T)
+    circ, v_c = serve("simulated circular", n_star, "circular", links())
+    rf, v_rf = serve("simulated round-flush", 1, "round_flush", links())
+
+    assert circ == base and rf == base, "transports must not change tokens"
+    print(f"\noutputs bit-identical across all three runs; "
+          f"circular hides the WAN: {v_c / v_rf:.1f}x round-flush")
+    reg.release(match)
+
+
+if __name__ == "__main__":
+    main()

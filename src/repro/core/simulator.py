@@ -70,6 +70,13 @@ class SimConfig:
     policy: str = "deserve_opt"         # vllm_pp | deserve_pp | deserve_opt
     n_stages: int = 8
     latency: float = 0.0                # one-way link latency, seconds
+                                        # (uniform fast path — see
+                                        # link_latencies for per-link)
+    # per-link one-way latencies, one per ring link s -> (s+1) mod N_S —
+    # set to cross-check heterogeneous DeploymentPlan topologies; None
+    # keeps the scalar fast path (the Table 4 grid).  When set it must
+    # have n_stages entries and overrides ``latency``.
+    link_latencies: Optional[tuple] = None
     m_kv_bytes: float = 2.0e9           # KV memory per stage (Fig. 3 M_KV:
                                         # 24 GB − 17.5 GB weights − activations
                                         # − allocator reserve on a 4090)
@@ -87,6 +94,38 @@ class SimConfig:
     warmup_seconds: float = 240.0       # paper: stats from last 16 min
     seed: int = 0
     max_microbatches: int = 64
+
+    def __post_init__(self):
+        if self.link_latencies is not None:
+            self.link_latencies = tuple(float(l) for l in
+                                        self.link_latencies)
+            if len(self.link_latencies) != self.n_stages:
+                raise ValueError(
+                    f"link_latencies has {len(self.link_latencies)} "
+                    f"entries but the ring has {self.n_stages} link(s) "
+                    "(one per stage)")
+
+    # -- per-link geometry (uniform scalar reduces to the paper's L) ------
+
+    @property
+    def lat_max(self) -> float:
+        """Slowest link — what the planner's bubble budget must cover."""
+        if self.link_latencies is None:
+            return self.latency
+        return max(self.link_latencies)
+
+    @property
+    def lat_sum(self) -> float:
+        """Total link time of one ring traversal (uniform: N_S·L)."""
+        if self.link_latencies is None:
+            return self.n_stages * self.latency
+        return sum(self.link_latencies)
+
+    @property
+    def lat_mean(self) -> float:
+        """Scalar-equivalent latency for the §4.3 planner: the circular
+        round trip is N_S·(T_S + lat_mean) = N_S·T_S + lat_sum."""
+        return self.lat_sum / self.n_stages
 
 
 @dataclass
@@ -137,7 +176,7 @@ class PipelineSimulator:
             for _ in range(8):
                 ts = stage_time(bsz, c.time_scale)
                 choice = sched_lib.plan_schedule(
-                    n_stages=c.n_stages, stage_time=ts, latency=c.latency,
+                    n_stages=c.n_stages, stage_time=ts, latency=c.lat_mean,
                     m_kv_bytes=c.m_kv_bytes, kv_bytes_per_seq=kv_seq,
                     offload_bandwidth=c.offload_bandwidth, use_offload=True,
                     host_kv_bytes=c.host_kv_bytes,
@@ -152,7 +191,7 @@ class PipelineSimulator:
         bsz = max(1, offload_lib.batch_size_from_capacity(cap, kv_seq))
         ts = stage_time(bsz, c.time_scale)
         util = 1.0 - sched_lib.bubble_fraction(c.n_stages, c.n_stages, ts,
-                                               c.latency)
+                                               c.lat_mean)
         return sched_lib.ScheduleChoice(
             n_microbatches=c.n_stages, per_mb_batch=bsz, per_mb_kv_bytes=cap,
             utilisation=util, offload=False)
@@ -161,10 +200,16 @@ class PipelineSimulator:
         c = self.cfg
         if c.policy == "vllm_pp":
             # fill/drain every token round + driver round-trip to coordinate
-            # the next round (centralized scheduler, rank 0)
-            return (c.n_stages + n_b - 1) * (ts + c.latency) + 2 * c.latency
-        # circular: bubble-free iff N_B >= N_M (T_S + L) / T_S
-        return max(n_b * ts, c.n_stages * (ts + c.latency))
+            # the next round (centralized scheduler, rank 0).  Per-link
+            # form: one traversal pays every link once (lat_sum); the
+            # (N_B − 1) pipelined follow-ups and the driver round trip are
+            # paced by the slowest link.  Uniform links reduce this to the
+            # paper's (N_S + N_B − 1)(T_S + L) + 2L.
+            return c.n_stages * ts + c.lat_sum \
+                + (n_b - 1) * (ts + c.lat_max) + 2 * c.lat_max
+        # circular: bubble-free iff N_B·T_S covers the full ring traversal
+        # N_S·T_S + Σ L_i (uniform: N_B >= N_M (T_S + L) / T_S)
+        return max(n_b * ts, c.n_stages * ts + c.lat_sum)
 
     # -- main loop ------------------------------------------------------------
 
@@ -214,7 +259,7 @@ class PipelineSimulator:
 
         window = c.sim_seconds - c.warmup_seconds
         util = 1.0 - sched_lib.bubble_fraction(c.n_stages, n_b, ts_now,
-                                               c.latency)
+                                               c.lat_mean)
         m_g = 0.0
         if choice.offload:
             m_g = min(offload_lib.global_pool_bytes(c.offload_bandwidth,
@@ -230,6 +275,20 @@ class PipelineSimulator:
             stage_time=ts_now,
             m_g_bytes=m_g,
         )
+
+
+def simulate_links(policy: str, link_latencies, *, time_scale: float = 1.0,
+                   sim_seconds: float = 400.0, warmup: float = 100.0,
+                   **overrides) -> SimResult:
+    """DES prediction for one policy over an explicit heterogeneous ring —
+    the cross-check the ``latency_curve`` benchmark runs against a
+    :class:`repro.distributed.transport.DeploymentPlan`'s link latencies
+    (``plan.link_latencies``)."""
+    cfg = SimConfig(policy=policy, n_stages=len(link_latencies),
+                    link_latencies=tuple(link_latencies),
+                    time_scale=time_scale, sim_seconds=sim_seconds,
+                    warmup_seconds=warmup, **overrides)
+    return PipelineSimulator(cfg).run()
 
 
 def calibrate(target_tps: float = 194.6, **overrides) -> float:

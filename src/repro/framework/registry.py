@@ -11,6 +11,7 @@ latency inside the pipeline (latency sets the bubble budget, §4.3).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -96,36 +97,76 @@ class Registry:
 
     # -- matching ---------------------------------------------------------
 
+    # past this many distinct regions, exact region-subset enumeration
+    # (2^R) gives way to the greedy heuristic
+    EXACT_REGION_LIMIT = 12
+
+    @staticmethod
+    def _group_latency(group: List[MachineSpec]) -> float:
+        return max((region_latency(a.region, b.region)
+                    for a, b in itertools.combinations(group, 2)),
+                   default=region_latency(group[0].region,
+                                          group[0].region))
+
     def match(self, task_id: int, *, min_stake: float = 0.0) -> Optional[Match]:
-        """Smallest machine set with pooled memory >= model_bytes and minimal
-        intra-pipeline latency; prefers same-region groups."""
+        """Machine set with pooled memory >= model_bytes that *minimises*
+        the maximum pairwise latency inside the pipeline (§4.3: the
+        slowest link sets the bubble budget), tie-broken by fewer
+        machines.
+
+        A machine set's max pairwise latency is a function of the set of
+        regions it spans, so enumerating region subsets in latency order
+        and checking feasibility (pooled idle memory of those regions)
+        is exact: the first feasible subset is optimal.  Within the
+        winning subset the machines are taken largest-memory-first, so
+        the pipeline is also the shortest one that region choice admits.
+        Beyond :attr:`EXACT_REGION_LIMIT` distinct regions the old greedy
+        heuristic (per-region prefixes + global memory-greedy prefix)
+        bounds the work.
+        """
         task = self.tasks[task_id]
         idle = [m for m in self.machines.values()
                 if m.status == "idle" and m.stake >= min_stake]
         if not idle:
             return None
-        best: Optional[Match] = None
-        # greedy by region group first, then mixed
         by_region: Dict[str, List[MachineSpec]] = {}
         for m in idle:
             by_region.setdefault(m.region, []).append(m)
+        regions = sorted(by_region)
+
         candidates: List[List[MachineSpec]] = []
-        for region, ms in by_region.items():
-            ms = sorted(ms, key=lambda m: -m.gpu_memory_bytes)
-            for k in range(1, len(ms) + 1):
-                if sum(m.usable_memory() for m in ms[:k]) >= task.model_bytes:
-                    candidates.append(ms[:k])
+        if len(regions) <= self.EXACT_REGION_LIMIT:
+            for ms in by_region.values():       # sort each region once;
+                ms.sort(key=lambda m: -m.gpu_memory_bytes)  # combos merge
+            for r in range(1, len(regions) + 1):
+                for combo in itertools.combinations(regions, r):
+                    ms = heapq.merge(*(by_region[reg] for reg in combo),
+                                     key=lambda m: -m.gpu_memory_bytes)
+                    chosen, total = [], 0
+                    for m in ms:
+                        chosen.append(m)
+                        total += m.usable_memory()
+                        if total >= task.model_bytes:
+                            candidates.append(chosen)
+                            break
+        else:                                   # heuristic fallback
+            for region, ms in by_region.items():
+                ms = sorted(ms, key=lambda m: -m.gpu_memory_bytes)
+                for k in range(1, len(ms) + 1):
+                    if sum(m.usable_memory()
+                           for m in ms[:k]) >= task.model_bytes:
+                        candidates.append(ms[:k])
+                        break
+            all_ms = sorted(idle, key=lambda m: -m.gpu_memory_bytes)
+            for k in range(1, len(all_ms) + 1):
+                if sum(m.usable_memory()
+                       for m in all_ms[:k]) >= task.model_bytes:
+                    candidates.append(all_ms[:k])
                     break
-        all_ms = sorted(idle, key=lambda m: -m.gpu_memory_bytes)
-        for k in range(1, len(all_ms) + 1):
-            if sum(m.usable_memory() for m in all_ms[:k]) >= task.model_bytes:
-                candidates.append(all_ms[:k])
-                break
+
+        best: Optional[Match] = None
         for group in candidates:
-            lat = max((region_latency(a.region, b.region)
-                       for a, b in itertools.combinations(group, 2)),
-                      default=region_latency(group[0].region,
-                                             group[0].region))
+            lat = self._group_latency(group)
             cand = Match(task=task, machines=group, max_latency=lat)
             if best is None or (lat, len(group)) < (best.max_latency,
                                                     best.n_stages):

@@ -14,16 +14,35 @@ derives (N_B, per-microbatch batch, pool split) from a *measured* stage
 time plus ``--latency`` via the §4.3 planner (``EngineConfig.plan``)
 instead of the hand-set flags.
 
+Networked serving (pipelined backend): ``--link-latency 0.064`` puts a
+uniform simulated WAN (one-way seconds) on every inter-stage link;
+``--deployment us-west,us-west,us-east`` places one stage per region and
+derives per-link latencies from the registry's region table
+(``DeploymentPlan``) — with ``--plan`` the §4.3 planner then consumes the
+plan's **max link latency** instead of the scalar ``--latency`` guess.
+Links are accounted on a virtual clock (outputs stay bit-identical; the
+report gains ``virtual_decode_tok_per_s``).  ``--schedule round_flush``
+runs the vLLM-PP baseline schedule for comparison;
+``--transport-compress int8|topk`` adds wire-byte accounting through the
+activation codecs.
+
 Resilience drills (pipelined backend): ``--inject-fault
 kind@plane:tick:stage[:delay_s]`` (repeatable) drops or delays a stage
 tick mid-run — the engine re-injects the lost work and outputs stay
 bit-identical; ``--reshard-at STEP:STAGES`` tears the backend down at
 engine step STEP and rebuilds it with STAGES pipeline stages, replaying
 the page table so in-flight requests resume without recompute.
+``--detect-failures TIMEOUT`` instead drives ``Engine.reshard`` from a
+live :class:`~repro.distributed.elastic.FailureDetector` loop — one
+heartbeat per stage per engine step, ``--kill-device STEP:DEVICE``
+silences a device mid-run and the loop reshards when the detector
+declares it dead (no explicit stage target needed).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
       --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed] \\
-      [--inject-fault drop@decode:12:1] [--reshard-at 20:1]
+      [--link-latency 0.064 | --deployment us-west,us-east] \\
+      [--schedule round_flush] [--inject-fault drop@decode:12:1] \\
+      [--reshard-at 20:1 | --detect-failures 2 --kill-device 6:1]
 """
 
 from __future__ import annotations
@@ -115,6 +134,36 @@ def main() -> None:
                     help="tear down and rebuild the pipelined backend "
                          "with STAGES stages after engine step STEP "
                          "(page table replayed, no token recomputed)")
+    ap.add_argument("--detect-failures", type=float, default=0.0,
+                    metavar="TIMEOUT",
+                    help="drive Engine.reshard from a live "
+                         "FailureDetector loop: one heartbeat per stage "
+                         "per engine step, reshard when a device misses "
+                         "TIMEOUT steps (pipelined backend)")
+    ap.add_argument("--kill-device", action="append", default=[],
+                    metavar="STEP:DEVICE",
+                    help="stop heartbeating DEVICE after engine step "
+                         "STEP (repeatable; the --detect-failures drill "
+                         "signal)")
+    ap.add_argument("--link-latency", type=float, default=0.0,
+                    help="uniform simulated one-way latency (seconds) on "
+                         "every inter-stage link, accounted on a virtual "
+                         "clock (pipelined backend)")
+    ap.add_argument("--deployment", default="",
+                    metavar="REGION[,REGION...]",
+                    help="one pipeline stage per region (e.g. "
+                         "us-west,us-west,us-east): per-link latencies "
+                         "from the registry's region table; overrides "
+                         "--stages and, under --plan, --latency")
+    ap.add_argument("--schedule", default="circular",
+                    choices=["circular", "round_flush"],
+                    help="circular = DeServe §4.3 (default); round_flush "
+                         "= the vLLM-PP baseline (pipe drained every "
+                         "token round) for latency comparisons")
+    ap.add_argument("--transport-compress", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="wire-byte accounting of activations through "
+                         "the int8/top-k codecs (simulated links only)")
     ap.add_argument("--plan", action="store_true",
                     help="derive N_B / batch / pools from measured stage "
                          "time + --latency (OfflineEngine.from_plan)")
@@ -126,6 +175,38 @@ def main() -> None:
                     help="assumed one-way link latency (schedule + --plan)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    deployment = None
+    if args.deployment:
+        if args.backend != "pipelined":
+            raise SystemExit("--deployment requires --backend pipelined")
+        from repro.distributed.transport import DeploymentPlan
+        deployment = DeploymentPlan.from_regions(
+            [r.strip() for r in args.deployment.split(",") if r.strip()])
+        args.stages = deployment.n_stages
+    if args.backend != "pipelined" and (
+            args.link_latency or args.schedule != "circular"
+            or args.transport_compress != "none"):
+        raise SystemExit("--link-latency / --schedule / "
+                         "--transport-compress require --backend pipelined")
+    if args.transport_compress != "none" and not (deployment
+                                                  or args.link_latency):
+        raise SystemExit("--transport-compress needs a simulated link "
+                         "(--link-latency or --deployment) to account on")
+    detect = args.detect_failures > 0
+    if detect and args.backend != "pipelined":
+        raise SystemExit("--detect-failures requires --backend pipelined")
+    kills = {}
+    for spec in args.kill_device:
+        try:
+            step_s, dev_s = spec.split(":")
+            kills[int(dev_s)] = int(step_s)
+        except ValueError:
+            raise SystemExit(f"--kill-device wants STEP:DEVICE, got {spec!r}")
+    if kills and not detect:
+        raise SystemExit("--kill-device only matters under "
+                         "--detect-failures (nobody is listening for "
+                         "missed heartbeats)")
 
     reshard_at, reshard_stages = 0, 0
     if args.reshard_at:
@@ -164,6 +245,23 @@ def main() -> None:
     fault_plan = FaultPlan.parse(args.inject_fault) if args.inject_fault \
         else None
 
+    compress = None if args.transport_compress == "none" \
+        else args.transport_compress
+    transport = None
+    if deployment is not None:
+        transport = deployment.transport(compress=compress)
+        print(deployment.describe())
+    elif args.link_latency:
+        from repro.distributed.transport import (CompressedTransport,
+                                                 SimulatedLinkTransport)
+        transport = SimulatedLinkTransport.uniform(args.stages,
+                                                   args.link_latency)
+        if compress:
+            transport = CompressedTransport(transport, method=compress)
+        print(f"links: uniform {args.link_latency * 1000:.0f}ms one-way "
+              f"x{args.stages} (virtual clock)"
+              + (f", {compress} wire accounting" if compress else ""))
+
     cfg = get_arch(args.arch)
     if not args.full_size:
         cfg = reduced_config(cfg)
@@ -175,25 +273,33 @@ def main() -> None:
 
     if args.plan:
         t_s = measure_stage_time(cfg, params, rt, args.stages)
+        # planner latency input: the deployment plan's max ring-link
+        # latency (the slowest link sets the bubble budget) beats a
+        # uniform --link-latency beats the bare --latency guess
+        plan_latency = None if deployment is not None else \
+            (args.link_latency or args.latency)
         print(f"planned: measured stage_time={t_s*1000:.1f}ms "
-              f"latency={args.latency*1000:.0f}ms "
+              f"latency={(deployment.max_link_latency if deployment else plan_latency)*1000:.0f}ms"
+              f"{' (deployment max link)' if deployment else ''} "
               f"kv_budget={args.kv_budget_mb:.1f}MB")
         econfig = EngineConfig.plan(
-            n_stages=args.stages, stage_time=t_s, latency=args.latency,
+            n_stages=args.stages, stage_time=t_s, latency=plan_latency,
+            deployment=deployment, transport=transport,
+            schedule=args.schedule,
             m_kv_bytes=args.kv_budget_mb * 1e6, page_size=args.page_size,
             max_pages_per_seq=16, max_microbatches=16, mb_size_cap=4,
             backend=args.backend, seed=args.seed,
             # reshard refuses while offloaded pools hold host content
             # (host-store migration is a ROADMAP item): plan without
             # offload when a reshard drill is scheduled
-            use_offload=not reshard_at,
+            use_offload=not (reshard_at or detect),
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
             prefill_mode=args.prefill_mode, fault_plan=fault_plan)
     else:
         # reshard carries the caches over; offloaded global pools would
         # need host-store migration, so drills run with all-local pools
-        n_global = 0 if reshard_at else 16
+        n_global = 0 if (reshard_at or detect) else 16
         pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
                           n_global_pages=n_global, max_pages_per_seq=16)
         econfig = EngineConfig(mb_size=args.mb_size,
@@ -203,7 +309,8 @@ def main() -> None:
                                prefill_chunk=args.prefill_chunk,
                                max_prefill_tokens_per_tick=args.max_prefill_tokens,
                                prefill_mode=args.prefill_mode,
-                               fault_plan=fault_plan)
+                               fault_plan=fault_plan, transport=transport,
+                               schedule=args.schedule)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
     engine = llm.engine
@@ -231,23 +338,51 @@ def main() -> None:
         sps = SamplingParams(temperature=args.temperature,
                              max_new_tokens=args.max_new)
 
-    if reshard_at:
+    if reshard_at or detect:
         step = 0
         resharded = False
+        detector = None
+        if detect:
+            from repro.distributed.elastic import FailureDetector
+            detector = FailureDetector(timeout=args.detect_failures)
+            for d in range(args.stages):        # one device per stage
+                detector.beat(d, 0.0)
         for outs in llm.generate_iter(prompts, sps):
             step += 1
-            if step == reshard_at:
+            if reshard_at and step == reshard_at:
                 rplan = engine.reshard(n_stages=reshard_stages)
                 resharded = True
                 print(f"resharded at step {step}: {args.stages} -> "
                       f"{reshard_stages} stages "
                       f"(params_move={rplan['params_move']}, "
                       f"batch_reshard={rplan['batch_reshard']})")
-        if not resharded:
+            if detect:
+                # the live loop: heartbeats arrive per engine step (the
+                # step index is the heartbeat clock); a killed device
+                # goes silent and the detector — not a drill flag —
+                # decides when to reshard and to how many stages
+                now = float(step)
+                for d in range(args.stages):
+                    if d not in kills or step <= kills[d]:
+                        detector.beat(d, now)
+                dead = detector.dead(now)
+                if dead and not resharded:
+                    old = engine.n_stages
+                    engine.reshard(detector=detector, now=now)
+                    resharded = True
+                    print(f"failure detected at step {step} (dead "
+                          f"devices {dead}): resharded {old} -> "
+                          f"{engine.n_stages} stage(s)")
+        if reshard_at and not resharded:
             raise SystemExit(
                 f"--reshard-at {args.reshard_at}: the workload finished "
                 f"after {step} step(s), before step {reshard_at} — the "
                 "drill never resharded; lower STEP or grow the workload")
+        if detect and kills and not resharded:
+            raise SystemExit(
+                f"--detect-failures: the workload finished after {step} "
+                "step(s) before any killed device missed its timeout — "
+                "kill earlier, shorten the timeout, or grow the workload")
     else:
         outs = llm.generate(prompts, sps)
     rep = llm.stats()
@@ -257,6 +392,18 @@ def main() -> None:
               f"(decode ticks lost {rep['decode_ticks_lost']}, "
               f"prefill chunks lost {rep['prefill_chunks_lost']}, "
               "all re-injected)")
+    if "transport" in rep:
+        t = rep["transport"]
+        line = (f"transport: {t.get('transport')} "
+                f"virtual_time={t.get('virtual_time_s', 0.0):.2f}s "
+                f"virtual decode tok/s="
+                f"{rep.get('virtual_decode_tok_per_s', 0.0):.1f} "
+                f"wire={t.get('wire_bytes', 0)}B "
+                f"link_stall={t.get('link_stall_s', 0.0):.2f}s")
+        if "compression_ratio" in t:
+            line += (f" (raw {t['raw_bytes']}B, "
+                     f"{t['compression_ratio']:.1f}x on the wire)")
+        print(line)
     done = [o for o in outs if o.finished]
     print(f"finished {len(done)}/{args.requests} requests in "
           f"{rep['wall_time_s']:.2f}s "

@@ -191,6 +191,12 @@ class ExecutionBackend(abc.ABC):
         non-empty only on staged (pipelined) backends."""
         return []
 
+    def transport_stats(self) -> Dict:
+        """Inter-stage transport accounting (virtual clock, wire bytes,
+        link stalls) — non-empty only on staged backends whose transport
+        keeps books (see ``repro.distributed.transport``)."""
+        return {}
+
     @property
     def swap_count(self) -> int:
         return 0
@@ -368,7 +374,7 @@ class PipelinedBackend(_SlotCacheBackend):
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
                  n_stages: int = 2, offload: bool = False, mesh=None,
-                 fault_plan=None):
+                 fault_plan=None, transport=None, schedule: str = "circular"):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
         if num_microbatches < n_stages:
@@ -432,6 +438,29 @@ class PipelinedBackend(_SlotCacheBackend):
         self._prefill_ticks = 0         # ticks where the pipe advanced
         self._stage_times: List[tuple] = []   # (stage, seconds) since the
                                               # last drain_stage_times()
+
+        # inter-stage links: every shift-register entry crossing a stage
+        # boundary — decode ticks AND prefill chunks — travels the
+        # configured transport.  InProcessTransport is today's zero-cost
+        # shard_map behaviour; SimulatedLinkTransport accounts per-link
+        # WAN latency on a virtual clock (outputs stay bit-identical —
+        # the links never touch the computation).
+        from repro.distributed.transport import make_transport
+        self.transport = make_transport(transport, n_stages)
+        if schedule not in ("circular", "round_flush"):
+            raise ValueError(f"schedule must be 'circular'|'round_flush', "
+                             f"got {schedule!r}")
+        # "round_flush" reproduces the vLLM-PP baseline: the pipe is
+        # drained (fill/drain bubbles) every token round instead of
+        # running the §4.3 circular schedule — the latency-curve
+        # benchmark's comparison point.  Drain ticks run the same jits
+        # with bubble entries, so outputs stay bit-identical.
+        self.schedule = schedule
+        self._last_inject_mb = -1       # round boundary detector
+        self._ret_ready: Dict[int, float] = {}  # mb -> virtual time its
+                                                # drained return payload
+                                                # lands at the injector
+        self._dtype_bytes = jnp.dtype(rt.compute_dtype).itemsize
 
         # §4.2 offloading, per stage: stage s double-buffers its own
         # period-slice of the global pools; the epilogue (leftover periods
@@ -514,13 +543,20 @@ class PipelinedBackend(_SlotCacheBackend):
                     delays[ev.stage] = delays.get(ev.stage, 0.0) + ev.delay_s
         return drop_stage, delays, lost
 
-    def _observe_stages(self, dt: float, delays: dict) -> None:
+    def _observe_stages(self, dt: float, delays: dict,
+                        stalls=None) -> None:
         # uniform share of the tick's dispatch time per stage, plus any
         # injected synthetic delay (the deterministic signal tests use —
-        # dispatch is async, so dt alone is a weak lower bound)
+        # dispatch is async, so dt alone is a weak lower bound), plus the
+        # measured per-stage link stall from the transport: a stage
+        # behind a slow link looks exactly like a straggler to the
+        # mitigation loop, shrinking prefill admission the same way
         share = dt / self.n_stages
         for s in range(self.n_stages):
-            self._stage_times.append((s, share + delays.get(s, 0.0)))
+            extra = delays.get(s, 0.0)
+            if stalls is not None:
+                extra += float(stalls[s])
+            self._stage_times.append((s, share + extra))
         if len(self._stage_times) > 4096:       # standalone use: the
             del self._stage_times[:-4096]       # engine drains every step
 
@@ -588,7 +624,13 @@ class PipelinedBackend(_SlotCacheBackend):
             jnp.asarray(tokens, jnp.int32), jnp.asarray(offs),
             jnp.asarray(nval), jnp.asarray(tabs),
             jnp.asarray(lasts, jnp.int32), jnp.int32(drop_stage))
-        self._observe_stages(time.perf_counter() - t0, delays)
+        dt = time.perf_counter() - t0
+        # the chunk activation (R, C, D) crosses each occupied boundary
+        obs = self.transport.tick(
+            [e is not None for e in entries],
+            rows * clen * self.cfg.d_model * self._dtype_bytes,
+            [dt / self.n_stages] * self.n_stages, plane="prefill")
+        self._observe_stages(dt, delays, obs.stalls)
         self._pf_entries = [None] + entries[:-1]
         if drained is None:
             return results
@@ -605,6 +647,24 @@ class PipelinedBackend(_SlotCacheBackend):
 
     def decode(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
                samp: RowSampling, active: bool = True) -> List[DecodeResult]:
+        results: List[DecodeResult] = []
+        if active and self.schedule == "round_flush" \
+                and mb <= self._last_inject_mb:
+            # vLLM-PP behaviour: the microbatch counter wrapped — a new
+            # token round starts, so drain the pipe completely first
+            # (fill/drain bubbles every round).  The drained results ride
+            # back with this call; the engine books them by mb id.
+            while self.pending():
+                results += self._decode_tick(mb, tokens, cur_pos, samp,
+                                             active=False)
+            self._last_inject_mb = -1
+        if active:
+            self._last_inject_mb = mb
+        return results + self._decode_tick(mb, tokens, cur_pos, samp,
+                                           active=active)
+
+    def _decode_tick(self, mb: int, tokens: np.ndarray, cur_pos: np.ndarray,
+                     samp: RowSampling, active: bool) -> List[DecodeResult]:
         entries = list(self._entries)
         entries[0] = (mb, np.asarray(cur_pos, np.int32).copy(), samp) \
             if active else None
@@ -645,13 +705,27 @@ class PipelinedBackend(_SlotCacheBackend):
             jnp.asarray(dsamp.steps), jnp.asarray(dsamp.temp),
             jnp.asarray(dsamp.top_k), jnp.asarray(dsamp.top_p),
             jnp.int32(drop_stage))
-        self._observe_stages(time.perf_counter() - t0, delays)
+        dt = time.perf_counter() - t0
+        # the (mb_size, 1, D) activation crosses each occupied boundary;
+        # an injection may not start before its microbatch's previous
+        # drain returned over the last link (the §4.3 dependency)
+        obs = self.transport.tick(
+            [e is not None for e in entries],
+            self.mb_size * self.cfg.d_model * self._dtype_bytes,
+            [dt / self.n_stages] * self.n_stages,
+            inject_t=self._ret_ready.get(mb, 0.0)
+            if entries[0] is not None else 0.0, plane="decode")
+        self._observe_stages(dt, delays, obs.stalls)
         self._entries = [None] + entries[:-1]
         if drained is None:
             return results
+        self._ret_ready[drained[0]] = obs.return_ready
         return results + [DecodeResult(mb=drained[0],
                                        tokens=np.asarray(toks),
                                        logprobs=np.asarray(lps))]
+
+    def transport_stats(self) -> Dict:
+        return self.transport.stats()
 
     @property
     def swap_count(self) -> int:
@@ -660,8 +734,8 @@ class PipelinedBackend(_SlotCacheBackend):
 
 
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
-                 offloader=None, n_stages=2, mesh=None,
-                 fault_plan=None) -> ExecutionBackend:
+                 offloader=None, n_stages=2, mesh=None, fault_plan=None,
+                 transport=None, schedule="circular") -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
@@ -671,6 +745,11 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
             raise ValueError(
                 "fault injection (FaultPlan) requires the pipelined "
                 "backend — the local backend has no stages to drop")
+        if transport is not None or schedule != "circular":
+            raise ValueError(
+                "stage transports / schedules require the pipelined "
+                "backend — the local backend has no stage boundaries "
+                "for a link to cross")
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
                             offloader=offloader)
@@ -679,5 +758,6 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                                 num_microbatches=num_microbatches, pool=pool,
                                 n_stages=n_stages,
                                 offload=offloader is not None, mesh=mesh,
-                                fault_plan=fault_plan)
+                                fault_plan=fault_plan, transport=transport,
+                                schedule=schedule)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

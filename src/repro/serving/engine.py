@@ -98,7 +98,8 @@ class OfflineEngine:
                  backend="local", n_stages: int = 2, mesh=None,
                  prefill_chunk: int = 0,
                  max_prefill_tokens_per_tick: int = 0,
-                 prefill_mode: str = "auto", fault_plan=None):
+                 prefill_mode: str = "auto", fault_plan=None,
+                 transport=None, schedule: str = "circular"):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -132,7 +133,7 @@ class OfflineEngine:
             backend, cfg, params, rt, mb_size=mb_size,
             num_microbatches=num_microbatches, pool=self.pool,
             offloader=offloader, n_stages=n_stages, mesh=mesh,
-            fault_plan=fault_plan)
+            fault_plan=fault_plan, transport=transport, schedule=schedule)
 
         # elastic control plane: per-stage EWMA tick times (feeds the
         # admission budget) + the planner/mesh-plan bookkeeping reshard()
@@ -216,8 +217,9 @@ class OfflineEngine:
                   sampling: Optional[SamplingParams] = None, seed: int = 0,
                   mesh=None, prefill_chunk: int = 0,
                   max_prefill_tokens_per_tick: int = 0,
-                  prefill_mode: str = "auto",
-                  fault_plan=None) -> "OfflineEngine":
+                  prefill_mode: str = "auto", fault_plan=None,
+                  transport=None,
+                  schedule: str = "circular") -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
         ``repro.core.scheduler.plan_schedule`` — the paper's planner —
@@ -283,7 +285,8 @@ class OfflineEngine:
                   backend=backend, n_stages=n_stages, mesh=mesh,
                   prefill_chunk=prefill_chunk,
                   max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
-                  prefill_mode=prefill_mode, fault_plan=fault_plan)
+                  prefill_mode=prefill_mode, fault_plan=fault_plan,
+                  transport=transport, schedule=schedule)
         eng.schedule_choice = choice
         return eng
 
@@ -474,7 +477,13 @@ class OfflineEngine:
             "pipelined", self.cfg, self.params, self.rt,
             mb_size=self.mb_size, num_microbatches=self.num_microbatches,
             pool=self.pool, offloader=self._offloader, n_stages=n_stages,
-            mesh=None, fault_plan=fault_plan)
+            mesh=None, fault_plan=fault_plan,
+            # the link policy survives the rebuild: for_stages retargets
+            # per-link specs to the new ring (conservative worst-link
+            # envelope when the count changed) and carries the virtual
+            # clock so transport accounting stays monotonic
+            transport=self.backend.transport.for_stages(n_stages),
+            schedule=self.backend.schedule)
         # plane tick counters survive the rebuild, so FaultPlan tick
         # indices keep their absolute meaning across a reshard
         self.backend._decode_ticks, self.backend._prefill_ticks = old_ticks
@@ -899,7 +908,7 @@ class OfflineEngine:
         # per-status counts are O(batch + queue): computed on demand here
         # (and cached on stats), never in the per-tick loop
         self.stats.status_counts = self.status_counts()
-        return {
+        rep = {
             "backend": self.backend.name,
             "prefill_tokens": self.stats.prefill_tokens,
             "decode_tokens": self.stats.decode_tokens,
@@ -922,3 +931,13 @@ class OfflineEngine:
                 float(np.mean(lat_steps)) if lat_steps else 0.0,
             "mean_latency_s": float(np.mean(lat_s)) if lat_s else 0.0,
         }
+        tstats = self.backend.transport_stats()
+        if tstats:
+            rep["transport"] = tstats
+            vt = tstats.get("virtual_time_s", 0.0)
+            if vt > 0:
+                # decode tok/s on the simulated network's clock — what
+                # the latency_curve benchmark compares across schedules
+                rep["virtual_decode_tok_per_s"] = \
+                    self.stats.decode_tokens / vt
+        return rep

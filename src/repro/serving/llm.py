@@ -69,6 +69,17 @@ class EngineConfig:
     # backend — dropped ticks are re-injected by the engine, outputs stay
     # bit-identical to an undisturbed run
     fault_plan: Optional[object] = None
+    # inter-stage link seam (pipelined backend): a
+    # repro.distributed.transport.Transport instance, a DeploymentPlan,
+    # or a float (uniform simulated one-way latency in seconds).  None =
+    # InProcessTransport, today's zero-cost shard_map links.  Simulated
+    # links never touch the computation — outputs stay bit-identical —
+    # they account per-link latency/bandwidth on a virtual clock.
+    transport: Optional[object] = None
+    # "circular" is DeServe §4.3 (the default); "round_flush" reproduces
+    # the vLLM-PP baseline (pipe drained every token round) for the
+    # latency-curve comparison
+    schedule: str = "circular"
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -109,9 +120,19 @@ class EngineConfig:
             raise ValueError(
                 "fault_plan requires backend='pipelined' — the local "
                 "backend has no stages to drop")
+        if self.schedule not in ("circular", "round_flush"):
+            raise ValueError("schedule must be 'circular'|'round_flush', "
+                             f"got {self.schedule!r}")
+        if self.backend != "pipelined" and (self.transport is not None or
+                                            self.schedule != "circular"):
+            raise ValueError(
+                "transport / schedule require backend='pipelined' — the "
+                "local backend has no stage boundaries for a link to "
+                "cross")
 
     @classmethod
-    def plan(cls, *, n_stages: int, stage_time: float, latency: float,
+    def plan(cls, *, n_stages: Optional[int] = None,
+             stage_time: float, latency: Optional[float] = None,
              m_kv_bytes: float, page_size: int = 16,
              max_pages_per_seq: int = 16, bandwidth: float = 0.0,
              use_offload: bool = True, max_microbatches: int = 64,
@@ -119,17 +140,40 @@ class EngineConfig:
              seed: int = 0, mesh=None, prefill_chunk: int = 0,
              max_prefill_tokens_per_tick: int = 0,
              prefill_mode: str = "auto",
-             fault_plan: Optional[object] = None) -> "EngineConfig":
+             fault_plan: Optional[object] = None,
+             deployment: Optional[object] = None,
+             transport: Optional[object] = None,
+             schedule: str = "circular") -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
         the planned counterpart of hand-set knobs (subsumes
         ``OfflineEngine.from_plan``).  ``prefill_chunk=0`` derives the
         chunk from the plan: ~the per-microbatch decode batch, so one
-        chunk costs at most one decode tick of stage time."""
+        chunk costs at most one decode tick of stage time.
+
+        ``deployment`` — a :class:`repro.distributed.transport
+        .DeploymentPlan` (e.g. from ``framework.registry.match``):
+        supplies ``n_stages`` (its stage count) and ``latency`` (its
+        **max ring-link latency** — the slowest link sets the §4.3
+        bubble budget, replacing a scalar guess), and, on the pipelined
+        backend, a per-link :class:`SimulatedLinkTransport` unless an
+        explicit ``transport`` is given."""
+        if deployment is not None:
+            if n_stages is None:
+                n_stages = deployment.n_stages
+            if latency is None:
+                latency = deployment.max_link_latency
+            if transport is None and backend == "pipelined":
+                transport = deployment.transport()
+        if n_stages is None or latency is None:
+            raise ValueError("EngineConfig.plan needs n_stages= and "
+                             "latency= (or a deployment= plan supplying "
+                             "both)")
         return cls(backend=backend, n_stages=n_stages, seed=seed, mesh=mesh,
                    prefill_chunk=prefill_chunk,
                    max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                    prefill_mode=prefill_mode, fault_plan=fault_plan,
+                   transport=transport, schedule=schedule,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, m_kv_bytes=m_kv_bytes,
@@ -147,6 +191,7 @@ class EngineConfig:
                 mesh=self.mesh, prefill_chunk=self.prefill_chunk,
                 max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
                 prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
+                transport=self.transport, schedule=self.schedule,
                 **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
@@ -160,7 +205,8 @@ class EngineConfig:
             n_stages=self.n_stages, mesh=self.mesh,
             prefill_chunk=self.prefill_chunk,
             max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
-            prefill_mode=self.prefill_mode, fault_plan=self.fault_plan)
+            prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
+            transport=self.transport, schedule=self.schedule)
 
 
 @dataclass

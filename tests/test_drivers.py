@@ -24,6 +24,36 @@ def test_serve_driver():
 
 
 @pytest.mark.slow
+def test_serve_driver_networked_with_failure_loop():
+    """serve.py satellites: simulated WAN links (virtual clock +
+    compressed wire accounting) AND the live FailureDetector loop
+    resharding the pipe when a killed device misses its heartbeats —
+    no explicit --reshard-at stage target."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-9b",
+         "--requests", "6", "--max-new", "8", "--backend", "pipelined",
+         "--stages", "2", "--microbatches", "3", "--mb-size", "1",
+         "--detect-failures", "2", "--kill-device", "6:1"],
+        env=ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "failure detected at step" in r.stdout
+    assert "resharded 2 -> 1 stage(s)" in r.stdout
+    assert "finished 6/6 requests" in r.stdout
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-9b",
+         "--requests", "4", "--max-new", "6", "--backend", "pipelined",
+         "--stages", "2", "--microbatches", "2", "--mb-size", "1",
+         "--link-latency", "0.064", "--transport-compress", "int8",
+         "--schedule", "round_flush"],
+        env=ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "links: uniform 64ms" in r.stdout
+    assert "transport: compressed[int8]>simulated" in r.stdout
+    assert "finished 4/4 requests" in r.stdout
+
+
+@pytest.mark.slow
 def test_train_driver_with_resume(tmp_path):
     base = [sys.executable, "-m", "repro.launch.train", "--arch",
             "gemma3-1b", "--steps", "4", "--batch", "2", "--seq", "16",

@@ -1,7 +1,12 @@
 """On-chain framework (§6): registries + matching, escrow payments,
 signature-based arbitration honouring the paper's three design principles."""
 
+import itertools
+import random
+
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.framework.arbitration import ArbitrationModule, SignedResult
 from repro.framework.payment import PaymentError, PaymentModule
@@ -38,6 +43,59 @@ def test_match_spans_regions_when_needed():
     assert m is not None
     assert len(m.machines) >= 6
     assert m.max_latency >= 0.05            # cross-country link in pipeline
+
+
+def test_match_avoids_memory_greedy_latency_trap():
+    """The biggest machine (eu) pulls the memory-greedy prefix across the
+    Atlantic; the optimal set spans only us-east + us-west (0.058s).
+    Guards the exact region-subset enumeration against regressions back
+    to the prefix heuristic."""
+    reg = Registry()
+    for i in range(2):
+        reg.register_machine(f"e{i}", 24 << 30, "us-east", stake=100)
+        reg.register_machine(f"w{i}", 24 << 30, "us-west", stake=100)
+    reg.register_machine("big", 48 << 30, "eu", stake=100)
+    t = reg.register_task("alice", "llama3-70b", 60 << 30, 1, 1.0)
+    m = reg.match(t.task_id)
+    assert m is not None
+    assert {x.region for x in m.machines} == {"us-east", "us-west"}
+    assert abs(m.max_latency - 0.058) < 1e-12
+
+
+_REGIONS = ["us-east", "us-west", "eu"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_machines=st.integers(min_value=1, max_value=7),
+       model_gb=st.integers(min_value=1, max_value=150))
+def test_match_properties(seed, n_machines, model_gb):
+    """Property (satellite): any returned match (a) pools enough usable
+    memory for the model and (b) attains the minimum max-pairwise latency
+    over EVERY feasible machine subset (brute-forced); infeasible fleets
+    return None and leave the task open."""
+    rnd = random.Random(seed)
+    reg = Registry()
+    machines = [reg.register_machine(
+        f"m{i}", rnd.choice([8, 16, 24, 48]) << 30,
+        rnd.choice(_REGIONS), stake=100) for i in range(n_machines)]
+    t = reg.register_task("u", "model", model_gb << 30, 1, 1.0)
+    m = reg.match(t.task_id)
+
+    feasible_lats = [
+        Registry._group_latency(list(combo))
+        for r in range(1, n_machines + 1)
+        for combo in itertools.combinations(machines, r)
+        if sum(x.usable_memory() for x in combo) >= t.model_bytes]
+    if not feasible_lats:
+        assert m is None
+        assert t.status == "open"
+        return
+    assert m is not None
+    assert sum(x.usable_memory() for x in m.machines) >= t.model_bytes
+    assert abs(m.max_latency - min(feasible_lats)) < 1e-12
+    assert m.max_latency == Registry._group_latency(m.machines)
+    assert t.status == "matched"
 
 
 def test_match_respects_stake_floor():
