@@ -90,6 +90,90 @@ def _engine_backends(rows, quick: bool, workload: str = "all"):
                          "mean_latency_steps": rep["mean_latency_steps"]})
 
 
+_BW_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import get_arch, reduced_config
+from repro.models import model as M
+from repro.models.common import Runtime
+from repro.serving.kv_cache import PoolConfig
+from repro.distributed.transport import SimulatedLinkTransport
+from repro.serving.llm import LLM, EngineConfig, SamplingParams
+
+quick = bool(int(os.environ.get("BW_QUICK", "1")))
+rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+cfg = reduced_config(get_arch("yi-9b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+pool = PoolConfig(page_size=8, n_local_pages=64, n_global_pages=0,
+                  max_pages_per_seq=4)
+T, n_stages, n_b = 0.016, 2, 4
+sp = SamplingParams(temperature=0.0, max_new_tokens=10 if quick else 16)
+rng = np.random.RandomState(0)
+prompts = [list(rng.randint(1, cfg.vocab_size, 6)) for _ in range(n_b)]
+rows = []
+for bw in ((8000.0,) if quick else (8000.0, 32000.0)):
+    for policy, wire in (("circular", "fp32"), ("circular_int8", "int8")):
+        tr = SimulatedLinkTransport.uniform(n_stages, 0.0, bandwidth_bps=bw,
+                                            stage_time_s=T)
+        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+            mb_size=1, num_microbatches=n_b, pool=pool, offload=False,
+            backend="pipelined", n_stages=n_stages, transport=tr,
+            schedule="circular", wire_dtype=wire, prefill_chunk=8,
+            max_prefill_tokens_per_tick=8))
+        outs = llm.generate(prompts, sp, max_steps=5000)
+        assert all(o.finished for o in outs)
+        rep = llm.stats()
+        rows.append({"bench": "latency_curve", "policy": policy,
+                     "latency": 0.0, "bandwidth": bw,
+                     "vtps": rep["virtual_decode_tok_per_s"],
+                     "n_b": n_b, "n_stages": n_stages, "wire_dtype": wire,
+                     "virtual_time_s": rep["transport"]["virtual_time_s"]})
+for bw in {r["bandwidth"] for r in rows}:
+    cell = {r["policy"]: r["vtps"] for r in rows if r["bandwidth"] == bw}
+    assert cell["circular_int8"] > cell["circular"], (
+        f"int8 wire must strictly beat fp32 on a {bw:.0f} B/s pipe: {cell}")
+print("BWROWS " + json.dumps(rows))
+"""
+
+
+def _bandwidth_columns(rows, quick: bool):
+    """Bandwidth-capped cells: a *thin* ring (bytes/s) instead of a long
+    one — the wire codec's regime.  Same circular schedule and depth;
+    the only difference between the two policies is the payload packing
+    on the link, so ``circular_int8`` strictly beating ``circular`` is
+    the wire-speed acceptance.  Needs real stage boundaries (payloads
+    only cross between stages), so it runs a 2-stage pipe on two fake
+    host devices in a fresh interpreter, whatever this host has."""
+    import json
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ, BW_QUICK="1" if quick else "0")
+    env["PYTHONPATH"] = os.pathsep.join(filter(None, [
+        os.path.join(os.path.dirname(__file__), "..", "src"),
+        env.get("PYTHONPATH")]))
+    r = subprocess.run([sys.executable, "-c", _BW_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    if r.returncode != 0:
+        print("  bandwidth columns FAILED (2-device subprocess):")
+        print("  " + r.stderr[-800:].replace("\n", "\n  "))
+        raise RuntimeError("bandwidth-capped latency_curve cells failed")
+    bw_rows = json.loads(r.stdout.split("BWROWS ", 1)[1])
+    rows.extend(bw_rows)
+    for bw in sorted({x["bandwidth"] for x in bw_rows}):
+        cell = {x["policy"]: x["vtps"] for x in bw_rows
+                if x["bandwidth"] == bw}
+        ratio = cell["circular_int8"] / cell["circular"]
+        print(f"  BW={bw/1000:4.0f}kB/s circular      "
+              f"{cell['circular']:7.1f} virtual tok/s (fp32 wire)")
+        print(f"  BW={bw/1000:4.0f}kB/s circular_int8 "
+              f"{cell['circular_int8']:7.1f} virtual tok/s "
+              f"({ratio:.2f}x: packed payload on the thin pipe)")
+        rows.append({"bench": "latency_curve", "policy": "wire_speedup",
+                     "latency": 0.0, "bandwidth": bw, "ratio": ratio})
+
+
 def _latency_curve(rows, quick: bool):
     """The Table-4-shaped curve on the REAL engine: decode tok/s vs
     one-way link latency, planner-chosen N_B circular schedule vs the
@@ -99,8 +183,10 @@ def _latency_curve(rows, quick: bool):
     milliseconds).  Each cell is cross-checked against the discrete-event
     simulator's round-time mechanics (``sim_tps`` — the same
     ``PipelineSimulator._round_time`` code that produces Table 4).
-    Recorded in BENCH_throughput.json; check_regression.py reports it as
-    informational (non-gated) until CI history exists."""
+    Bandwidth-capped columns (``_bandwidth_columns``) compare the int8
+    wire codec against raw fp32 payloads on a thin pipe.  Recorded in
+    BENCH_throughput.json and gated per cell by
+    benchmarks/check_regression.py."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -173,6 +259,7 @@ def _latency_curve(rows, quick: bool):
           "(acceptance floor: 3x)")
     rows.append({"bench": "latency_curve", "policy": "speedup",
                  "latency": hi, "ratio": ratio})
+    _bandwidth_columns(rows, quick)
 
 
 def run(quick: bool = False, workload: str = "all"):

@@ -1,30 +1,34 @@
 """Perf-regression gate: compare a fresh ``BENCH_throughput.json`` against
 the committed baseline.
 
-Compares, per backend, the measured engine decode tok/s of the
-decode-heavy workload (``bench == "engine_backend"`` rows, ``decode_tps``
-falling back to ``tps``) AND the prefill tok/s of the prefill-heavy
-workload (``bench == "engine_prefill"`` rows, ``prefill_tps``), so a
-chunked-prefill regression trips the gate independently of decode
-throughput.  CI machines are noisy and heterogeneous, so the threshold is
-generous (default: fail only when a backend regresses more than 30% below
-baseline).
+Three gated workloads:
 
-The ``latency_curve`` workload (virtual-clock decode tok/s vs simulated
-link latency, circular vs round-flush — see ``bench_throughput.py``) is
-registered as *informational*: its deltas are printed per
-(policy, latency) cell but never fail the gate, until enough CI history
-exists to promote it into ``GATES``.
+* ``engine_backend`` rows — measured engine decode tok/s of the
+  decode-heavy workload per backend (``decode_tps`` falling back to
+  ``tps``);
+* ``engine_prefill`` rows — prefill tok/s of the prefill-heavy workload,
+  so a chunked-prefill regression trips the gate independently of decode
+  throughput;
+* ``latency_curve`` rows — virtual-clock decode tok/s on the real engine
+  over simulated WAN links, gated per (policy, latency, bandwidth) cell:
+  the circular-vs-round-flush latency sweep AND the bandwidth-capped
+  fp32-vs-int8 wire columns.  The virtual clock makes these cells nearly
+  machine-independent, so the shared threshold is comfortably wide for
+  them.
+
+CI machines are noisy and heterogeneous, so the threshold is generous
+(default: fail only when a metric regresses more than 30% below
+baseline).
 
     python benchmarks/check_regression.py --baseline BENCH_throughput.json \
         --new bench_new.json [--threshold 0.30] [--allow-missing]
 
-Exit codes: 0 OK, 1 regression, 2 a gated workload key (``engine_backend``
-/ ``engine_prefill`` rows) is missing from the baseline or the new run —
-distinct from a regression so CI can tell "the bench got slower" apart
-from "the bench stopped measuring" (pass ``--allow-missing`` to downgrade
-2 to a skip).  A missing/corrupt baseline *file* still exits 0: a fresh
-clone without committed numbers should not hard-fail the gate.
+Exit codes: 0 OK, 1 regression, 2 a gated workload has no comparable rows
+in the baseline or the new run — distinct from a regression so CI can tell
+"the bench got slower" apart from "the bench stopped measuring" (pass
+``--allow-missing`` to downgrade 2 to a skip).  A missing/corrupt baseline
+*file* still exits 0: a fresh clone without committed numbers should not
+hard-fail the gate.
 
 Caveat: a committed baseline measured on one machine gates a run on
 another, so part of the margin absorbs machine-speed differences, not
@@ -38,17 +42,14 @@ import json
 import sys
 
 
-# gated metrics: (bench row kind, preferred field, fallback field, label)
+# gated metrics: (bench row kind, preferred field, fallback field, label,
+# keying).  keying "policy" compares one number per backend/policy;
+# "cell" compares per (policy, latency, bandwidth) — the latency_curve
+# sweep, where one policy appears at many link settings.
 GATES = (
-    ("engine_backend", "decode_tps", "tps", "decode tok/s"),
-    ("engine_prefill", "prefill_tps", None, "prefill tok/s"),
-)
-
-# informational metrics: compared and printed, but NEVER fail the gate
-# (no CI history yet — promote to GATES once re-baselined from CI
-# artifacts, see ROADMAP).  Rows are keyed (policy, latency).
-INFORMATIONAL = (
-    ("latency_curve", "vtps", "virtual decode tok/s"),
+    ("engine_backend", "decode_tps", "tps", "decode tok/s", "policy"),
+    ("engine_prefill", "prefill_tps", None, "prefill tok/s", "policy"),
+    ("latency_curve", "vtps", None, "virtual decode tok/s", "cell"),
 )
 
 
@@ -66,16 +67,28 @@ def _tps_by_backend(path: str, bench: str, field: str,
     return out
 
 
-def _rows_by_policy_latency(path: str, bench: str, field: str) -> dict:
+def _rows_by_cell(path: str, bench: str, field: str, fallback) -> dict:
+    """{(policy, latency, bandwidth) -> value}; the ratio/speedup rows
+    carry no ``field`` and drop out naturally."""
     with open(path) as f:
         data = json.load(f)
     out = {}
     for row in data.get("rows", []):
         if row.get("bench") != bench or field not in row:
             continue
-        out[(row.get("policy", "?"),
-             float(row.get("latency", 0.0)))] = float(row[field])
+        out[(row.get("policy", "?"), float(row.get("latency", 0.0)),
+             float(row.get("bandwidth", 0.0)))] = float(row[field])
     return out
+
+
+def _fmt_key(key) -> str:
+    if isinstance(key, str):
+        return key
+    pol, lat, bw = key
+    s = f"{pol}@{lat * 1000:.0f}ms"
+    if bw:
+        s += f"/bw{bw / 1000:.0f}k"
+    return s
 
 
 def main() -> int:
@@ -92,13 +105,14 @@ def main() -> int:
     failed = False
     missing = False
     compared = False
-    for bench, field, fallback, label in GATES:
+    for bench, field, fallback, label, keying in GATES:
+        extract = _rows_by_cell if keying == "cell" else _tps_by_backend
         try:
-            base = _tps_by_backend(args.baseline, bench, field, fallback)
+            base = extract(args.baseline, bench, field, fallback)
         except (OSError, json.JSONDecodeError) as e:
             print(f"perf gate: no usable baseline ({e}) — skipping")
             return 0
-        new = _tps_by_backend(args.new, bench, field, fallback)
+        new = extract(args.new, bench, field, fallback)
         if not base or not new:
             which = "baseline" if not base else "new run"
             print(f"perf gate: workload {bench!r} has no comparable rows "
@@ -108,47 +122,29 @@ def main() -> int:
             missing = True
             continue
         compared = True
-        for backend, b_tps in sorted(base.items()):
-            n_tps = new.get(backend)
+        for key, b_tps in sorted(base.items()):
+            tag = f"{bench}/{_fmt_key(key)}"
+            n_tps = new.get(key)
             if n_tps is None:
-                print(f"perf gate: {bench}/{backend}: missing from new "
-                      "run — exit 2")
+                print(f"perf gate: {tag}: missing from new run — exit 2")
                 missing = True
                 continue
             if b_tps <= 0:
-                print(f"perf gate: {bench}/{backend}: baseline is "
-                      f"{b_tps:.1f} — nothing to compare, skipping")
+                print(f"perf gate: {tag}: baseline is {b_tps:.1f} — "
+                      "nothing to compare, skipping")
                 continue
             drop = 1.0 - n_tps / b_tps
             status = "OK"
             if drop > args.threshold:
                 status = "REGRESSION"
                 failed = True
-            print(f"perf gate: {bench}/{backend}: baseline {b_tps:.1f} -> "
+            print(f"perf gate: {tag}: baseline {b_tps:.1f} -> "
                   f"{n_tps:.1f} {label} ({-drop:+.1%}) [{status}]")
+        for key in sorted(set(new) - set(base)):
+            print(f"perf gate: {bench}/{_fmt_key(key)}: new cell "
+                  f"({new[key]:.1f} {label}) — no baseline yet [INFO]")
     if not compared:
         print("perf gate: nothing comparable — skipping")
-
-    # non-gated, informational only: report the delta, never fail
-    for bench, field, label in INFORMATIONAL:
-        try:
-            base = _rows_by_policy_latency(args.baseline, bench, field)
-            new = _rows_by_policy_latency(args.new, bench, field)
-        except (OSError, json.JSONDecodeError):
-            continue
-        if not base and not new:
-            continue
-        for key in sorted(set(base) | set(new)):
-            b, n = base.get(key), new.get(key)
-            pol, lat = key
-            tag = f"{bench}/{pol}@{lat * 1000:.0f}ms"
-            if b is None or n is None:
-                print(f"perf info: {tag}: only in "
-                      f"{'new run' if b is None else 'baseline'} "
-                      f"({label} {n if b is None else b:.1f}) [INFO]")
-            elif b > 0:
-                print(f"perf info: {tag}: {b:.1f} -> {n:.1f} {label} "
-                      f"({n / b - 1.0:+.1%}) [INFO, non-gated]")
 
     if failed:
         return 1

@@ -57,6 +57,27 @@ def _shard_map(f, *, mesh, axis_names, in_specs, out_specs):
                check_rep=False)
 
 
+def _wire_permute(y, n_stages: int, wire_dtype: str):
+    """Ship activations one stage downstream — the wire of §4.3's ring.
+
+    ``wire_dtype="int8"`` packs the payload per row before the permute
+    (one f32 scale per row travels with it) and dequantizes on arrival,
+    so the bytes crossing the slow link are the packed ones the
+    transport accounting prices.  ``"fp32"`` is the identity path: one
+    ppermute of the raw activation, bit-identical to the pre-codec
+    pipeline.  The branch is a trace-time Python ``if`` — each
+    ``wire_dtype`` is its own compiled program, never a ``lax.cond``."""
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    if wire_dtype == "int8":
+        from repro.distributed.compression import (int8_compress_rows,
+                                                   int8_decompress_rows)
+        q, scale = int8_compress_rows(y)
+        q = jax.lax.ppermute(q, "pod", perm)
+        scale = jax.lax.ppermute(scale, "pod", perm)
+        return int8_decompress_rows(q, scale, y.dtype)
+    return jax.lax.ppermute(y, "pod", perm)
+
+
 @dataclass(frozen=True)
 class PipelineConfig:
     n_stages: int
@@ -372,7 +393,8 @@ def pipeline_prefill(params, inputs, caches, cfg: ModelConfig, rt: Runtime,
 def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                          samp_keys, samp_steps, samp_temp, samp_top_k,
                          samp_top_p, drop_stage, *, cfg: ModelConfig,
-                         rt: Runtime, n_stages: int, mb_size: int, mesh):
+                         rt: Runtime, n_stages: int, mb_size: int, mesh,
+                         wire_dtype: str = "fp32"):
     """Advance the persistent pipeline by one tick.
 
     caches:    engine-format paged caches ({"scan": [...], "tail": [...]}).
@@ -394,6 +416,9 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                caller must treat the microbatch as a lost tick and
                re-inject it (decode writes are position-keyed, so the
                retry rewrites identical KV — see serving/engine.py).
+    wire_dtype: static wire codec for the inter-stage ppermute payload —
+               "fp32" (identity, bit-identical) or "int8" (per-row
+               quantize → permute → dequantize; see ``_wire_permute``).
 
     Returns (sampled tokens (mb_size,), model logprobs (mb_size,) for the
     draining microbatch — garbage when ``mb_assign[-1] < 0`` or the last
@@ -469,8 +494,7 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
             jnp.where(is_last, y, jnp.zeros_like(y)).astype(jnp.float32),
             "pod").astype(y.dtype)
         # ship activations one stage downstream for the next tick
-        y_next = jax.lax.ppermute(
-            y, "pod", [(i, (i + 1) % n_stages) for i in range(n_stages)])
+        y_next = _wire_permute(y, n_stages, wire_dtype)
         new_lc = [jax.tree.map(lambda x: x[None], c) for c in new_lc]
         return y_out, y_next[None], new_lc
 
@@ -534,7 +558,8 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
 def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
                                 valid_stage, tables_stage, lasts,
                                 drop_stage, *, cfg: ModelConfig, rt: Runtime,
-                                n_stages: int, mesh):
+                                n_stages: int, mesh,
+                                wire_dtype: str = "fp32"):
     """Advance the persistent *prefill* pipe by one tick.
 
     The serving engine's ``PipelinedBackend`` keeps a second shift register
@@ -624,8 +649,7 @@ def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
         y_out = jax.lax.psum(
             jnp.where(is_last, y, jnp.zeros_like(y)).astype(jnp.float32),
             "pod").astype(y.dtype)
-        y_next = jax.lax.ppermute(
-            y, "pod", [(i, (i + 1) % n_stages) for i in range(n_stages)])
+        y_next = _wire_permute(y, n_stages, wire_dtype)
         new_lc = [jax.tree.map(lambda x: x[None], c) for c in new_lc]
         return y_out, y_next[None], new_lc
 

@@ -18,27 +18,59 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core import offload as offload_lib
 
 
+def _lat_sum(n_stages: int, latency: float,
+             link_latencies: Optional[Sequence[float]]) -> float:
+    """Total one-way link latency around the ring.
+
+    The per-link generalisation of the §4.3 formulas: a microbatch's
+    round trip is ``n_stages·T_S + Σ L_i`` — only the *sum* of the ring
+    latencies enters the steady state (the ``PipelineSimulator``'s
+    circular round time uses exactly this) — which collapses to
+    ``n_stages·(T_S+L)`` on a uniform ring.  ``link_latencies`` wins
+    when both are given (the scalar stays as the display/back-compat
+    argument)."""
+    if link_latencies is not None:
+        lats = [float(l) for l in link_latencies]
+        if len(lats) != n_stages:
+            raise ValueError(
+                f"link_latencies has {len(lats)} entries but the ring has "
+                f"{n_stages} stage(s) — one link per stage")
+        if any(l < 0 for l in lats):
+            raise ValueError(f"link latencies must be >= 0, got {lats}")
+        return sum(lats)
+    return n_stages * latency
+
+
 def optimal_microbatches(n_stages: int, stage_time: float,
-                         latency: float) -> int:
-    """N_B* — the bubble-free in-flight microbatch count (paper §4.3)."""
+                         latency: float = 0.0, *,
+                         link_latencies: Optional[Sequence[float]] = None
+                         ) -> int:
+    """N_B* — the bubble-free in-flight microbatch count (paper §4.3).
+
+    Per-link form: ``ceil((N_M·T_S + Σ L_i) / T_S)``; the uniform-ring
+    scalar ``latency`` reproduces the paper's ``N_M·(T_S+L)/T_S``."""
     if stage_time <= 0:
         return n_stages
-    return max(n_stages,
-               math.ceil(n_stages * (stage_time + latency) / stage_time))
+    trip = n_stages * stage_time + _lat_sum(n_stages, latency,
+                                            link_latencies)
+    return max(n_stages, math.ceil(trip / stage_time))
 
 
 def bubble_fraction(n_stages: int, n_microbatches: int, stage_time: float,
-                    latency: float) -> float:
+                    latency: float = 0.0, *,
+                    link_latencies: Optional[Sequence[float]] = None
+                    ) -> float:
     """Fraction of each stage's steady-state time spent idle.
 
-    A microbatch returns to a stage after ``N_M·(T_S+L)``; the stage does
-    useful work for ``N_B·T_S`` of that (capped at 1.0 utilisation)."""
-    period = n_stages * (stage_time + latency)
+    A microbatch returns to a stage after ``N_M·T_S + Σ L_i``; the stage
+    does useful work for ``N_B·T_S`` of that (capped at 1.0)."""
+    period = n_stages * stage_time + _lat_sum(n_stages, latency,
+                                              link_latencies)
     busy = min(n_microbatches * stage_time, period)
     return max(0.0, 1.0 - busy / period)
 
@@ -84,7 +116,8 @@ class ScheduleChoice:
         return self.n_microbatches * self.per_mb_batch
 
 
-def plan_schedule(*, n_stages: int, stage_time: float, latency: float,
+def plan_schedule(*, n_stages: int, stage_time: float, latency: float = 0.0,
+                  link_latencies: Optional[Sequence[float]] = None,
                   m_kv_bytes: float, kv_bytes_per_seq: float,
                   offload_bandwidth: float = offload_lib.TPU_HOST_DMA_BW,
                   use_offload: bool = True,
@@ -92,17 +125,23 @@ def plan_schedule(*, n_stages: int, stage_time: float, latency: float,
                   max_microbatches: int = 64) -> ScheduleChoice:
     """Choose (N_B, per-microbatch batch) maximising steady-state throughput.
 
-    Steady-state output rate is  N_B·b / max(N_B·T_S, N_M·(T_S+L)) — flat in
-    N_B once the pipe is bubble-free, so the planner picks the *smallest*
-    N_B attaining the maximum (less host memory, less in-flight state).
-    Without offload, raising N_B shrinks per-mb capacity (wash at best);
-    with offload the M_G floor keeps per-mb batch up while N_B covers the
-    latency — the paper's central synergy.  ``host_kv_bytes`` bounds the
-    total offloaded footprint N_B·M_B'.
+    Steady-state output rate is  N_B·b / max(N_B·T_S, N_M·T_S + Σ L_i) —
+    flat in N_B once the pipe is bubble-free, so the planner picks the
+    *smallest* N_B attaining the maximum (less host memory, less in-flight
+    state).  ``link_latencies`` is the per-link generalisation (a real
+    deployment's heterogeneous ring — ``DeploymentPlan.link_latencies``
+    plugs straight in); the scalar ``latency`` is the uniform-ring
+    shorthand ``Σ L_i = N_M·L``.  Without offload, raising N_B shrinks
+    per-mb capacity (wash at best); with offload the M_G floor keeps
+    per-mb batch up while N_B covers the latency — the paper's central
+    synergy.  ``host_kv_bytes`` bounds the total offloaded footprint
+    N_B·M_B'.
     """
     best: Optional[ScheduleChoice] = None
     best_rate = -1.0
-    n_star = optimal_microbatches(n_stages, stage_time, latency)
+    lat_sum = _lat_sum(n_stages, latency, link_latencies)
+    n_star = optimal_microbatches(n_stages, stage_time, latency,
+                                  link_latencies=link_latencies)
     # search a little past N_B* but never past the hard cap: the caller's
     # host memory / pipe depth bound wins over the bubble-free optimum
     if max_microbatches < n_stages:
@@ -124,9 +163,10 @@ def plan_schedule(*, n_stages: int, stage_time: float, latency: float,
         bsz = offload_lib.batch_size_from_capacity(cap, kv_bytes_per_seq)
         if bsz == 0:
             continue
-        util = 1.0 - bubble_fraction(n_stages, n_b, stage_time, latency)
+        util = 1.0 - bubble_fraction(n_stages, n_b, stage_time, latency,
+                                     link_latencies=link_latencies)
         rate = (n_b * bsz) / max(n_b * stage_time,
-                                 n_stages * (stage_time + latency))
+                                 n_stages * stage_time + lat_sum)
         if rate > best_rate * (1.0 + 1e-9):
             best_rate = rate
             best = ScheduleChoice(n_microbatches=n_b, per_mb_batch=bsz,

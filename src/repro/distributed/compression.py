@@ -37,6 +37,37 @@ def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def int8_compress_rows(x: jax.Array):
+    """Per-row symmetric int8 quantization — the in-jit wire codec.
+
+    One f32 scale per row of the trailing axis travels with the payload
+    (``pipeline_decode_tick`` / ``pipeline_prefill_chunk_tick`` ppermute
+    both).  Non-finite inputs are clamped first so a single NaN/inf row
+    cannot poison the scale and the round trip stays finite everywhere.
+    """
+    # cap below float32 max: 127 * (amax/127) can round one ulp past
+    # amax, so amax = finfo.max would decompress to inf
+    xf = jnp.nan_to_num(x.astype(jnp.float32), posinf=3.0e38,
+                        neginf=-3.0e38)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress_rows(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_wire_bytes(n_elems: int, n_rows: int) -> int:
+    """Bytes of the packed per-row payload: 1 B/element + one f32 scale
+    per row.  This is the *actual* on-wire size of what the pipeline jits
+    ship — ``CompressedTransport`` prices with the same formula so
+    accounting and reality agree."""
+    return int(n_elems) + 4 * int(n_rows)
+
+
 def topk_compress(x: jax.Array, frac: float):
     xf = x.astype(jnp.float32).reshape(-1)
     k = max(1, int(xf.size * frac))

@@ -23,11 +23,13 @@ zero-latency boundaries, so this module makes the link a first-class,
     so a 64 ms WAN run finishes in CPU-milliseconds of wall time.
 
 ``CompressedTransport``
-    Wire-byte accounting for activation compression: wraps another
+    Wire-byte pricing for activation compression: wraps another
     transport and re-prices each payload through the int8 / top-k codecs
     of :mod:`repro.distributed.compression` before the link sees it.
-    (Accounting only — the activations themselves are not quantized in
-    the jit; that is the follow-on this seam exists for.)
+    Under ``EngineConfig(wire_dtype="int8")`` the jits really do ship
+    the per-row packed int8 payload and the backend wraps its transport
+    here so the books match the wire exactly; without the in-jit codec
+    (or with top-k, which has no in-jit path) it is what-if accounting.
 
 ``DeploymentPlan``
     Registry-driven deployment: turns a ``framework.registry.match``
@@ -293,34 +295,48 @@ class SimulatedLinkTransport(Transport):
 
 
 class CompressedTransport(Transport):
-    """Activation wire-byte accounting through the gradient codecs of
+    """Activation wire-byte pricing through the codecs of
     :mod:`repro.distributed.compression`: every payload is re-priced as
-    if int8- or top-k-compressed before the wrapped link carries it.
-    Accounting only — the jit still ships full-precision activations; the
-    recorded ``raw_bytes``/``wire_bytes`` ratio is the headroom an in-jit
-    codec would buy on these links."""
+    int8- or top-k-compressed before the wrapped link carries it.
+
+    With ``EngineConfig(wire_dtype="int8")`` the pipelined backend wraps
+    its transport in this class automatically (setting ``elem_bytes`` to
+    the compute dtype and ``row_elems`` to ``d_model``), and ``_wire``
+    then computes exactly the bytes the jit ships: the per-row packed
+    payload of ``int8_compress_rows`` — 1 B/element plus one f32 scale
+    per row.  Accounting and reality agree by construction (see the
+    parity test in ``tests/test_compression.py``).  Used standalone on
+    an uncompressed run (``wire_dtype="fp32"``), it is what-if
+    accounting: the ratio is the headroom the codec would buy.  Top-k
+    has no in-jit path and is always accounting-only."""
 
     name = "compressed"
 
     def __init__(self, inner: Transport, *, method: str = "int8",
-                 topk_frac: float = 0.01, elem_bytes: int = 4):
+                 topk_frac: float = 0.01, elem_bytes: int = 4,
+                 row_elems: int = 0):
         if method not in ("int8", "topk"):
             raise ValueError(f"method must be 'int8'|'topk', got {method!r}")
         self.inner = inner
         self.method = method
         self.topk_frac = topk_frac
         self.elem_bytes = elem_bytes
+        self.row_elems = row_elems      # elements per scale row (d_model);
+                                        # 0 = one scale per payload
         self.raw_bytes = 0
         self._wire_cache: Dict[int, int] = {}
 
     def _wire(self, nbytes: int) -> int:
         w = self._wire_cache.get(nbytes)
         if w is None:
-            from repro.distributed.compression import Compressor
             n_elems = max(1, nbytes // self.elem_bytes)
-            w = Compressor(method=self.method,
-                           topk_frac=self.topk_frac).wire_bytes(
-                np.empty((n_elems,), np.float32))
+            if self.method == "int8":
+                from repro.distributed.compression import int8_wire_bytes
+                n_rows = max(1, n_elems // self.row_elems) \
+                    if self.row_elems else 1
+                w = int8_wire_bytes(n_elems, n_rows)
+            else:
+                w = max(1, int(n_elems * self.topk_frac)) * 8
             self._wire_cache[nbytes] = w
         return w
 
@@ -332,7 +348,8 @@ class CompressedTransport(Transport):
         fresh = CompressedTransport(self.inner.for_stages(n_stages),
                                     method=self.method,
                                     topk_frac=self.topk_frac,
-                                    elem_bytes=self.elem_bytes)
+                                    elem_bytes=self.elem_bytes,
+                                    row_elems=self.row_elems)
         fresh.raw_bytes = self.raw_bytes
         return fresh
 
@@ -412,6 +429,13 @@ class DeploymentPlan:
         return max(self.link_latencies)
 
     @property
+    def worst_link(self) -> LinkSpec:
+        """The slowest ring link (highest latency; bandwidth/jitter are
+        plan-wide) — what `EngineConfig.plan` sizes the prefill chunk
+        against: the thinnest pipe bounds every chunk's wire time."""
+        return max(self.link_specs, key=lambda l: l.latency_s)
+
+    @property
     def max_pairwise_latency(self) -> float:
         n = self.n_stages
         if n == 1:
@@ -430,6 +454,79 @@ class DeploymentPlan:
         if compress:
             t = CompressedTransport(t, method=compress, topk_frac=topk_frac)
         return t
+
+    # -- stage placement ----------------------------------------------------
+
+    def placement_cost(self, order: Sequence[int],
+                       stage_weights: Optional[Sequence[float]] = None
+                       ) -> float:
+        """Cost of visiting the machines in ``order`` (a ring): each
+        link's latency weighted by the mean compute weight of its two
+        endpoint stages —
+
+            Σ_s  L(order[s] → order[s+1]) · (w[s] + w[s+1]) / 2
+
+        With uniform weights this is exactly the ring latency sum that
+        enters the §4.3 round trip (``plan_schedule``'s ``Σ L_i``), so
+        minimising it is the shortest-Hamiltonian-cycle placement; with
+        heterogeneous weights the slowest links are pushed to border the
+        lightest stages (a stall behind a slow link costs less where
+        there is less compute to starve)."""
+        n = self.n_stages
+        w = [1.0] * n if stage_weights is None else \
+            [float(x) for x in stage_weights]
+        if len(w) != n:
+            raise ValueError(f"{len(w)} stage weight(s) for {n} stage(s)")
+        cost = 0.0
+        for s in range(n):
+            a, b = order[s], order[(s + 1) % n]
+            cost += float(self.latency_matrix[a, b]) * \
+                (w[s] + w[(s + 1) % n]) / 2.0
+        return cost
+
+    def place_stages(self, stage_weights: Optional[Sequence[float]] = None
+                     ) -> "DeploymentPlan":
+        """The stage-*placement* pass: reorder the machines so the ring
+        pays the least for its geography (see :meth:`placement_cost`).
+
+        The registry's match order is arbitrary with respect to the
+        ring; this picks the cheapest cycle instead — exhaustively for
+        small rings (≤ 8 stages, rotations deduped by anchoring stage
+        0), greedily (cheapest-next-hop) beyond.  Returns a new plan
+        with stages/regions/machines and the latency matrix permuted
+        consistently; the original is untouched."""
+        import itertools
+        n = self.n_stages
+        if n <= 2:
+            return self
+        if n <= 8:
+            best = min(
+                ((0,) + rest for rest in
+                 itertools.permutations(range(1, n))),
+                key=lambda o: self.placement_cost(o, stage_weights))
+        else:
+            remaining = set(range(1, n))
+            best_l = [0]
+            while remaining:
+                cur = best_l[-1]
+                nxt = min(remaining,
+                          key=lambda j: float(self.latency_matrix[cur, j]))
+                best_l.append(nxt)
+                remaining.discard(nxt)
+            best = tuple(best_l)
+        return self._reordered(best)
+
+    def _reordered(self, order: Sequence[int]) -> "DeploymentPlan":
+        idx = list(order)
+        mat = self.latency_matrix[np.ix_(idx, idx)]
+        return DeploymentPlan(
+            stages=[self.stages[i] for i in idx],
+            regions=[self.regions[i] for i in idx],
+            latency_matrix=mat, bandwidth_bps=self.bandwidth_bps,
+            jitter_s=self.jitter_s,
+            machines=[self.machines[i] for i in idx]
+            if self.machines is not None else None,
+            task=self.task)
 
     def describe(self) -> str:
         lines = [f"deployment: {self.n_stages} stage(s)"]

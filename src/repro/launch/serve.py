@@ -23,8 +23,11 @@ plan's **max link latency** instead of the scalar ``--latency`` guess.
 Links are accounted on a virtual clock (outputs stay bit-identical; the
 report gains ``virtual_decode_tok_per_s``).  ``--schedule round_flush``
 runs the vLLM-PP baseline schedule for comparison;
-``--transport-compress int8|topk`` adds wire-byte accounting through the
-activation codecs.
+``--transport-compress int8`` turns on the REAL in-jit wire codec
+(``EngineConfig(wire_dtype="int8")``: per-row quantization inside both
+tick jits, wire accounting equal to the packed payload — outputs shift
+within the int8 logit tolerance), while ``--transport-compress topk``
+remains wire-byte accounting only (no in-jit top-k path).
 
 Resilience drills (pipelined backend): ``--inject-fault
 kind@plane:tick:stage[:delay_s]`` (repeatable) drops or delays a stage
@@ -162,8 +165,18 @@ def main() -> None:
                          "token round) for latency comparisons")
     ap.add_argument("--transport-compress", default="none",
                     choices=["none", "int8", "topk"],
-                    help="wire-byte accounting of activations through "
-                         "the int8/top-k codecs (simulated links only)")
+                    help="int8: REAL in-jit activation compression on "
+                         "every inter-stage link (wire_dtype='int8' — "
+                         "per-row quantize inside the tick jits, "
+                         "accounting matches the packed payload); topk: "
+                         "wire-byte accounting only (simulated links)")
+    ap.add_argument("--heartbeat-clock", default="monotonic",
+                    choices=["monotonic", "steps"],
+                    help="clock for --detect-failures heartbeats: "
+                         "monotonic wall seconds (default; TIMEOUT is in "
+                         "seconds) or the engine step index (the "
+                         "deterministic shim drills/tests pin — TIMEOUT "
+                         "counts steps)")
     ap.add_argument("--plan", action="store_true",
                     help="derive N_B / batch / pools from measured stage "
                          "time + --latency (OfflineEngine.from_plan)")
@@ -189,10 +202,11 @@ def main() -> None:
             or args.transport_compress != "none"):
         raise SystemExit("--link-latency / --schedule / "
                          "--transport-compress require --backend pipelined")
-    if args.transport_compress != "none" and not (deployment
+    if args.transport_compress == "topk" and not (deployment
                                                   or args.link_latency):
-        raise SystemExit("--transport-compress needs a simulated link "
-                         "(--link-latency or --deployment) to account on")
+        raise SystemExit("--transport-compress topk is accounting only — "
+                         "it needs a simulated link (--link-latency or "
+                         "--deployment) to account on")
     detect = args.detect_failures > 0
     if detect and args.backend != "pipelined":
         raise SystemExit("--detect-failures requires --backend pipelined")
@@ -245,8 +259,11 @@ def main() -> None:
     fault_plan = FaultPlan.parse(args.inject_fault) if args.inject_fault \
         else None
 
-    compress = None if args.transport_compress == "none" \
-        else args.transport_compress
+    # int8 is the real in-jit codec: EngineConfig(wire_dtype=) drives the
+    # tick jits AND the backend's transport wrap, so the books equal the
+    # packed payload.  top-k stays an accounting wrapper built here.
+    wire_dtype = "int8" if args.transport_compress == "int8" else "fp32"
+    compress = "topk" if args.transport_compress == "topk" else None
     transport = None
     if deployment is not None:
         transport = deployment.transport(compress=compress)
@@ -260,7 +277,11 @@ def main() -> None:
             transport = CompressedTransport(transport, method=compress)
         print(f"links: uniform {args.link_latency * 1000:.0f}ms one-way "
               f"x{args.stages} (virtual clock)"
-              + (f", {compress} wire accounting" if compress else ""))
+              + (", topk wire accounting (accounting only)"
+                 if compress else ""))
+    if wire_dtype == "int8":
+        print("wire codec: int8 per-row, in-jit — the ppermute payload "
+              "IS the packed payload on every inter-stage link")
 
     cfg = get_arch(args.arch)
     if not args.full_size:
@@ -295,7 +316,8 @@ def main() -> None:
             use_offload=not (reshard_at or detect),
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
-            prefill_mode=args.prefill_mode, fault_plan=fault_plan)
+            prefill_mode=args.prefill_mode, fault_plan=fault_plan,
+            wire_dtype=wire_dtype)
     else:
         # reshard carries the caches over; offloaded global pools would
         # need host-store migration, so drills run with all-local pools
@@ -310,7 +332,8 @@ def main() -> None:
                                max_prefill_tokens_per_tick=args.max_prefill_tokens,
                                prefill_mode=args.prefill_mode,
                                fault_plan=fault_plan, transport=transport,
-                               schedule=args.schedule)
+                               schedule=args.schedule,
+                               wire_dtype=wire_dtype)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
     engine = llm.engine
@@ -342,6 +365,7 @@ def main() -> None:
         step = 0
         resharded = False
         detector = None
+        hb_t0 = time.monotonic()
         if detect:
             from repro.distributed.elastic import FailureDetector
             detector = FailureDetector(timeout=args.detect_failures)
@@ -357,11 +381,15 @@ def main() -> None:
                       f"(params_move={rplan['params_move']}, "
                       f"batch_reshard={rplan['batch_reshard']})")
             if detect:
-                # the live loop: heartbeats arrive per engine step (the
-                # step index is the heartbeat clock); a killed device
-                # goes silent and the detector — not a drill flag —
-                # decides when to reshard and to how many stages
-                now = float(step)
+                # the live loop: one heartbeat per stage per engine step;
+                # a killed device goes silent and the detector — not a
+                # drill flag — decides when to reshard and to how many
+                # stages.  The default clock is wall (monotonic) seconds,
+                # so --detect-failures is a real timeout; --heartbeat-clock
+                # steps keeps the old step-index clock for deterministic
+                # drills and tests.
+                now = (float(step) if args.heartbeat_clock == "steps"
+                       else time.monotonic() - hb_t0)
                 for d in range(args.stages):
                     if d not in kills or step <= kills[d]:
                         detector.beat(d, now)

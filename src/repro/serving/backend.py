@@ -374,9 +374,15 @@ class PipelinedBackend(_SlotCacheBackend):
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
                  n_stages: int = 2, offload: bool = False, mesh=None,
-                 fault_plan=None, transport=None, schedule: str = "circular"):
+                 fault_plan=None, transport=None, schedule: str = "circular",
+                 wire_dtype: str = "fp32"):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
+        if wire_dtype not in ("fp32", "int8"):
+            raise ValueError(f"wire_dtype must be 'fp32'|'int8', got "
+                             f"{wire_dtype!r} (top-k has no in-jit codec — "
+                             "it stays wire-byte accounting only)")
+        self.wire_dtype = wire_dtype
         if num_microbatches < n_stages:
             raise ValueError(
                 f"continuous batching over a {n_stages}-stage pipe needs "
@@ -405,7 +411,8 @@ class PipelinedBackend(_SlotCacheBackend):
         self._entries: List[Optional[tuple]] = [None] * n_stages
         self._tick_jit = jax.jit(functools.partial(
             PL.pipeline_decode_tick, cfg=cfg, rt=rt,
-            n_stages=n_stages, mb_size=mb_size, mesh=mesh))
+            n_stages=n_stages, mb_size=mb_size, mesh=mesh,
+            wire_dtype=wire_dtype))
         # prefill pipe: a second persistent stepper with its own activation
         # carry / shift register, so prompt chunks flow stage-to-stage and
         # OVERLAP in-flight decode microbatches instead of pausing them.
@@ -415,7 +422,7 @@ class PipelinedBackend(_SlotCacheBackend):
         self._pf_act = None
         self._pf_tick_jit = jax.jit(functools.partial(
             PL.pipeline_prefill_chunk_tick, cfg=cfg, rt=rt,
-            n_stages=n_stages, mesh=mesh))
+            n_stages=n_stages, mesh=mesh, wire_dtype=wire_dtype))
 
         # fault injection (tests / drills): a FaultPlan consumed one event
         # set per plane tick.  Drops null the shift-register entry (the
@@ -445,8 +452,31 @@ class PipelinedBackend(_SlotCacheBackend):
         # shard_map behaviour; SimulatedLinkTransport accounts per-link
         # WAN latency on a virtual clock (outputs stay bit-identical —
         # the links never touch the computation).
-        from repro.distributed.transport import make_transport
+        from repro.distributed.transport import (CompressedTransport,
+                                                 InProcessTransport,
+                                                 make_transport)
         self.transport = make_transport(transport, n_stages)
+        # the decode/prefill call sites below pass RAW activation bytes;
+        # pricing the packed int8 payload is the transport's job, so a
+        # real in-jit codec forces the matching CompressedTransport wrap
+        # (or retunes an existing one) — wire accounting then equals the
+        # actual ppermute payload: 1 B/element + one f32 scale per row.
+        _db = jnp.dtype(rt.compute_dtype).itemsize
+        if wire_dtype == "int8" and \
+                not isinstance(self.transport, InProcessTransport):
+            if isinstance(self.transport, CompressedTransport):
+                if self.transport.method != "int8":
+                    raise ValueError(
+                        f"wire_dtype='int8' but the transport accounts "
+                        f"'{self.transport.method}' — use one codec for "
+                        "both the wire and the books")
+                self.transport.elem_bytes = _db
+                self.transport.row_elems = cfg.d_model
+                self.transport._wire_cache.clear()
+            else:
+                self.transport = CompressedTransport(
+                    self.transport, method="int8", elem_bytes=_db,
+                    row_elems=cfg.d_model).bind(n_stages)
         if schedule not in ("circular", "round_flush"):
             raise ValueError(f"schedule must be 'circular'|'round_flush', "
                              f"got {schedule!r}")
@@ -735,7 +765,8 @@ class PipelinedBackend(_SlotCacheBackend):
 
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                  offloader=None, n_stages=2, mesh=None, fault_plan=None,
-                 transport=None, schedule="circular") -> ExecutionBackend:
+                 transport=None, schedule="circular",
+                 wire_dtype="fp32") -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
@@ -745,11 +776,12 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
             raise ValueError(
                 "fault injection (FaultPlan) requires the pipelined "
                 "backend — the local backend has no stages to drop")
-        if transport is not None or schedule != "circular":
+        if transport is not None or schedule != "circular" \
+                or wire_dtype != "fp32":
             raise ValueError(
-                "stage transports / schedules require the pipelined "
-                "backend — the local backend has no stage boundaries "
-                "for a link to cross")
+                "stage transports / schedules / wire codecs require the "
+                "pipelined backend — the local backend has no stage "
+                "boundaries for a link to cross")
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
                             offloader=offloader)
@@ -759,5 +791,5 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                                 n_stages=n_stages,
                                 offload=offloader is not None, mesh=mesh,
                                 fault_plan=fault_plan, transport=transport,
-                                schedule=schedule)
+                                schedule=schedule, wire_dtype=wire_dtype)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

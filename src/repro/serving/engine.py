@@ -89,6 +89,30 @@ def _sample_first(logits, keys, steps, temp, top_k, top_p):
     return toks, token_logprobs(logits, toks)
 
 
+def prefill_chunk_cap(cfg: ModelConfig, rt: Runtime, link, *,
+                      stage_time: float,
+                      wire_dtype: str = "fp32") -> int:
+    """Bandwidth cap on the prefill chunk length, in tokens.
+
+    A chunk of C tokens ships ``C x`` the per-token decode payload over
+    every ring link; on a bandwidth-capped link its serialisation time
+    is ``C * token_wire_bytes / bandwidth``.  The cap is the largest C
+    whose wire time fits one stage tick, so a prefill chunk never
+    stretches the cadence the §4.3 planner sized ``N_B`` for.  The
+    per-token wire bytes honour the codec: ``d_model * elem_bytes`` raw,
+    ``d_model + 4`` packed int8 (one f32 row scale per token).  Returns
+    0 when there is nothing to cap (no link, or unlimited bandwidth).
+    """
+    bw = getattr(link, "bandwidth_bps", 0.0) if link is not None else 0.0
+    if not bw or stage_time <= 0:
+        return 0
+    if wire_dtype == "int8":
+        token_bytes = cfg.d_model + 4
+    else:
+        token_bytes = cfg.d_model * jnp.dtype(rt.compute_dtype).itemsize
+    return max(1, int(stage_time * bw // token_bytes))
+
+
 class OfflineEngine:
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int = 4, num_microbatches: int = 1,
@@ -99,7 +123,8 @@ class OfflineEngine:
                  prefill_chunk: int = 0,
                  max_prefill_tokens_per_tick: int = 0,
                  prefill_mode: str = "auto", fault_plan=None,
-                 transport=None, schedule: str = "circular"):
+                 transport=None, schedule: str = "circular",
+                 wire_dtype: str = "fp32"):
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -133,7 +158,8 @@ class OfflineEngine:
             backend, cfg, params, rt, mb_size=mb_size,
             num_microbatches=num_microbatches, pool=self.pool,
             offloader=offloader, n_stages=n_stages, mesh=mesh,
-            fault_plan=fault_plan, transport=transport, schedule=schedule)
+            fault_plan=fault_plan, transport=transport, schedule=schedule,
+            wire_dtype=wire_dtype)
 
         # elastic control plane: per-stage EWMA tick times (feeds the
         # admission budget) + the planner/mesh-plan bookkeeping reshard()
@@ -218,8 +244,9 @@ class OfflineEngine:
                   mesh=None, prefill_chunk: int = 0,
                   max_prefill_tokens_per_tick: int = 0,
                   prefill_mode: str = "auto", fault_plan=None,
-                  transport=None,
-                  schedule: str = "circular") -> "OfflineEngine":
+                  transport=None, schedule: str = "circular",
+                  link_latencies=None, worst_link=None,
+                  wire_dtype: str = "fp32") -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
         ``repro.core.scheduler.plan_schedule`` — the paper's planner —
@@ -249,6 +276,7 @@ class OfflineEngine:
         if choice is None:
             choice = plan_schedule(
                 n_stages=n_stages, stage_time=stage_time, latency=latency,
+                link_latencies=link_latencies,
                 m_kv_bytes=m_kv_bytes, kv_bytes_per_seq=kv_bytes_per_seq,
                 offload_bandwidth=bandwidth, use_offload=use_offload,
                 max_microbatches=max_microbatches)
@@ -279,6 +307,17 @@ class OfflineEngine:
             # (floored at 8 so reduced/CPU runs don't degenerate to
             # token-at-a-time prefill)
             prefill_chunk = max(8, mb_size)
+            cap = prefill_chunk_cap(cfg, rt, worst_link,
+                                    stage_time=stage_time,
+                                    wire_dtype=wire_dtype)
+            if cap and cap < prefill_chunk:
+                # bandwidth-shaped: a chunk payload is C x the decode
+                # payload, so on a thin link the FLOPs-derived default
+                # would stretch the stage cadence by its serialisation
+                # time — shrink the CHUNK (not just the rows) until one
+                # chunk's wire time fits a stage tick.  The per-tick
+                # admission budget defaults to one chunk, so it follows.
+                prefill_chunk = cap
         eng = cls(cfg, params, rt, mb_size=mb_size,
                   num_microbatches=choice.n_microbatches, pool=pool,
                   sampling=sampling, offloader=offloader, seed=seed,
@@ -286,7 +325,8 @@ class OfflineEngine:
                   prefill_chunk=prefill_chunk,
                   max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                   prefill_mode=prefill_mode, fault_plan=fault_plan,
-                  transport=transport, schedule=schedule)
+                  transport=transport, schedule=schedule,
+                  wire_dtype=wire_dtype)
         eng.schedule_choice = choice
         return eng
 
@@ -483,7 +523,8 @@ class OfflineEngine:
             # envelope when the count changed) and carries the virtual
             # clock so transport accounting stays monotonic
             transport=self.backend.transport.for_stages(n_stages),
-            schedule=self.backend.schedule)
+            schedule=self.backend.schedule,
+            wire_dtype=getattr(self.backend, "wire_dtype", "fp32"))
         # plane tick counters survive the rebuild, so FaultPlan tick
         # indices keep their absolute meaning across a reshard
         self.backend._decode_ticks, self.backend._prefill_ticks = old_ticks

@@ -80,6 +80,15 @@ class EngineConfig:
     # the vLLM-PP baseline (pipe drained every token round) for the
     # latency-curve comparison
     schedule: str = "circular"
+    # wire codec for the inter-stage activation payload (pipelined
+    # backend): "fp32" ships raw compute-dtype activations (bit-identical
+    # outputs); "int8" quantizes per row INSIDE the tick jits — one f32
+    # scale per row travels with the payload — ~4x fewer bytes on every
+    # ring link at a bounded logit perturbation.  The backend wraps a
+    # bookkeeping transport in CompressedTransport so the accounted wire
+    # bytes equal the packed payload.  (top-k has no in-jit path: it
+    # remains accounting-only via CompressedTransport(method="topk").)
+    wire_dtype: str = "fp32"
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -123,12 +132,17 @@ class EngineConfig:
         if self.schedule not in ("circular", "round_flush"):
             raise ValueError("schedule must be 'circular'|'round_flush', "
                              f"got {self.schedule!r}")
+        if self.wire_dtype not in ("fp32", "int8"):
+            raise ValueError("wire_dtype must be 'fp32'|'int8', got "
+                             f"{self.wire_dtype!r} (top-k stays wire-byte "
+                             "accounting only — no in-jit codec)")
         if self.backend != "pipelined" and (self.transport is not None or
-                                            self.schedule != "circular"):
+                                            self.schedule != "circular" or
+                                            self.wire_dtype != "fp32"):
             raise ValueError(
-                "transport / schedule require backend='pipelined' — the "
-                "local backend has no stage boundaries for a link to "
-                "cross")
+                "transport / schedule / wire_dtype require "
+                "backend='pipelined' — the local backend has no stage "
+                "boundaries for a link to cross")
 
     @classmethod
     def plan(cls, *, n_stages: Optional[int] = None,
@@ -143,21 +157,28 @@ class EngineConfig:
              fault_plan: Optional[object] = None,
              deployment: Optional[object] = None,
              transport: Optional[object] = None,
-             schedule: str = "circular") -> "EngineConfig":
+             schedule: str = "circular",
+             wire_dtype: str = "fp32") -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
         the planned counterpart of hand-set knobs (subsumes
         ``OfflineEngine.from_plan``).  ``prefill_chunk=0`` derives the
         chunk from the plan: ~the per-microbatch decode batch, so one
-        chunk costs at most one decode tick of stage time.
+        chunk costs at most one decode tick of stage time — shrunk
+        further on a bandwidth-capped deployment so one chunk's wire
+        time also fits a stage tick (the thin-link rule; see
+        ``serving.engine.prefill_chunk_cap``).
 
         ``deployment`` — a :class:`repro.distributed.transport
         .DeploymentPlan` (e.g. from ``framework.registry.match``):
-        supplies ``n_stages`` (its stage count) and ``latency`` (its
+        supplies ``n_stages`` (its stage count), ``latency`` (its
         **max ring-link latency** — the slowest link sets the §4.3
-        bubble budget, replacing a scalar guess), and, on the pipelined
+        bubble budget, replacing a scalar guess) plus the full per-link
+        ``link_latencies`` the planner now consumes, the worst
+        ``LinkSpec`` that caps the prefill chunk, and, on the pipelined
         backend, a per-link :class:`SimulatedLinkTransport` unless an
         explicit ``transport`` is given."""
+        link_latencies = worst_link = None
         if deployment is not None:
             if n_stages is None:
                 n_stages = deployment.n_stages
@@ -165,6 +186,8 @@ class EngineConfig:
                 latency = deployment.max_link_latency
             if transport is None and backend == "pipelined":
                 transport = deployment.transport()
+            link_latencies = list(deployment.link_latencies)
+            worst_link = deployment.worst_link
         if n_stages is None or latency is None:
             raise ValueError("EngineConfig.plan needs n_stages= and "
                              "latency= (or a deployment= plan supplying "
@@ -174,9 +197,11 @@ class EngineConfig:
                    max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                    prefill_mode=prefill_mode, fault_plan=fault_plan,
                    transport=transport, schedule=schedule,
+                   wire_dtype=wire_dtype,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
-                       latency=latency, m_kv_bytes=m_kv_bytes,
+                       latency=latency, link_latencies=link_latencies,
+                       worst_link=worst_link, m_kv_bytes=m_kv_bytes,
                        page_size=page_size,
                        max_pages_per_seq=max_pages_per_seq,
                        bandwidth=bandwidth, use_offload=use_offload,
@@ -192,7 +217,7 @@ class EngineConfig:
                 max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
                 prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
                 transport=self.transport, schedule=self.schedule,
-                **self.plan_args)
+                wire_dtype=self.wire_dtype, **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
         if self.offload and pool.n_global_pages:
@@ -206,7 +231,8 @@ class EngineConfig:
             prefill_chunk=self.prefill_chunk,
             max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
             prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
-            transport=self.transport, schedule=self.schedule)
+            transport=self.transport, schedule=self.schedule,
+            wire_dtype=self.wire_dtype)
 
 
 @dataclass

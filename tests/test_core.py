@@ -100,6 +100,29 @@ def test_schedule_diagram_figure2c():
     assert "." in starved.splitlines()[1].split("|")[1][8 * 2:]
 
 
+def test_per_link_latencies_generalise_the_scalar():
+    """§4.3 per-link form: only Σ L_i enters the steady state, so a
+    uniform list reproduces the scalar exactly and any spread of the
+    same sum plans identically (one 256ms link == 4 x 64ms links)."""
+    assert SC.optimal_microbatches(4, 1.0, link_latencies=[0.5] * 4) == \
+        SC.optimal_microbatches(4, 1.0, 0.5) == 6
+    assert SC.bubble_fraction(8, 8, 0.1, link_latencies=[0.1] * 8) == \
+        pytest.approx(0.5)
+    kw = dict(n_stages=4, stage_time=0.08, m_kv_bytes=2e9,
+              kv_bytes_per_seq=15.7e6, offload_bandwidth=6e9)
+    lop = SC.plan_schedule(link_latencies=[0.016, 0.0, 0.0, 0.24], **kw)
+    uni = SC.plan_schedule(latency=0.064, **kw)     # same sum: 0.256
+    assert lop.n_microbatches == uni.n_microbatches
+    assert lop.utilisation == pytest.approx(uni.utilisation)
+    # the list wins over the scalar when both are given
+    assert SC.optimal_microbatches(4, 1.0, 9.9,
+                                   link_latencies=[0.0] * 4) == 4
+    with pytest.raises(ValueError, match="link"):
+        SC.optimal_microbatches(4, 1.0, link_latencies=[0.5] * 3)
+    with pytest.raises(ValueError, match=">= 0"):
+        SC.bubble_fraction(4, 4, 1.0, link_latencies=[0.1, -0.1, 0, 0])
+
+
 def test_plan_schedule_raises_when_one_seq_too_big():
     with pytest.raises(ValueError):
         SC.plan_schedule(n_stages=4, stage_time=0.1, latency=0.0,

@@ -33,7 +33,8 @@ def test_serve_driver_networked_with_failure_loop():
         [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-9b",
          "--requests", "6", "--max-new", "8", "--backend", "pipelined",
          "--stages", "2", "--microbatches", "3", "--mb-size", "1",
-         "--detect-failures", "2", "--kill-device", "6:1"],
+         "--detect-failures", "2", "--kill-device", "6:1",
+         "--heartbeat-clock", "steps"],
         env=ENV, capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "failure detected at step" in r.stdout
