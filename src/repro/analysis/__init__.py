@@ -1,0 +1,33 @@
+"""repro-audit: JAX-aware static analysis + runtime invariant auditing.
+
+DeServe's throughput story rests on invariants the serving core upholds
+only by convention — no host syncs inside the persistent pipe tick loop,
+fixed-shape jits that never retrace mid-serve, ``(seed, request_id,
+token_idx)`` PRNG key discipline, monotonic per-link virtual clocks with
+conserved wire-byte books.  This package machine-checks them:
+
+:mod:`repro.analysis.lint`
+    Repo-specific AST passes (host-sync detector, retrace-hazard
+    detector, PRNG-hygiene pass) with a
+    ``# repro-audit: allow(<rule>) — <reason>`` suppression syntax.
+    Runnable as ``python -m repro.analysis [paths] [--strict-suppressions]``.
+
+:mod:`repro.analysis.invariants`
+    The runtime :class:`EngineAuditor`, enabled via
+    ``EngineConfig(strict=True)`` or ``REPRO_STRICT=1`` (tests default it
+    on): page-table refcount/leak audits after every admission/eviction/
+    reshard replay, ``Status`` lifecycle FSM checks, ``VirtualClock``
+    monotonicity + wire-byte book conservation across ``Transport``
+    crossings, and jit cache-size probes asserting the serve-loop jits
+    compile exactly once per (shape, wire_dtype) config.
+"""
+
+from repro.analysis.invariants import (EngineAuditor, InvariantViolation,
+                                       jit_cache_size)
+from repro.analysis.lint import (AuditConfig, Violation, load_config,
+                                 run_lint)
+
+__all__ = [
+    "AuditConfig", "EngineAuditor", "InvariantViolation", "Violation",
+    "jit_cache_size", "load_config", "run_lint",
+]

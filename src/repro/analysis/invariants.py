@@ -1,0 +1,263 @@
+"""Runtime invariant auditor for the serving engine (strict mode).
+
+Enabled via ``EngineConfig(strict=True)``, ``OfflineEngine(...,
+strict=True)``, or the ``REPRO_STRICT=1`` environment variable (the test
+suite defaults it on).  The engine calls the three hooks after every
+admission (``submit``), tick (``step``), and elastic rebuild
+(``reshard``); each hook re-checks the full invariant set and raises
+:class:`InvariantViolation` at the first breach — the point of strict
+mode is to fail at the tick that corrupted state, not at the assert that
+happened to read it later.
+
+Checked invariants:
+
+* **page accounting** — the allocator's free lists plus every slot's
+  owned pages exactly partition the non-scratch page universe (no leak,
+  no double-grant, scratch page 0 never owned), owned pages belong only
+  to occupied slots, and the engine's published page table matches the
+  allocator's view row-for-row;
+* **Status lifecycle** — per-sequence transitions follow the FSM
+  QUEUED → PREFILLING → DECODING → FINISHED, with the single legal
+  back-edge PREFILLING → QUEUED (admission rollback on page
+  exhaustion); container placement matches status (queue holds QUEUED,
+  slots hold PREFILLING/DECODING at slot == seq.slot, finished holds
+  FINISHED);
+* **transport books** — ``VirtualClock`` time and the wire-byte /
+  send / stall books are monotone non-decreasing across every
+  ``Transport`` crossing *including reshard* (``for_stages`` must carry
+  the books — a reset-to-zero after a rebuild is a conservation bug),
+  and bytes only move with a send;
+* **jit cache sizes** — every serve-loop jit the backend exposes via
+  ``jit_entries()`` (``_tick_jit`` / ``_pf_tick_jit`` / ``_decode_jit``
+  / ``_chunk_jit`` / the per-length prefill jits) has compiled at most
+  once: a second cache entry mid-serve is a silent retrace (shape leak,
+  weak-type flip, or non-hashable static arg).
+
+The audit is pure host-side bookkeeping over state the engine already
+holds on host (numpy page table, python free lists, transport counters)
+— it never touches device arrays, so strict mode adds no device syncs;
+cost is O(pages + slots) per step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["EngineAuditor", "InvariantViolation", "jit_cache_size"]
+
+
+class InvariantViolation(AssertionError):
+    """A strict-mode engine invariant was broken."""
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Number of compiled entries in a ``jax.jit`` callable's cache, or
+    ``None`` when the wrapper doesn't expose one (non-jit callables,
+    future jax versions renaming the probe).  ``None`` means "cannot
+    check", never "violation"."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+def _fail(where: str, msg: str) -> None:
+    raise InvariantViolation(f"[{where}] {msg}")
+
+
+class EngineAuditor:
+    """Attached to one engine; re-entrant across reshard (the engine
+    object survives a rebuild, only its backend is replaced)."""
+
+    def __init__(self, engine) -> None:
+        self._engine = engine
+        # id(seq) -> (status, request_id); seqs are retained by the
+        # engine's queue/slots/finished lists, so ids stay stable for
+        # the sequences we still track
+        self._last_status: Dict[int, Tuple[object, int]] = {}
+        self._books: Dict[str, float] = {}
+        self.checks = 0
+
+    # ---- hooks the engine calls ------------------------------------
+
+    def after_submit(self) -> None:
+        self._audit("submit", resharded=False)
+
+    def after_step(self) -> None:
+        self._audit("step", resharded=False)
+
+    def after_reshard(self) -> None:
+        self._audit("reshard", resharded=True)
+
+    # ---- audit passes ----------------------------------------------
+
+    def _audit(self, where: str, *, resharded: bool) -> None:
+        self.checks += 1
+        self._audit_pages(where)
+        self._audit_fsm(where)
+        self._audit_transport(where, resharded=resharded)
+        self._audit_jits(where)
+
+    def _audit_pages(self, where: str) -> None:
+        eng = self._engine
+        alloc, pool = eng.alloc, eng.pool
+        universe = set(range(1, pool.n_local_pages))
+        universe |= set(pool.global_range(0)) | set(pool.global_range(1))
+
+        free: List[int] = list(alloc._free_local)
+        for gp in alloc._free_global.values():
+            free.extend(gp)
+        owned: List[int] = []
+        for pages in alloc._seq_pages.values():
+            owned.extend(pages)
+
+        if len(free) != len(set(free)):
+            _fail(where, "page audit: duplicate page in the free lists "
+                         f"(free={sorted(free)})")
+        if len(owned) != len(set(owned)):
+            _fail(where, "page audit: page granted to two owners "
+                         f"(owned={sorted(owned)})")
+        overlap = set(free) & set(owned)
+        if overlap:
+            _fail(where, f"page audit: pages {sorted(overlap)} are both "
+                         "free and owned")
+        if 0 in free or 0 in owned:
+            _fail(where, "page audit: scratch page 0 entered the "
+                         "allocator (it must stay reserved)")
+        seen = set(free) | set(owned)
+        if seen != universe:
+            leaked = sorted(universe - seen)
+            conjured = sorted(seen - universe)
+            _fail(where, "page audit: free+owned does not partition the "
+                         f"page universe (leaked={leaked}, "
+                         f"out-of-range={conjured})")
+
+        occupied = {slot for slot, seq in enumerate(eng.slots)
+                    if seq is not None}
+        stray = set(alloc._seq_pages) - occupied
+        if stray:
+            _fail(where, f"page audit: slots {sorted(stray)} own pages "
+                         "but hold no sequence (release missed on "
+                         "finish/evict)")
+
+        # published table vs allocator truth: a slot's row is either the
+        # allocator's view or still all-zero (admitted this step, first
+        # chunk not yet published) — anything else serves stale pages
+        for slot in sorted(alloc._seq_pages):
+            row = np.asarray(eng.table[slot])
+            want = alloc.table_row(slot)
+            if row.any() and not np.array_equal(row, want):
+                _fail(where, f"page audit: published table row for slot "
+                             f"{slot} is {row.tolist()} but the "
+                             f"allocator owns {want.tolist()}")
+        for slot in sorted(occupied - set(alloc._seq_pages)):
+            # a slot without pages must be parked on scratch
+            if np.asarray(eng.table[slot]).any():
+                _fail(where, f"page audit: slot {slot} owns no pages "
+                             "but its table row is non-zero")
+
+    def _audit_fsm(self, where: str) -> None:
+        from repro.serving.request import Status
+        eng = self._engine
+        rank = {Status.QUEUED: 0, Status.PREFILLING: 1,
+                Status.DECODING: 2, Status.FINISHED: 3}
+
+        def check(seq, container: str, allowed, slot=None):
+            rid = seq.request.request_id
+            if seq.status not in allowed:
+                _fail(where, f"fsm: request {rid} has status "
+                             f"{seq.status.name} inside {container} "
+                             f"(allowed: "
+                             f"{'/'.join(s.name for s in allowed)})")
+            if slot is not None and seq.slot != slot:
+                _fail(where, f"fsm: request {rid} sits in slot {slot} "
+                             f"but records seq.slot={seq.slot}")
+            prev = self._last_status.get(id(seq))
+            if prev is not None:
+                old, old_rid = prev
+                backward = rank[seq.status] < rank[old]
+                requeue = (old is Status.PREFILLING
+                           and seq.status is Status.QUEUED)
+                if old_rid == rid and backward and not requeue:
+                    _fail(where, f"fsm: request {rid} moved backward "
+                                 f"{old.name} -> {seq.status.name} "
+                                 "(only PREFILLING -> QUEUED may "
+                                 "rewind, on admission rollback)")
+            return id(seq), (seq.status, rid)
+
+        fresh: Dict[int, Tuple[object, int]] = {}
+        for seq in eng.queue:
+            k, v = check(seq, "queue", (Status.QUEUED,))
+            fresh[k] = v
+        for slot, seq in enumerate(eng.slots):
+            if seq is None:
+                continue
+            k, v = check(seq, "slots",
+                         (Status.PREFILLING, Status.DECODING), slot=slot)
+            fresh[k] = v
+        for seq in eng.finished:
+            k, v = check(seq, "finished", (Status.FINISHED,))
+            fresh[k] = v
+        # forget sequences no longer held by the engine so recycled
+        # object ids can't alias into stale entries
+        self._last_status = fresh
+
+    def _audit_transport(self, where: str, *, resharded: bool) -> None:
+        transport = getattr(self._engine.backend, "transport", None)
+        if transport is None:
+            return
+        try:
+            stats = transport.stats() or {}
+        except Exception:
+            return
+        monotone = ("virtual_time_s", "wire_bytes", "link_sends",
+                    "link_stall_s", "raw_bytes")
+        prev = self._books
+        for key in monotone:
+            if key not in stats:
+                continue
+            now = float(stats[key])
+            if now < 0:
+                _fail(where, f"transport: {key} is negative ({now})")
+            before = prev.get(key)
+            if before is not None and now < before - 1e-9:
+                carry = (" — for_stages() dropped the books across "
+                         "reshard" if resharded else "")
+                _fail(where, f"transport: {key} went backward "
+                             f"{before} -> {now}{carry}")
+        d_wire = float(stats.get("wire_bytes", 0)) - prev.get(
+            "wire_bytes", 0.0)
+        d_sends = float(stats.get("link_sends", 0)) - prev.get(
+            "link_sends", 0.0)
+        if d_wire > 0 and d_sends <= 0:
+            _fail(where, f"transport: {d_wire:.0f} wire bytes booked "
+                         "with no send recorded (byte conservation)")
+        clock = getattr(transport, "clock", None)
+        if clock is not None and float(getattr(clock, "now", 0.0)) < 0:
+            _fail(where, "transport: virtual clock is negative")
+        audit = getattr(transport, "audit", None)
+        if audit is not None:
+            try:
+                audit()
+            except AssertionError as e:
+                _fail(where, f"transport: {e}")
+        self._books = {k: float(stats[k]) for k in monotone
+                       if k in stats}
+
+    def _audit_jits(self, where: str) -> None:
+        entries = getattr(self._engine.backend, "jit_entries", None)
+        if entries is None:
+            return
+        for name, fn in entries().items():
+            n = jit_cache_size(fn)
+            if n is not None and n > 1:
+                _fail(where, f"jit: {name} holds {n} compiled traces — "
+                             "it retraced mid-serve (shape leak, "
+                             "weak-type flip, or non-hashable static "
+                             "arg); one (shape, wire_dtype) config must "
+                             "compile exactly once")

@@ -134,6 +134,7 @@ class DoubleBufferOffloader:
             for c, axis in layers:
                 k = jax.lax.slice_in_dim(c["k_pages"], sl.start, sl.stop, axis=axis)
                 v = jax.lax.slice_in_dim(c["v_pages"], sl.start, sl.stop, axis=axis)
+                # repro-audit: allow(host-sync) — §4.2 host swap is synchronous by design today; async device→pinned-host DMA overlap is ROADMAP item 4
                 store.append({"k": np.asarray(k), "v": np.asarray(v)})
                 self.bytes_swapped += k.nbytes + v.nbytes
             self._host[out_mb] = store

@@ -45,6 +45,7 @@ def _shard_map(f, *, mesh, axis_names, in_specs, out_specs):
     check_vma) when present, else ``jax.experimental.shard_map`` with the
     complementary ``auto`` axis set (manual over ``axis_names`` only)."""
     if hasattr(jax, "shard_map"):
+        # repro-audit: allow(retrace-jit) — trace-time only: callers wrap the tick in one outer jax.jit, so this wrapper is built once per compile, never per tick
         return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
                              in_specs=in_specs, out_specs=out_specs,
                              check_vma=False)
@@ -282,6 +283,30 @@ def _ambient_mesh():
 # ---------------------------------------------------------------------------
 
 
+def _validate_tick_args(name: str, *, mesh, n_stages: int,
+                        checks: dict) -> None:
+    """Trace-time argument validation for the persistent tick functions.
+
+    They run under one outer ``jax.jit``, so a mis-shaped argument
+    otherwise surfaces ticks later as a cryptic shard_map/scan error —
+    or not at all, as a silent per-call retrace when a host integer
+    leaks into a shape.  Runs only at trace time (shapes are static),
+    so steady-state ticks pay nothing.  ``checks`` maps argument name
+    to ``(got_shape, want_shape)``."""
+    pod = dict(mesh.shape).get("pod")
+    if pod != n_stages:
+        raise ValueError(
+            f"{name}: mesh 'pod' axis has {pod} device(s) but "
+            f"n_stages={n_stages} — the pipe needs one stage per pod "
+            "device")
+    for arg, (got, want) in checks.items():
+        if tuple(got) != tuple(want):
+            raise ValueError(
+                f"{name}: {arg} has shape {tuple(got)}, want "
+                f"{tuple(want)} — the backend and the tick disagree on "
+                "the pipe geometry")
+
+
 def _epilogue(params, epi_scan_params, x, cfg, rt, *, mode, caches,
               positions):
     """Leftover periods + pattern tail + final norm (replicated over pods)."""
@@ -432,6 +457,15 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
     pps, leftover = split_layers(cfg, n_stages)
     n_scan = pps * n_stages
     cd = rt.compute_dtype
+    _validate_tick_args(
+        "pipeline_decode_tick", mesh=mesh, n_stages=n_stages, checks={
+            "act": (act.shape, (n_stages, mb_size, 1, cfg.d_model)),
+            "tokens": (tokens.shape, (mb_size,)),
+            "mb_assign": (mb_assign.shape, (n_stages,)),
+            "pos_stage": (pos_stage.shape, (n_stages, mb_size)),
+            "samp_keys": (samp_keys.shape, (mb_size, 2)),
+            "samp_steps": (samp_steps.shape, (mb_size,)),
+        })
 
     stage_params, epi_scan_params = split_scan_params(params, cfg, n_stages)
     stage_caches = [jax.tree.map(
@@ -594,6 +628,15 @@ def pipeline_prefill_chunk_tick(params, caches, act, tokens, offs_stage,
     plan = make_layer_plan(cfg.num_layers, cfg.block_pattern)
     cd = rt.compute_dtype
     R, C = tokens.shape
+    _validate_tick_args(
+        "pipeline_prefill_chunk_tick", mesh=mesh, n_stages=n_stages,
+        checks={
+            "act": (act.shape, (n_stages, R, C, cfg.d_model)),
+            "offs_stage": (offs_stage.shape, (n_stages, R)),
+            "valid_stage": (valid_stage.shape, (n_stages, R)),
+            "tables_stage": (tables_stage.shape[:2], (n_stages, R)),
+            "lasts": (lasts.shape, (R,)),
+        })
     # the fault seam: a dropped stage becomes a bubble stage — n_valid 0
     # masks every one of its cache writes through the chunk recurrences
     valid_stage = jnp.where(

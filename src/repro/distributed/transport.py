@@ -148,6 +148,11 @@ class Transport(abc.ABC):
         """Accounting snapshot for reports (empty on the no-op path)."""
         return {}
 
+    def audit(self) -> None:
+        """Strict-mode hook (``EngineConfig(strict=True)``): raise
+        ``AssertionError`` if the transport's internal books are
+        inconsistent.  The no-op paths keep no books to check."""
+
 
 class InProcessTransport(Transport):
     """Zero-cost links — the single-process shard_map behaviour.  Keeps
@@ -293,6 +298,27 @@ class SimulatedLinkTransport(Transport):
             "max_link_latency_s": max(l.latency_s for l in self.links),
         }
 
+    def audit(self) -> None:
+        books = {"virtual_time_s": self.clock.now,
+                 "wire_bytes": self.wire_bytes, "link_sends": self.sends,
+                 "link_stall_s": self.stall_s}
+        for k, v in books.items():
+            assert np.isfinite(v) and v >= 0, \
+                f"transport book {k}={v!r} is negative or non-finite"
+        assert self.sends == 0 or self.wire_bytes > 0, \
+            f"{self.sends} link send(s) accounted but zero wire bytes"
+        if self._done is not None and self._done.size:
+            assert np.isfinite(self._done).all() and \
+                (self._done >= 0).all(), \
+                f"per-stage timelines corrupt: {self._done!r}"
+            assert self.clock.now + 1e-9 >= float(self._done.max()), \
+                (f"virtual clock {self.clock.now} is behind a stage "
+                 f"timeline ({float(self._done.max())}) — advance_to was "
+                 "skipped on some tick")
+        for plane, arr in self._arrival.items():
+            assert np.isfinite(arr).all() and (arr >= 0).all(), \
+                f"{plane} arrival timeline corrupt: {arr!r}"
+
 
 class CompressedTransport(Transport):
     """Activation wire-byte pricing through the codecs of
@@ -373,6 +399,18 @@ class CompressedTransport(Transport):
         if wire:
             st["compression_ratio"] = self.raw_bytes / wire
         return st
+
+    def audit(self) -> None:
+        assert self.raw_bytes >= 0, \
+            f"raw_bytes={self.raw_bytes} went negative"
+        for raw, wire in self._wire_cache.items():
+            assert wire > 0, f"codec priced {raw}B payload at {wire}B"
+            if self.method == "int8" and raw > 4 * self.elem_bytes * \
+                    max(1, self.row_elems):
+                assert wire < raw, \
+                    (f"int8 codec inflated a {raw}B payload to {wire}B — "
+                     "elem_bytes/row_elems are mis-tuned for the wire")
+        self.inner.audit()
 
 
 # ---------------------------------------------------------------------------

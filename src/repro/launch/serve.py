@@ -186,6 +186,11 @@ def main() -> None:
                     help="use the full config (needs real accelerators)")
     ap.add_argument("--latency", type=float, default=0.064,
                     help="assumed one-way link latency (schedule + --plan)")
+    ap.add_argument("--strict", action="store_true",
+                    help="enable the runtime invariant auditor "
+                         "(repro.analysis.invariants): page/FSM/transport/"
+                         "jit-cache audits after every step, failing at "
+                         "the tick that corrupted state")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -317,7 +322,7 @@ def main() -> None:
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
             prefill_mode=args.prefill_mode, fault_plan=fault_plan,
-            wire_dtype=wire_dtype)
+            wire_dtype=wire_dtype, strict=args.strict or None)
     else:
         # reshard carries the caches over; offloaded global pools would
         # need host-store migration, so drills run with all-local pools
@@ -333,7 +338,8 @@ def main() -> None:
                                prefill_mode=args.prefill_mode,
                                fault_plan=fault_plan, transport=transport,
                                schedule=args.schedule,
-                               wire_dtype=wire_dtype)
+                               wire_dtype=wire_dtype,
+                               strict=args.strict or None)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
     engine = llm.engine

@@ -89,6 +89,13 @@ class EngineConfig:
     # bytes equal the packed payload.  (top-k has no in-jit path: it
     # remains accounting-only via CompressedTransport(method="topk").)
     wire_dtype: str = "fp32"
+    # runtime invariant auditor (repro.analysis.invariants): audits page
+    # accounting, the Status FSM, transport books, and jit cache sizes
+    # after every submit/step/reshard, raising InvariantViolation at the
+    # tick that corrupted state.  None = follow the REPRO_STRICT
+    # environment variable (the test suite defaults it on); True/False
+    # force it either way.  Host-side bookkeeping only — no device syncs.
+    strict: Optional[bool] = None
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -158,7 +165,8 @@ class EngineConfig:
              deployment: Optional[object] = None,
              transport: Optional[object] = None,
              schedule: str = "circular",
-             wire_dtype: str = "fp32") -> "EngineConfig":
+             wire_dtype: str = "fp32",
+             strict: Optional[bool] = None) -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
         the planned counterpart of hand-set knobs (subsumes
@@ -197,7 +205,7 @@ class EngineConfig:
                    max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                    prefill_mode=prefill_mode, fault_plan=fault_plan,
                    transport=transport, schedule=schedule,
-                   wire_dtype=wire_dtype,
+                   wire_dtype=wire_dtype, strict=strict,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, link_latencies=link_latencies,
@@ -217,7 +225,8 @@ class EngineConfig:
                 max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
                 prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
                 transport=self.transport, schedule=self.schedule,
-                wire_dtype=self.wire_dtype, **self.plan_args)
+                wire_dtype=self.wire_dtype, strict=self.strict,
+                **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
         if self.offload and pool.n_global_pages:
@@ -232,7 +241,7 @@ class EngineConfig:
             max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
             prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
             transport=self.transport, schedule=self.schedule,
-            wire_dtype=self.wire_dtype)
+            wire_dtype=self.wire_dtype, strict=self.strict)
 
 
 @dataclass

@@ -5,6 +5,13 @@ devices (they spawn fresh interpreters)."""
 import os
 import sys
 
+# strict mode on by default under test: the runtime invariant auditor
+# (repro.analysis.invariants) audits page accounting, the Status FSM,
+# transport books, and jit cache sizes after every engine step.  Set
+# before any repro import so subprocess tests inherit it too; export
+# REPRO_STRICT=0 to profile without the audit overhead.
+os.environ.setdefault("REPRO_STRICT", "1")
+
 try:                                    # gate, don't require: the container
     import hypothesis  # noqa: F401     # may not ship hypothesis
 except ImportError:

@@ -1,0 +1,13 @@
+"""Lint fixture: a device→host materialisation inside a serve tick
+loop.  Never imported — the auditor parses it (pure AST).  The test
+configures ``tick_loop`` as a hot root; exactly one ``host-sync``
+violation must fire at the marked line."""
+
+import jax
+import jax.numpy as jnp
+
+
+def tick_loop(params, tokens):
+    logits = jnp.ones((tokens.shape[0], 8))
+    probs = jax.device_get(logits)  # LINT-EXPECT: host-sync
+    return probs

@@ -1,0 +1,20 @@
+"""Lint fixture: PRNG-hygiene breaches.  Never imported — parsed only.
+
+``sample_token`` keys a sampling call with a single-level ``fold_in``
+chain (the serving discipline is two folds: request_id AND token_idx)
+— exactly one ``prng-fold-drop``.  ``noisy_pair`` feeds one key to two
+consumers without re-binding — exactly one ``prng-reuse``."""
+
+import jax
+
+
+def sample_token(logits_row, seed, request_id):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), request_id)
+    return jax.random.categorical(key, logits_row)  # LINT-EXPECT: prng-fold-drop
+
+
+def noisy_pair(shape):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, shape)
+    b = jax.random.normal(key, shape)  # LINT-EXPECT: prng-reuse
+    return a, b

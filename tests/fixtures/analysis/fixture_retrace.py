@@ -1,0 +1,26 @@
+"""Lint fixture: retrace hazards.  Never imported — parsed only.
+
+``hot_step`` builds a fresh ``jax.jit`` inside a (configured) hot root
+— ``retrace-jit``.  ``build_tick`` jits a ``functools.partial`` with a
+mutable-literal kwarg — ``retrace-nonhashable`` (fires everywhere, no
+reachability needed).  ``tick_fn`` (configured as a traced tick fn)
+branches Python-side on a traced argument — ``retrace-branch``."""
+
+import functools
+
+import jax
+
+
+def hot_step(params, tokens):
+    step = jax.jit(lambda p, t: p)  # LINT-EXPECT: retrace-jit
+    return step(params, tokens)
+
+
+def build_tick(fn):
+    return jax.jit(functools.partial(fn, scales=[1.0, 0.5]))  # LINT-EXPECT: retrace-nonhashable
+
+
+def tick_fn(params, acts, gate):
+    if gate:  # LINT-EXPECT: retrace-branch
+        acts = acts + 1
+    return acts

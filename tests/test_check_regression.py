@@ -1,0 +1,88 @@
+"""Exit-code contract of ``benchmarks/check_regression.py``: 0 clean,
+1 regression, 2 a gated workload stopped being measured (downgradable
+with ``--allow-missing``), 0 when the baseline *file* is absent."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[1] / "benchmarks" / \
+    "check_regression.py"
+
+
+def _rows(decode=100.0, prefill=200.0, vtps=50.0):
+    """One comparable row per gated workload."""
+    return {"rows": [
+        {"bench": "engine_backend", "policy": "local",
+         "decode_tps": decode},
+        {"bench": "engine_prefill", "policy": "local",
+         "prefill_tps": prefill},
+        {"bench": "latency_curve", "policy": "circular", "latency": 0.05,
+         "bandwidth": 0.0, "vtps": vtps},
+    ]}
+
+
+def _drop_bench(data, bench):
+    data["rows"] = [r for r in data["rows"] if r["bench"] != bench]
+    return data
+
+
+def _run(tmp_path, base, new, *extra):
+    b, n = tmp_path / "base.json", tmp_path / "new.json"
+    b.write_text(json.dumps(base))
+    n.write_text(json.dumps(new))
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), "--baseline", str(b),
+         "--new", str(n), *extra],
+        capture_output=True, text=True, timeout=60)
+
+
+def test_clean_run_exits_zero(tmp_path):
+    r = _run(tmp_path, _rows(), _rows())
+    assert r.returncode == 0, r.stdout
+    assert "REGRESSION" not in r.stdout
+
+
+def test_regression_exits_one(tmp_path):
+    r = _run(tmp_path, _rows(), _rows(decode=50.0))   # -50% > 30% gate
+    assert r.returncode == 1, r.stdout
+    assert "REGRESSION" in r.stdout
+
+
+def test_within_threshold_is_ok(tmp_path):
+    r = _run(tmp_path, _rows(), _rows(decode=80.0))   # -20% < 30% gate
+    assert r.returncode == 0, r.stdout
+
+
+def test_missing_workload_exits_two(tmp_path):
+    new = _drop_bench(_rows(), "latency_curve")
+    r = _run(tmp_path, _rows(), new)
+    assert r.returncode == 2, r.stdout
+    assert "stopped measuring" in r.stdout
+
+
+def test_allow_missing_downgrades_two_to_zero(tmp_path):
+    new = _drop_bench(_rows(), "latency_curve")
+    r = _run(tmp_path, _rows(), new, "--allow-missing")
+    assert r.returncode == 0, r.stdout
+    assert "--allow-missing" in r.stdout
+
+
+def test_regression_outranks_missing(tmp_path):
+    # both a regression and a dropped workload: 1 wins (CI must fail red,
+    # not "needs attention")
+    new = _drop_bench(_rows(decode=50.0), "latency_curve")
+    r = _run(tmp_path, _rows(), new)
+    assert r.returncode == 1, r.stdout
+
+
+def test_absent_baseline_file_exits_zero(tmp_path):
+    n = tmp_path / "new.json"
+    n.write_text(json.dumps(_rows()))
+    r = subprocess.run(
+        [sys.executable, str(SCRIPT), "--baseline",
+         str(tmp_path / "nope.json"), "--new", str(n)],
+        capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stdout
+    assert "no usable baseline" in r.stdout
