@@ -115,6 +115,102 @@ def run(quick: bool = False):
         if variant not in ("", "opt"):
             continue                      # hillclimb singles live in SPerf
         rows.extend(_run_table(by_variant[variant], label))
+    _kernel_roofline(rows, quick)
+    return rows
+
+
+def _kernel_roofline(rows, quick: bool):
+    """Measured per-kernel achieved-vs-peak fractions (PR 8 satellite).
+
+    Unlike the dry-run table above (analytic v5e numbers from compiled
+    HLO), these rows *time* the attention implementation that actually
+    serves on this backend — the Pallas kernels on TPU, the XLA oracles
+    on CPU (interpret-mode Pallas timings would measure the Python
+    evaluator, not the machine).  Peaks are calibrated in-process on the
+    same host: a large f32 matmul for FLOP/s, a large read+write map for
+    bytes/s.  Decode attention is scored against the bandwidth peak (its
+    arithmetic intensity is ~1 FLOP/byte), prefill flash attention
+    against the FLOP peak.  Rows land in BENCH_throughput.json and
+    check_regression.py surfaces them as informational (non-gated)
+    cells."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.paged_attention import paged_decode_attention as _pl
+
+    def best_s(fn, *args, iters=None):
+        iters = iters or (5 if quick else 10)
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # -- host peak calibration (same process, same thread pool) -----------
+    n = 768 if quick else 1024
+    a = jnp.zeros((n, n), jnp.float32)
+    peak_flops = 2.0 * n ** 3 / best_s(jax.jit(jnp.dot), a, a)
+    big = jnp.zeros((32 * 1024 * 1024,), jnp.float32)   # 128 MB stream
+    t_bw = best_s(jax.jit(lambda x: x + 1.0), big)
+    peak_bw = 2.0 * big.nbytes / t_bw                   # read + write
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.RandomState(0)
+    print("\n== Kernel roofline (measured on this host; "
+          f"{'Pallas' if on_tpu else 'XLA oracle'} path) ==")
+    print(f"   calibrated peaks: {peak_flops / 1e9:.1f} GFLOP/s, "
+          f"{peak_bw / 1e9:.1f} GB/s")
+
+    # -- paged decode attention: bandwidth-bound (reads the whole KV) -----
+    b, hq, hk, dh = 8, 8, 2, 128
+    page, maxp = 16, 8 if quick else 16
+    npool = 1 + b * maxp
+    q = jnp.asarray(rng.randn(b, hq, dh), jnp.float32)
+    kp = jnp.asarray(rng.randn(npool, page, hk, dh), jnp.float32)
+    vp = jnp.asarray(rng.randn(npool, page, hk, dh), jnp.float32)
+    pt = jnp.arange(1, 1 + b * maxp, dtype=jnp.int32).reshape(b, maxp)
+    lens = jnp.full((b,), page * maxp, jnp.int32)
+    if on_tpu:
+        f = jax.jit(lambda *xs: _pl(*xs))
+    else:
+        f = jax.jit(lambda *xs: ref.paged_decode_attention_ref(*xs))
+    t = best_s(f, q, kp, vp, pt, lens)
+    kv_bytes = 2 * b * page * maxp * hk * dh * 4        # k+v, f32
+    bw = kv_bytes / t
+    rows.append({"bench": "kernel_roofline", "kernel": "paged_decode",
+                 "t_us": t * 1e6, "achieved": bw / 1e9,
+                 "peak": peak_bw / 1e9, "unit": "GB/s",
+                 "frac": bw / peak_bw})
+    print(f"   paged_decode   {t * 1e6:9.1f} us  {bw / 1e9:7.1f} GB/s "
+          f"({bw / peak_bw:6.1%} of stream peak)")
+
+    # -- flash prefill attention: compute-bound (causal QK^T + PV) --------
+    s = 256 if quick else 512
+    bq = 2
+    qf = jnp.asarray(rng.randn(bq, s, hq, dh), jnp.float32)
+    kf = jnp.asarray(rng.randn(bq, s, hq, dh), jnp.float32)
+    vf = jnp.asarray(rng.randn(bq, s, hq, dh), jnp.float32)
+    if on_tpu:
+        g = jax.jit(lambda *xs: flash_attention_pallas(*xs, causal=True))
+    else:
+        g = jax.jit(lambda *xs: ref.flash_attention_ref(*xs, causal=True))
+    t = best_s(g, qf, kf, vf)
+    flops = 2.0 * bq * hq * s * s * dh                  # 4·B·H·S²·D / 2
+    fl = flops / t
+    rows.append({"bench": "kernel_roofline", "kernel": "flash_prefill",
+                 "t_us": t * 1e6, "achieved": fl / 1e9,
+                 "peak": peak_flops / 1e9, "unit": "GFLOP/s",
+                 "frac": fl / peak_flops})
+    print(f"   flash_prefill  {t * 1e6:9.1f} us  {fl / 1e9:7.1f} GFLOP/s "
+          f"({fl / peak_flops:6.1%} of matmul peak)")
     return rows
 
 

@@ -262,6 +262,56 @@ def _latency_curve(rows, quick: bool):
     _bandwidth_columns(rows, quick)
 
 
+def _sampling_epilogue(rows, quick: bool):
+    """Fused sampling-epilogue microbench: the top-k partition fast path
+    vs the full-vocab sort, both jitted, bit-identical by construction
+    (asserted here on every run).  The ratio is gated (>= 1.15x at B<=8)
+    by benchmarks/check_regression.py."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving.sampler import sample_batched
+
+    B, V = 8, 32768
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    logits = jax.random.normal(ks[0], (B, V), jnp.float32)
+    keys = jax.random.key_data(
+        jax.random.split(ks[1], B)).astype(jnp.uint32)
+    temp = jnp.full((B,), 0.8, jnp.float32)
+    top_k = jnp.full((B,), 40, jnp.int32)
+    top_p = jnp.full((B,), 0.95, jnp.float32)
+
+    f_fast = jax.jit(lambda l, k: sample_batched(l, k, temp, top_k, top_p,
+                                                 fast_path=True))
+    f_sort = jax.jit(lambda l, k: sample_batched(l, k, temp, top_k, top_p,
+                                                 fast_path=False))
+    a = jax.block_until_ready(f_fast(logits, keys))      # compile
+    b = jax.block_until_ready(f_sort(logits, keys))
+    assert np.array_equal(np.asarray(a), np.asarray(b)), \
+        "fast path is not bit-identical to the sort path"
+
+    iters = 100 if quick else 400
+    out = {}
+    for name, fn in (("fast", f_fast), ("sorted", f_sort)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            r = fn(logits, keys)
+        jax.block_until_ready(r)
+        out[name] = (time.perf_counter() - t0) / iters
+    ratio = out["sorted"] / out["fast"]
+    print(f"\n-- sampling epilogue (B={B}, V={V}, top-k on) --\n"
+          f"  fast   {out['fast'] * 1e6:8.1f} us/call\n"
+          f"  sorted {out['sorted'] * 1e6:8.1f} us/call   "
+          f"({ratio:.2f}x speedup)")
+    rows.append({"bench": "sampling_fast", "policy": "epilogue",
+                 "batch": B, "vocab": V,
+                 "t_fast_us": out["fast"] * 1e6,
+                 "t_sorted_us": out["sorted"] * 1e6, "ratio": ratio})
+
+
 def run(quick: bool = False, workload: str = "all"):
     """``workload``: "all" (both engine workloads + Table 4), "decode" /
     "prefill_heavy" (one measured engine workload, no simulator pass),
@@ -272,6 +322,7 @@ def run(quick: bool = False, workload: str = "all"):
         _latency_curve(rows, quick)
         return rows
     _engine_backends(rows, quick, workload)
+    _sampling_epilogue(rows, quick)
     if workload != "all":
         return rows
     _latency_curve(rows, quick)         # virtual clock — CPU-cheap

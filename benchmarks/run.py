@@ -26,16 +26,21 @@ def main() -> None:
                          "snapshot unless asked to)")
     ap.add_argument("--workload", default="all",
                     choices=["all", "decode", "prefill_heavy",
-                             "latency_curve"],
+                             "latency_curve", "roofline"],
                     help="throughput bench workload: 'decode' / "
                          "'prefill_heavy' run just that measured engine "
                          "workload (implies --only throughput, no "
                          "simulator pass); 'latency_curve' sweeps "
                          "simulated link latency on the real engine "
-                         "(virtual clock, circular vs round-flush)")
+                         "(virtual clock, circular vs round-flush); "
+                         "'roofline' runs just the roofline report "
+                         "incl. the measured per-kernel "
+                         "achieved-vs-peak rows (implies --only "
+                         "roofline)")
     args = ap.parse_args()
     if args.workload != "all" and args.only is None:
-        args.only = "throughput"
+        args.only = "roofline" if args.workload == "roofline" \
+            else "throughput"
     if args.json is None:
         args.json = "" if args.only else "BENCH_throughput.json"
 
@@ -80,7 +85,7 @@ def main() -> None:
     for r in rows:
         bench = r.pop("bench")
         key = str(r.pop("name", "") or r.pop("arch", "") or r.pop(
-            "policy", "") or "")
+            "policy", "") or r.pop("kernel", "") or "")
         shape = str(r.pop("shape", "") or r.pop("latency", "") or "")
         for k, v in r.items():
             if isinstance(v, (int, float)) and v is not None:

@@ -27,6 +27,12 @@ Checked invariants:
   ``Transport`` crossing *including reshard* (``for_stages`` must carry
   the books — a reset-to-zero after a rebuild is a conservation bug),
   and bytes only move with a send;
+* **offload double-buffer parity** — each offloader's resident map binds
+  global pool parity ``p`` only to microbatches with ``mb % 2 == p``, the
+  host store never keys a currently-resident microbatch (its content
+  would be stale the moment the pool mutates), and the swap counters are
+  monotone non-decreasing for the offloader's lifetime (reset only when
+  reshard rebuilds the backend with fresh offloaders);
 * **jit cache sizes** — every serve-loop jit the backend exposes via
   ``jit_entries()`` (``_tick_jit`` / ``_pf_tick_jit`` / ``_decode_jit``
   / ``_chunk_jit`` / the per-length prefill jits) has compiled at most
@@ -81,6 +87,7 @@ class EngineAuditor:
         # the sequences we still track
         self._last_status: Dict[int, Tuple[object, int]] = {}
         self._books: Dict[str, float] = {}
+        self._off_books: Dict[str, Tuple[int, int]] = {}
         self.checks = 0
 
     # ---- hooks the engine calls ------------------------------------
@@ -101,6 +108,7 @@ class EngineAuditor:
         self._audit_pages(where)
         self._audit_fsm(where)
         self._audit_transport(where, resharded=resharded)
+        self._audit_offload(where, resharded=resharded)
         self._audit_jits(where)
 
     def _audit_pages(self, where: str) -> None:
@@ -248,6 +256,53 @@ class EngineAuditor:
                 _fail(where, f"transport: {e}")
         self._books = {k: float(stats[k]) for k in monotone
                        if k in stats}
+
+    def _audit_offload(self, where: str, *, resharded: bool) -> None:
+        backend = self._engine.backend
+        offs: List[Tuple[str, object]] = []
+        local = getattr(backend, "offloader", None)
+        if local is not None:
+            offs.append(("offloader", local))
+        for i, o in enumerate(getattr(backend, "_stage_off", ()) or ()):
+            offs.append((f"_stage_off[{i}]", o))
+        epi = getattr(backend, "_epi_off", None)
+        if epi is not None:
+            offs.append(("_epi_off", epi))
+        if resharded:
+            # reshard rebuilds the backend with fresh offloaders — their
+            # counters legitimately restart from zero
+            self._off_books = {}
+        for name, off in offs:
+            resident = getattr(off, "resident", None)
+            if not isinstance(resident, dict):
+                continue
+            held = set()
+            for parity, mb in resident.items():
+                if mb is None:
+                    continue
+                held.add(mb)
+                if mb % 2 != parity:
+                    _fail(where, f"offload: {name} binds microbatch {mb} "
+                                 f"to global pool parity {parity} — the "
+                                 "double-buffer schedule requires "
+                                 "mb % 2 == parity")
+            stale = held & set(getattr(off, "_host", {}))
+            if stale:
+                _fail(where, f"offload: {name} keeps host-store copies "
+                             f"for resident microbatch(es) {sorted(stale)}"
+                             " — those bytes go stale the moment the "
+                             "pool mutates (swap-in must pop)")
+            swaps = int(getattr(off, "swap_count", 0))
+            moved = int(getattr(off, "bytes_swapped", 0))
+            if swaps < 0 or moved < 0:
+                _fail(where, f"offload: {name} swap counters are "
+                             f"negative (swaps={swaps}, bytes={moved})")
+            prev = self._off_books.get(name)
+            if prev is not None and (swaps < prev[0] or moved < prev[1]):
+                _fail(where, f"offload: {name} counters went backward "
+                             f"(swaps {prev[0]} -> {swaps}, bytes "
+                             f"{prev[1]} -> {moved})")
+            self._off_books[name] = (swaps, moved)
 
     def _audit_jits(self, where: str) -> None:
         entries = getattr(self._engine.backend, "jit_entries", None)

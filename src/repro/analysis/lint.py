@@ -11,6 +11,15 @@ applied to *device-tracked* values — names bound from jit entry points
 (any ``*jit*`` attribute call), ``jnp.*``/``jax.*`` producers, or the
 sampler helpers.  One accidental sync per tick is a WAN-scale stall.
 
+**offload-sync** — blocking host materialisations inside the KV
+offloader's *engaged window* (``DoubleBufferOffloader.ensure_resident``
+by default; ``offload_windows`` in config).  The double-buffer schedule
+only hides swap cost if the swap-out is an enqueued async copy — a
+``np.asarray`` / ``jax.device_get`` / ``block_until_ready`` there
+serialises the D2H behind the tick and re-opens the very stall the
+offloader exists to hide.  The deliberate sync fallback
+(``async_swap=False``) carries a reasoned suppression.
+
 **retrace hazards** —
   * ``retrace-jit``: ``jax.jit`` / ``shard_map`` constructed inside a
     hot-path function (recompiles or re-caches per call);
@@ -81,10 +90,16 @@ DEFAULT_TRACED_FNS = [
 # function parameters that carry device arrays into hot-path helpers
 # (pure AST cannot see types; the serve seam passes logits rows around)
 DEFAULT_DEVICE_PARAMS = ["logits", "logits_row"]
+# the offloader's engaged window: functions that run between ticks and
+# must only *enqueue* copies, never block on them
+DEFAULT_OFFLOAD_WINDOWS = [
+    "core.offload:DoubleBufferOffloader.ensure_resident",
+    "core.offload:DoubleBufferOffloader._stage_out",
+]
 
-RULES = ("host-sync", "retrace-jit", "retrace-branch", "retrace-nonhashable",
-         "prng-reuse", "prng-fold-drop", "bad-suppression",
-         "unused-suppression")
+RULES = ("host-sync", "offload-sync", "retrace-jit", "retrace-branch",
+         "retrace-nonhashable", "prng-reuse", "prng-fold-drop",
+         "bad-suppression", "unused-suppression")
 
 # calls that force a device→host sync wherever they appear in the hot set
 ALWAYS_SYNC = {"jax.device_get", "jax.block_until_ready"}
@@ -121,6 +136,8 @@ class AuditConfig:
                                   list(DEFAULT_TRACED_FNS))
     device_params: List[str] = field(default_factory=lambda:
                                      list(DEFAULT_DEVICE_PARAMS))
+    offload_windows: List[str] = field(default_factory=lambda:
+                                       list(DEFAULT_OFFLOAD_WINDOWS))
 
 
 def _parse_toml_section(text: str, section: str) -> Dict[str, List[str]]:
@@ -172,6 +189,8 @@ def load_config(start: Path) -> AuditConfig:
                 cfg.traced_fns = sect["traced_fns"]
             if sect.get("device_params"):
                 cfg.device_params = sect["device_params"]
+            if sect.get("offload_windows"):
+                cfg.offload_windows = sect["offload_windows"]
             break
     return cfg
 
@@ -498,6 +517,43 @@ def _host_sync_pass(files: Sequence[FileIndex], cfg: AuditConfig,
 
 
 # ---------------------------------------------------------------------------
+# Pass 1b: offload-sync detector
+# ---------------------------------------------------------------------------
+
+
+def _offload_sync_pass(files: Sequence[FileIndex],
+                       cfg: AuditConfig) -> List[Violation]:
+    """Any blocking host materialisation inside the offloader's engaged
+    window.  Unlike ``host-sync`` this does not gate on a device-tracked
+    dataflow: the window functions exist solely to move pool slices, so
+    *every* ``np.asarray``/``device_get``/``block_until_ready`` there is
+    a copy that should have been an enqueued async one."""
+    out: List[Violation] = []
+    stall = ("serialises the D2H swap behind the tick — store the "
+             "enqueued jax copy (async_swap) so the transfer hides "
+             "under the next tick's compute")
+    for fi in files:
+        for fn in fi.funcs:
+            if not any(_match_spec(fn, w) for w in cfg.offload_windows):
+                continue
+            for name, call in _calls_of(fn):
+                bare = name.rsplit(".", 1)[-1]
+                tag = None
+                if name in ALWAYS_SYNC:
+                    tag = f"`{name}` in the offload window {stall}"
+                elif bare in SYNC_METHODS and "." in name:
+                    tag = f"`.{bare}()` in the offload window {stall}"
+                elif name.endswith(".tolist"):
+                    tag = f"`.tolist()` in the offload window {stall}"
+                elif name in HOST_NP:
+                    tag = f"`{name}` in the offload window {stall}"
+                if tag:
+                    out.append(Violation("offload-sync", fi.path,
+                                         call.lineno, f"{fn.qual}: {tag}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Pass 2: retrace hazards
 # ---------------------------------------------------------------------------
 
@@ -722,6 +778,7 @@ def run_lint(paths: Sequence[Path], config: Optional[AuditConfig] = None,
     files, violations = index_paths([Path(p) for p in paths])
     reachable = reachable_functions(files, cfg.hot_roots)
     violations += _host_sync_pass(files, cfg, reachable)
+    violations += _offload_sync_pass(files, cfg)
     violations += _retrace_pass(files, cfg, reachable)
     violations += _prng_pass(files)
     if rules:

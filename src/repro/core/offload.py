@@ -11,16 +11,25 @@ scheduling (§4.3) add in-flight microbatches without starving batch size.
 Hardware adaptation: on GPU the swap path is PCIe; on TPU v5e it is the
 host-DMA path (HBM ↔ host DRAM).  The :class:`DoubleBufferOffloader` below
 implements the *schedule* (pool parity, swap-out of the departing microbatch
-overlapped with swap-in of the arriving one); on TPU the copies lower to
-async device↔pinned_host DMAs, on CPU they are explicit numpy round-trips —
-the bookkeeping and the schedule are identical, which is what the tests pin.
+overlapped with swap-in of the arriving one).  In the default async mode
+(``async_swap=True``) the swap-out stores the *enqueued* jax copy — a
+lazily-materialised device array (routed to ``pinned_host`` when
+:func:`place_host_store` armed a host sharding on TPU) — so the D2H of
+buffer A overlaps the next tick's jit computing into buffer B; nothing
+blocks until :meth:`DoubleBufferOffloader.settle` (drain/reshard) or the
+value is consumed by a swap-in.  ``async_swap=False`` keeps the old
+blocking numpy round-trip for debugging and bit-exactness A/B runs — the
+bookkeeping and the schedule are identical either way, which is what the
+tests pin.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -93,6 +102,28 @@ class OffloadPlan:
                                                   self.n_microbatches)
 
 
+# jitted so the snapshot is one fused copy per buffer; static bounds:
+# one compile per (pool shape, parity) — a handful total
+@functools.partial(jax.jit, static_argnames=("start", "stop", "axis"))
+def _snapshot_slice(pages, start: int, stop: int, axis: int):
+    return jax.lax.slice_in_dim(pages, start, stop, axis=axis)
+
+
+# one worker serialises stage-outs in submission order (the double-buffer
+# schedule needs no more concurrency: at most one departing microbatch per
+# parity is in flight); shared across offloaders — copies are bandwidth-
+# bound, more workers would just contend for the same memory bus
+_COPY_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _copy_pool() -> ThreadPoolExecutor:
+    global _COPY_POOL
+    if _COPY_POOL is None:
+        _COPY_POOL = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="kv-offload")
+    return _COPY_POOL
+
+
 class DoubleBufferOffloader:
     """Functional double-buffer swapper over the engine's cache pytree.
 
@@ -102,13 +133,27 @@ class DoubleBufferOffloader:
     overlap: with pool ``G_p`` feeding compute for microbatch ``m``, pool
     ``G_{1−p}`` is being refilled for ``m+1`` — on TPU both directions run
     concurrently on the full-duplex host-DMA path.
+
+    ``async_swap=True`` (default): swap-out stores a *future* of the
+    snapshot instead of performing it inline — jax arrays are immutable,
+    so the slice taken on the copy worker is a correct snapshot of the
+    pool at swap-out time while the engaged window only pays the submit.
+    The future resolves at the matching swap-in (by which point the copy
+    has long landed) or at :meth:`settle`.  Invariants the strict-mode
+    auditor pins: ``resident[p]`` is ``None`` or has parity ``p``, the
+    host store never keys a currently-resident microbatch, and the swap
+    counters are monotone for the offloader's lifetime.
     """
 
-    def __init__(self, pool: PoolConfig, num_microbatches: int):
+    def __init__(self, pool: PoolConfig, num_microbatches: int,
+                 async_swap: bool = True):
         self.pool = pool
         self.num_microbatches = num_microbatches
+        self.async_swap = async_swap
         self.resident: Dict[int, Optional[int]] = {0: None, 1: None}
-        self._host: Dict[int, List[dict]] = {}
+        # mb -> per-layer {"k","v"} store, or a Future of it (async mode)
+        self._host: Dict[int, Union[List[dict], Future]] = {}
+        self._host_sharding = None        # armed by place_host_store (TPU)
         self.swap_count = 0
         self.bytes_swapped = 0
 
@@ -130,16 +175,11 @@ class DoubleBufferOffloader:
         sl = global_slice(self.pool, parity)
         layers = list(self._paged_layers(caches))
         if out_mb is not None:
-            store = []
-            for c, axis in layers:
-                k = jax.lax.slice_in_dim(c["k_pages"], sl.start, sl.stop, axis=axis)
-                v = jax.lax.slice_in_dim(c["v_pages"], sl.start, sl.stop, axis=axis)
-                # repro-audit: allow(host-sync) — §4.2 host swap is synchronous by design today; async device→pinned-host DMA overlap is ROADMAP item 4
-                store.append({"k": np.asarray(k), "v": np.asarray(v)})
-                self.bytes_swapped += k.nbytes + v.nbytes
-            self._host[out_mb] = store
+            self._host[out_mb] = self._dispatch_stage_out(layers, sl)
 
-        incoming = self._host.get(mb)
+        incoming = self._host.pop(mb, None)
+        if isinstance(incoming, Future):
+            incoming = incoming.result()
         if incoming is None and out_mb is not None:
             # first touch for this microbatch while the pool holds another
             # one's content: zero-fill (hygiene — stale KV is masked by
@@ -173,6 +213,51 @@ class DoubleBufferOffloader:
         self.swap_count += 1
         return out
 
+    def _dispatch_stage_out(self, layers, sl) -> Union[List[dict], Future]:
+        """Swap-out dispatch: async mode hands the snapshot to the copy
+        worker and returns the in-flight :class:`Future` (the tick loop
+        never blocks on it — swap-in or :meth:`settle` resolves it);
+        sync mode pays the copy here."""
+        if self.async_swap:
+            return _copy_pool().submit(self._stage_out, layers, sl)
+        return self._stage_out(layers, sl)
+
+    def _stage_out(self, layers, sl) -> List[dict]:
+        """Snapshot the departing microbatch's global slices into the
+        host store.  This is the D2H half of the swap — the part the
+        async mode turns from a blocking copy into an enqueued one."""
+        store = []
+        for c, axis in layers:
+            k = _snapshot_slice(c["k_pages"], sl.start, sl.stop, axis)
+            v = _snapshot_slice(c["v_pages"], sl.start, sl.stop, axis)
+            if self.async_swap:
+                if self._host_sharding is not None:
+                    # TPU: enqueue the D2H DMA toward pinned_host now;
+                    # it lands while the next tick jit runs
+                    k = jax.device_put(k, self._host_sharding)
+                    v = jax.device_put(v, self._host_sharding)
+                store.append({"k": k, "v": v})
+            else:
+                # repro-audit: allow(host-sync, offload-sync) — async_swap=False opt-out: the blocking numpy round-trip, kept for debugging and A/B bit-exactness runs
+                store.append({"k": np.asarray(k), "v": np.asarray(v)})
+            self.bytes_swapped += k.nbytes + v.nbytes
+        return store
+
+    def settle(self) -> "DoubleBufferOffloader":
+        """Block until every in-flight host-store copy has landed (and
+        replace resolved futures with their stores).  This is the
+        *outside-the-engaged-window* barrier (drain / reshard /
+        shutdown) — the tick loop itself never calls it, so the async
+        copies stay overlapped with compute."""
+        for mb, layers in list(self._host.items()):
+            if isinstance(layers, Future):
+                self._host[mb] = layers = layers.result()
+            for layer in layers:
+                for arr in layer.values():
+                    if isinstance(arr, jax.Array):
+                        jax.block_until_ready(arr)
+        return self
+
 
 # ---------------------------------------------------------------------------
 # TPU memory-kind integration (backend-gated, see DESIGN.md §3)
@@ -198,12 +283,15 @@ def pool_shardings(mesh, spec, *, host: bool):
 
 
 def place_host_store(offloader: "DoubleBufferOffloader", mesh, spec):
-    """Move the offloader's host store to pinned host buffers on TPU: the
-    swap copies then lower to async DMA instead of numpy round-trips.  On
-    CPU this is a no-op (the numpy store *is* host memory)."""
+    """Move the offloader's host store to pinned host buffers on TPU and
+    arm the sharding so future async swap-outs enqueue device→pinned_host
+    DMAs directly.  On CPU this is a no-op (the numpy / jax store *is*
+    host memory)."""
     if not host_memory_available():
         return offloader
     sh = pool_shardings(mesh, spec, host=True)
+    offloader._host_sharding = sh
+    offloader.settle()                    # resolve in-flight futures first
     offloader._host = {
         mb: [{k: jax.device_put(jnp.asarray(v), sh) for k, v in layer.items()}
              for layer in layers]

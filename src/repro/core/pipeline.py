@@ -419,7 +419,8 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
                          samp_keys, samp_steps, samp_temp, samp_top_k,
                          samp_top_p, drop_stage, *, cfg: ModelConfig,
                          rt: Runtime, n_stages: int, mb_size: int, mesh,
-                         wire_dtype: str = "fp32"):
+                         wire_dtype: str = "fp32",
+                         sample_fast_path: bool = True):
     """Advance the persistent pipeline by one tick.
 
     caches:    engine-format paged caches ({"scan": [...], "tail": [...]}).
@@ -564,7 +565,8 @@ def pipeline_decode_tick(params, caches, act, tokens, mb_assign, pos_stage,
         positions=p1)
     logits = embed_lib.unembed(params["embed"], xf[:, 0], cfg)
     toks = sample_batched(logits, fold_in_steps(samp_keys, samp_steps),
-                          samp_temp, samp_top_k, samp_top_p)
+                          samp_temp, samp_top_k, samp_top_p,
+                          fast_path=sample_fast_path)
     lps = token_logprobs(logits, toks)
 
     new_epi_view = {"scan": new_epi_scan or [], "tail": new_tail}

@@ -27,7 +27,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, ml_ref, *,
                   q_blk: int, kv_blk: int, n_kv: int, g: int, causal: bool,
                   window: int, sq_real: int, skv_real: int):
     qi = pl.program_id(1)
@@ -36,8 +36,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        ml_ref[:, 0] = jnp.full((g * q_blk,), NEG_INF, jnp.float32)
+        ml_ref[:, 1] = jnp.zeros((g * q_blk,), jnp.float32)
 
     q_start = qi * q_blk
     kv_start = ki * kv_blk
@@ -72,16 +72,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             g * q_blk, kv_blk)
         s = jnp.where(mask, s, NEG_INF)
 
-        m_prev = m_ref[:, 0]                                   # (G·qb,)
+        m_prev = ml_ref[:, 0]                                  # (G·qb,)
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_cur[:, None])
         alpha = jnp.exp(m_prev - m_cur)
-        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+        ml_ref[:, 1] = ml_ref[:, 1] * alpha + jnp.sum(p, axis=-1)
         pv = jax.lax.dot_general(
             p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)                # (G·qb, Dh)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
-        m_ref[:, 0] = m_cur
+        ml_ref[:, 0] = m_cur
 
     if live is None:
         _compute()
@@ -96,7 +96,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == last_ki)
     def _finalize():
-        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        l = jnp.maximum(ml_ref[:, 1], 1e-30)
         out = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
         o_ref[0] = out.reshape(g, q_blk, o_ref.shape[-1])
 
@@ -146,8 +146,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((b * hk, g, sq + pq, dh), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((g * q_blk, dh), jnp.float32),
-            pltpu.VMEM((g * q_blk, 128), jnp.float32),
-            pltpu.VMEM((g * q_blk, 128), jnp.float32),
+            pltpu.VMEM((g * q_blk, 2), jnp.float32),   # fused (m, l) stats
         ],
         interpret=interpret,
     )(qr, kr, vr)
@@ -160,5 +159,21 @@ def vmem_bytes(q_blk: int, kv_blk: int, g: int, dh: int,
                dtype_bytes: int = 2) -> int:
     """Static VMEM footprint of one grid step (block inputs + scratch)."""
     blocks = (g * q_blk * dh + 2 * kv_blk * dh + g * q_blk * dh) * dtype_bytes
-    scratch = (g * q_blk * dh + 2 * g * q_blk * 128) * 4
+    scratch = (g * q_blk * dh + g * q_blk * 2) * 4   # acc + fused (m, l)
     return blocks + scratch
+
+
+# Tuned (q_blk, kv_blk) choices keyed (Dh, G): bigger kv blocks when the
+# per-row footprint is small, shrinking as G·Dh grows so q + kv blocks +
+# scratch stay inside the ~12 MB VMEM budget (see vmem_bytes).
+_TUNED_BLOCKS = {
+    (64, 1): (128, 256), (64, 2): (128, 256), (64, 4): (128, 128),
+    (64, 8): (64, 128), (128, 1): (128, 256), (128, 2): (128, 128),
+    (128, 4): (64, 128), (128, 8): (32, 128), (256, 1): (64, 128),
+    (256, 2): (32, 128), (256, 4): (32, 64),
+}
+
+
+def tuned_flash_blocks(dh: int, g: int) -> tuple:
+    """(q_blk, kv_blk) for a (Dh, G) head layout (fallback: 128/128)."""
+    return _TUNED_BLOCKS.get((dh, g), (128, 128))

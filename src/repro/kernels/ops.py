@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           tuned_flash_blocks)
 from repro.kernels.paged_attention import paged_decode_attention as _paged_pl
 from repro.kernels.rglru_scan import rglru_scan_pallas
 
@@ -37,8 +38,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     sq, skv = q.shape[1], k.shape[1]
     offset_static = isinstance(q_offset, int) and q_offset == 0
     if _aligned(dh) and offset_static and sq >= 8 and skv >= 8:
-        q_blk = max(8, min(q_chunk, 128))
-        kv_blk = max(8, min(kv_chunk, 128))
+        g = q.shape[2] // k.shape[2]
+        tq, tkv = tuned_flash_blocks(dh, g)
+        q_blk = max(8, min(q_chunk, tq))
+        kv_blk = max(8, min(kv_chunk, tkv))
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       q_blk=q_blk, kv_blk=kv_blk,
                                       interpret=_interpret())
@@ -55,12 +58,15 @@ def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *,
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
-                           window: int = 0):
+                           window: int = 0, pages_per_block: int = 0):
+    """``pages_per_block=0`` autotunes the per-grid-step page count from
+    the ``(page_size, Dh, G)`` shape (see ``tuned_pages_per_block``)."""
     dh = q.shape[-1]
     page_size = k_pages.shape[1]
     if _aligned(dh) and page_size % 8 == 0:
         return _paged_pl(q, k_pages, v_pages, page_table, seq_lens,
-                         window=window, interpret=_interpret())
+                         window=window, pages_per_block=pages_per_block,
+                         interpret=_interpret())
     return ref.paged_decode_attention_ref(q, k_pages, v_pages, page_table,
                                           seq_lens, window=window)
 

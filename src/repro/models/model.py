@@ -376,7 +376,8 @@ def _attn_layer(kind, w, x, cfg: ModelConfig, rt: Runtime, *, positions,
             vp = cache["v_pages"].at[page, off].set(v[:, 0])
             new_cache = {**cache, "k_pages": kp, "v_pages": vp}
             out = kops.paged_decode_attention(
-                q[:, 0], kp, vp, cache["page_table"], pos + 1, window=window)
+                q[:, 0], kp, vp, cache["page_table"], pos + 1, window=window,
+                pages_per_block=rt.attn_pages_per_block)
         else:                                              # dense/ring path
             C = cache["k"].shape[1]
             slot = (cur % C).astype(jnp.int32)

@@ -318,12 +318,13 @@ class LocalBackend(_SlotCacheBackend):
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 offloader=None):
+                 offloader=None, sample_fast_path: bool = True):
         super().__init__(cfg, params, rt, mb_size=mb_size,
                          num_microbatches=num_microbatches, pool=pool)
         self.offloader = offloader
         self._decode_jit = jax.jit(functools.partial(
-            self._decode_fn, cfg=cfg, rt=rt, mb_size=mb_size))
+            self._decode_fn, cfg=cfg, rt=rt, mb_size=mb_size,
+            sample_fast=sample_fast_path))
         self._chunk_jit = jax.jit(functools.partial(
             self._chunk_fn, cfg=cfg, rt=rt))
 
@@ -371,7 +372,7 @@ class LocalBackend(_SlotCacheBackend):
 
     @staticmethod
     def _decode_fn(params, caches, tokens, cur_pos, row0, keys, steps, temp,
-                   top_k, top_p, *, cfg, rt, mb_size):
+                   top_k, top_p, *, cfg, rt, mb_size, sample_fast=True):
         """One decode tick over an ``mb_size`` row view of the caches —
         the full batch is never fed through the model, and rows outside
         the microbatch are untouched by construction.  Sampling is per-row
@@ -380,7 +381,7 @@ class LocalBackend(_SlotCacheBackend):
         logits, new_view = model_lib.decode_step(
             params, tokens, view, cur_pos, cfg, rt)
         toks = sample_batched(logits, fold_in_steps(keys, steps), temp,
-                              top_k, top_p)
+                              top_k, top_p, fast_path=sample_fast)
         return toks, token_logprobs(logits, toks), \
             slot_merge(caches, new_view, row0)
 
@@ -401,7 +402,8 @@ class PipelinedBackend(_SlotCacheBackend):
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
                  n_stages: int = 2, offload: bool = False, mesh=None,
                  fault_plan=None, transport=None, schedule: str = "circular",
-                 wire_dtype: str = "fp32"):
+                 wire_dtype: str = "fp32", sample_fast_path: bool = True,
+                 offload_async: bool = True):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
         if wire_dtype not in ("fp32", "int8"):
@@ -458,7 +460,7 @@ class PipelinedBackend(_SlotCacheBackend):
         self._tick_jit = jax.jit(functools.partial(
             PL.pipeline_decode_tick, cfg=cfg, rt=rt,
             n_stages=n_stages, mb_size=mb_size, mesh=mesh,
-            wire_dtype=wire_dtype))
+            wire_dtype=wire_dtype, sample_fast_path=sample_fast_path))
         # prefill pipe: a second persistent stepper with its own activation
         # carry / shift register, so prompt chunks flow stage-to-stage and
         # OVERLAP in-flight decode microbatches instead of pausing them.
@@ -558,10 +560,13 @@ class PipelinedBackend(_SlotCacheBackend):
         self._stage_off: List = []
         self._epi_off = None
         if offload and pool.n_global_pages:
-            self._stage_off = [DoubleBufferOffloader(pool, num_microbatches)
-                               for _ in range(n_stages)]
+            self._stage_off = [
+                DoubleBufferOffloader(pool, num_microbatches,
+                                      async_swap=offload_async)
+                for _ in range(n_stages)]
             if self._unit_has_paged(self._epi_view()):
-                self._epi_off = DoubleBufferOffloader(pool, num_microbatches)
+                self._epi_off = DoubleBufferOffloader(
+                    pool, num_microbatches, async_swap=offload_async)
 
     # -- per-stage offload residency ---------------------------------------
 
@@ -894,8 +899,9 @@ class PipelinedBackend(_SlotCacheBackend):
 
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                  offloader=None, n_stages=2, mesh=None, fault_plan=None,
-                 transport=None, schedule="circular",
-                 wire_dtype="fp32") -> ExecutionBackend:
+                 transport=None, schedule="circular", wire_dtype="fp32",
+                 sample_fast_path=True,
+                 offload_async=True) -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
@@ -913,12 +919,15 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                 "boundaries for a link to cross")
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
-                            offloader=offloader)
+                            offloader=offloader,
+                            sample_fast_path=sample_fast_path)
     if kind == "pipelined":
         return PipelinedBackend(cfg, params, rt, mb_size=mb_size,
                                 num_microbatches=num_microbatches, pool=pool,
                                 n_stages=n_stages,
                                 offload=offloader is not None, mesh=mesh,
                                 fault_plan=fault_plan, transport=transport,
-                                schedule=schedule, wire_dtype=wire_dtype)
+                                schedule=schedule, wire_dtype=wire_dtype,
+                                sample_fast_path=sample_fast_path,
+                                offload_async=offload_async)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

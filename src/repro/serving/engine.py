@@ -57,6 +57,7 @@ points have static shapes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 import os
 import time
@@ -89,13 +90,13 @@ def _strict_default(strict: Optional[bool]) -> bool:
     return os.environ.get("REPRO_STRICT", "") not in ("", "0")
 
 
-@jax.jit
-def _sample_first(logits, keys, steps, temp, top_k, top_p):
+@functools.partial(jax.jit, static_argnames=("fast",))
+def _sample_first(logits, keys, steps, temp, top_k, top_p, *, fast=True):
     """First-token sampling on prefill logits — jitted at module scope so
     the compile caches across engines/prompts (eager ``lax.cond`` inside
     ``sample_batched`` would retrace per call)."""
     toks = sample_batched(logits, fold_in_steps(keys, steps), temp, top_k,
-                          top_p)
+                          top_p, fast_path=fast)
     return toks, token_logprobs(logits, toks)
 
 
@@ -135,6 +136,7 @@ class OfflineEngine:
                  prefill_mode: str = "auto", fault_plan=None,
                  transport=None, schedule: str = "circular",
                  wire_dtype: str = "fp32",
+                 sample_fast_path: bool = True, offload_async: bool = True,
                  strict: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
@@ -164,13 +166,16 @@ class OfflineEngine:
         self._offloader = offloader
         self._mesh = mesh
         self.n_stages = n_stages
+        self.sample_fast_path = sample_fast_path
+        self.offload_async = offload_async
 
         self.backend: ExecutionBackend = make_backend(
             backend, cfg, params, rt, mb_size=mb_size,
             num_microbatches=num_microbatches, pool=self.pool,
             offloader=offloader, n_stages=n_stages, mesh=mesh,
             fault_plan=fault_plan, transport=transport, schedule=schedule,
-            wire_dtype=wire_dtype)
+            wire_dtype=wire_dtype, sample_fast_path=sample_fast_path,
+            offload_async=offload_async)
 
         # elastic control plane: per-stage EWMA tick times (feeds the
         # admission budget) + the planner/mesh-plan bookkeeping reshard()
@@ -269,6 +274,8 @@ class OfflineEngine:
                   transport=None, schedule: str = "circular",
                   link_latencies=None, worst_link=None,
                   wire_dtype: str = "fp32",
+                  sample_fast_path: bool = True,
+                  offload_async: bool = True,
                   strict: Optional[bool] = None) -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
@@ -321,7 +328,7 @@ class OfflineEngine:
         offloader = None
         if choice.offload and pool.n_global_pages:
             offloader = offload_lib.DoubleBufferOffloader(
-                pool, choice.n_microbatches)
+                pool, choice.n_microbatches, async_swap=offload_async)
         if not prefill_chunk:
             # planner-derived default: a prefill token costs the same model
             # FLOPs as a decode token, so a chunk of ~per-microbatch-batch
@@ -349,7 +356,8 @@ class OfflineEngine:
                   max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                   prefill_mode=prefill_mode, fault_plan=fault_plan,
                   transport=transport, schedule=schedule,
-                  wire_dtype=wire_dtype, strict=strict)
+                  wire_dtype=wire_dtype, sample_fast_path=sample_fast_path,
+                  offload_async=offload_async, strict=strict)
         eng.schedule_choice = choice
         return eng
 
@@ -864,7 +872,8 @@ class OfflineEngine:
             jnp.zeros((1,), jnp.int32),
             jnp.asarray(self.samp_temp[slot:slot + 1]),
             jnp.asarray(self.samp_top_k[slot:slot + 1]),
-            jnp.asarray(self.samp_top_p[slot:slot + 1]))
+            jnp.asarray(self.samp_top_p[slot:slot + 1]),
+            fast=self.sample_fast_path)
         if sp.logprobs:
             # repro-audit: allow(host-sync) — first-token host booking, once per request at admission
             seq.logprobs = [float(first_lp[0])]

@@ -96,6 +96,18 @@ class EngineConfig:
     # environment variable (the test suite defaults it on); True/False
     # force it either way.  Host-side bookkeeping only — no device syncs.
     strict: Optional[bool] = None
+    # paged-decode attention: KV pages streamed per Pallas grid step
+    # (0 = autotuned from the (page_size, Dh, G) shape; see
+    # repro.kernels.paged_attention.tuned_pages_per_block)
+    attn_pages_per_block: int = 0
+    # decode-tick sampling epilogue: replace the full-vocab sort with one
+    # lax.top_k partition when every sampled row's top_k fits the cap —
+    # bit-identical outputs either way (ineligible ticks fall back in-jit)
+    sample_fast_path: bool = True
+    # §4.2 offload swaps: keep the departing microbatch's host copy as a
+    # lazy device future (D2H overlaps the next tick) instead of a
+    # blocking numpy materialisation at the tick boundary
+    offload_async: bool = True
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -150,6 +162,9 @@ class EngineConfig:
                 "transport / schedule / wire_dtype require "
                 "backend='pipelined' — the local backend has no stage "
                 "boundaries for a link to cross")
+        if self.attn_pages_per_block < 0:
+            raise ValueError("attn_pages_per_block must be >= 0 (0 = "
+                             f"autotuned), got {self.attn_pages_per_block}")
 
     @classmethod
     def plan(cls, *, n_stages: Optional[int] = None,
@@ -218,6 +233,9 @@ class EngineConfig:
 
     def build(self, cfg: ModelConfig, params, rt) -> OfflineEngine:
         """Construct the engine this config describes."""
+        if self.attn_pages_per_block and \
+                rt.attn_pages_per_block != self.attn_pages_per_block:
+            rt = rt.replace(attn_pages_per_block=self.attn_pages_per_block)
         if self.plan_args is not None:
             return OfflineEngine.from_plan(
                 cfg, params, rt, backend=self.backend, seed=self.seed,
@@ -225,13 +243,16 @@ class EngineConfig:
                 max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
                 prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
                 transport=self.transport, schedule=self.schedule,
-                wire_dtype=self.wire_dtype, strict=self.strict,
+                wire_dtype=self.wire_dtype,
+                sample_fast_path=self.sample_fast_path,
+                offload_async=self.offload_async, strict=self.strict,
                 **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
         if self.offload and pool.n_global_pages:
             from repro.core.offload import DoubleBufferOffloader
-            offloader = DoubleBufferOffloader(pool, self.num_microbatches)
+            offloader = DoubleBufferOffloader(pool, self.num_microbatches,
+                                              async_swap=self.offload_async)
         return OfflineEngine(
             cfg, params, rt, mb_size=self.mb_size,
             num_microbatches=self.num_microbatches, pool=pool,
@@ -241,7 +262,9 @@ class EngineConfig:
             max_prefill_tokens_per_tick=self.max_prefill_tokens_per_tick,
             prefill_mode=self.prefill_mode, fault_plan=self.fault_plan,
             transport=self.transport, schedule=self.schedule,
-            wire_dtype=self.wire_dtype, strict=self.strict)
+            wire_dtype=self.wire_dtype,
+            sample_fast_path=self.sample_fast_path,
+            offload_async=self.offload_async, strict=self.strict)
 
 
 @dataclass

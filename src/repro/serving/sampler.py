@@ -102,33 +102,42 @@ def fold_in_steps(keys: jax.Array, steps: jax.Array) -> jax.Array:
     return jax.vmap(jax.random.fold_in)(keys, steps)
 
 
+# Static cap on the fast path's partition width: one ``lax.top_k`` over
+# ``min(_FAST_K_CAP, V-1) + 1`` values replaces the full-vocab sort when
+# every sampled row's requested top-k fits under the cap (and no tie
+# spills past it — see ``sample_batched``).
+_FAST_K_CAP = 128
+
+
 def sample_batched(logits: jax.Array, keys: jax.Array, temp: jax.Array,
-                   top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+                   top_k: jax.Array, top_p: jax.Array, *,
+                   fast_path: bool = True) -> jax.Array:
     """Sample one token per row under per-row params (all traced).
 
     logits (B, V) fp32; keys (B, 2) uint32; temp/top_p (B,) fp32;
     top_k (B,) int32.  Returns (B,) int32 tokens.
 
-    The sampled path (one sort + softmax/cumsum + per-row categorical) is
-    under a ``lax.cond`` on "any row non-greedy", so all-greedy ticks pay
-    only the argmax.
+    The sampled path is under a ``lax.cond`` on "any row non-greedy", so
+    all-greedy ticks pay only the argmax.
+
+    ``fast_path`` (static) enables the top-k partition + sort-of-k fast
+    path: when every non-greedy row requests ``0 < top_k <= K`` (K =
+    ``min(_FAST_K_CAP, V-1)``) and no row's top-k tie spills past K, one
+    ``lax.top_k(x, K+1)`` replaces the ``[B, V]`` descending sort.  The
+    kth-value cutoffs and the reconstructed sorted array are *bitwise*
+    what the sort-based path produces (the K kept values padded with
+    ``-inf`` — same ``[B, V]`` shape, so the shared softmax/cumsum
+    nucleus pass rounds identically), and the ``(seed, request_id,
+    token_idx)`` key discipline is untouched — outputs stay bit-identical
+    either way.  Rows that don't qualify fall back to the sort in-jit
+    (``lax.cond``), so enabling the fast path never changes results.
     """
     B, V = logits.shape
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     is_greedy = temp <= 0.0
+    k_cap = min(_FAST_K_CAP, V - 1)
 
-    def sampled_path(_):
-        x = logits / jnp.where(is_greedy, 1.0, temp)[:, None]
-        # top-k: keep rows' values >= their k-th largest (mask, static
-        # shape); masking the *sorted* copy in place (values >= kth form a
-        # descending prefix) saves re-sorting for the top-p pass below
-        sorted_desc = jnp.sort(x, axis=-1)[:, ::-1]
-        kth = jnp.take_along_axis(
-            sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
-        k_on = top_k[:, None] > 0
-        x = jnp.where(k_on & (x < kth), -jnp.inf, x)
-        sorted_desc = jnp.where(k_on & (sorted_desc < kth), -jnp.inf,
-                                sorted_desc)
+    def _nucleus_and_draw(x, sorted_desc):
         # top-p: keep the smallest prefix with cumulative prob >= p
         # (always >= 1 token)
         probs = jax.nn.softmax(sorted_desc, axis=-1)
@@ -140,6 +149,48 @@ def sample_batched(logits: jax.Array, keys: jax.Array, temp: jax.Array,
         return jax.vmap(
             lambda l, k: jax.random.categorical(k, l, axis=-1))(
                 x, keys).astype(jnp.int32)
+
+    def _sorted_path(x):
+        # top-k: keep rows' values >= their k-th largest (mask, static
+        # shape); masking the *sorted* copy in place (values >= kth form a
+        # descending prefix) saves re-sorting for the top-p pass
+        sorted_desc = jnp.sort(x, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(
+            sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+        k_on = top_k[:, None] > 0
+        x = jnp.where(k_on & (x < kth), -jnp.inf, x)
+        sorted_desc = jnp.where(k_on & (sorted_desc < kth), -jnp.inf,
+                                sorted_desc)
+        return _nucleus_and_draw(x, sorted_desc)
+
+    def sampled_path(_):
+        x = logits / jnp.where(is_greedy, 1.0, temp)[:, None]
+        if not fast_path or k_cap < 1:
+            return _sorted_path(x)
+        # one partition over K+1: the K largest per row (descending) plus
+        # the (K+1)-th as the tie-spill sentinel.  The barrier keeps XLA
+        # from folding the downstream slices into the top_k's sort+slice
+        # form, which would defeat the CPU TopK rewrite and re-run the
+        # full-vocab sort the fast path exists to avoid (~56x on V=32k)
+        vals = jax.lax.optimization_barrier(
+            jax.lax.top_k(x, k_cap + 1)[0])             # (B, K+1)
+        kth = jnp.take_along_axis(
+            vals, jnp.clip(top_k - 1, 0, k_cap)[:, None], axis=-1)
+        # a row qualifies if greedy (its draw is discarded) or its top-k
+        # fits under the cap with no tie surviving past position K
+        ok = is_greedy | ((top_k > 0) & (top_k <= k_cap) &
+                          (vals[:, -1] < kth[:, 0]))
+
+        def _topk_path(_):
+            xk = jnp.where(x < kth, -jnp.inf, x)
+            head = jnp.where(vals[:, :k_cap] < kth, -jnp.inf,
+                             vals[:, :k_cap])
+            sorted_desc = jnp.concatenate(
+                [head, jnp.full((B, V - k_cap), -jnp.inf, x.dtype)], axis=1)
+            return _nucleus_and_draw(xk, sorted_desc)
+
+        return jax.lax.cond(jnp.all(ok), _topk_path,
+                            lambda _: _sorted_path(x), None)
 
     sampled = jax.lax.cond(jnp.any(~is_greedy), sampled_path,
                            lambda _: greedy_tok, None)

@@ -31,6 +31,21 @@ ASSIGNED_ARCHS = [
 ]
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    """Drop jax's compiled-program caches after every test module.
+
+    Each XLA compile mmaps JIT code into the process; across the full
+    suite (~thousands of distinct jits, incl. the kernel matrix sweeps)
+    the accumulated maps exhaust ``vm.max_map_count`` (65530 default)
+    and the *next* compile segfaults inside XLA — in whatever test
+    happens to run near the end.  Per-module clearing bounds the
+    growth; modules recompile their own jits anyway, so the only cost
+    is re-warming the handful of shared helpers."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rt():
     return Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)

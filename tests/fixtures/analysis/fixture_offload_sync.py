@@ -1,0 +1,19 @@
+"""Lint fixture: a blocking host copy inside the KV offloader's engaged
+window.  Never imported — the auditor parses it (pure AST).  The test
+configures ``ensure_resident`` as an offload window; exactly one
+``offload-sync`` violation must fire at the marked line (``jnp.zeros``
+and the enqueued ``device_put`` are fine — only *blocking*
+materialisations stall the double-buffer overlap)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Offloader:
+    def ensure_resident(self, caches, mb):
+        sl = jax.lax.slice_in_dim(caches["k_pages"], 0, 4, axis=0)
+        staged = jax.device_put(sl)                  # enqueued: allowed
+        host = np.asarray(staged)  # LINT-EXPECT: offload-sync
+        pad = jnp.zeros((4,), jnp.float32)
+        return host, pad

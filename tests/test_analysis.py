@@ -75,6 +75,18 @@ def test_fixture_retrace_rules_fire_once_each():
     ])
 
 
+def test_fixture_offload_sync_fires_once():
+    path = FIXTURES / "fixture_offload_sync.py"
+    cfg = AuditConfig(
+        hot_roots=[], traced_fns=[],
+        offload_windows=["fixture_offload_sync:Offloader.ensure_resident"])
+    vs = run_lint([path], config=cfg)
+    assert [(v.rule, v.line) for v in vs] == \
+        [("offload-sync", _marks(path)["offload-sync"][0])]
+    # the message tells the reader WHAT to do, not just what fired
+    assert "enqueued" in vs[0].msg
+
+
 def test_suppression_with_reason_silences(tmp_path):
     f = tmp_path / "mod_sync.py"
     f.write_text(
@@ -179,6 +191,36 @@ def test_auditor_catches_fsm_backstep(rt):
     assert len(done) == 1
     eng.finished[0].status = Status.DECODING   # illegal rewind
     with pytest.raises(InvariantViolation, match="fsm"):
+        eng.auditor.after_step()
+
+
+def test_auditor_catches_offload_breaches(rt):
+    from repro.core.offload import DoubleBufferOffloader
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=16, n_global_pages=4,
+                      max_pages_per_seq=4)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4)
+    off = DoubleBufferOffloader(pool, 2)
+    eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=2,
+                        pool=pool, sampling=sp, offloader=off, strict=True)
+    eng.auditor.after_step()                   # consistent so far
+    # (a) parity breach: pool 0 must only ever host even microbatches
+    off.resident[0] = 1
+    with pytest.raises(InvariantViolation, match="parity"):
+        eng.auditor.after_step()
+    off.resident[0] = None
+    # (b) stale host copy kept for a resident microbatch
+    off.resident[1] = 1
+    off._host[1] = []
+    with pytest.raises(InvariantViolation, match="host-store"):
+        eng.auditor.after_step()
+    del off._host[1]
+    # (c) counters must be monotone for the offloader's lifetime
+    off.swap_count = 5
+    eng.auditor.after_step()
+    off.swap_count = 2
+    with pytest.raises(InvariantViolation, match="backward"):
         eng.auditor.after_step()
 
 

@@ -208,6 +208,38 @@ def test_offloader_roundtrip_preserves_content(rt):
     assert off.bytes_swapped > 0
 
 
+def test_offloader_async_matches_sync(rt):
+    """async_swap stores the enqueued jax copy instead of a blocking
+    numpy one — the pool contents after any swap sequence must be
+    bit-identical between the two modes, and a swap-in must pop the
+    host-store key (the strict auditor's staleness invariant)."""
+    cfg = tiny("yi-9b")
+    pool = PoolConfig(page_size=4, n_local_pages=4, n_global_pages=3,
+                      max_pages_per_seq=6)
+
+    def run(async_swap):
+        caches = kvc.build_paged_caches(cfg, batch=2, pool=pool, rt=rt)
+        sl = kvc.global_slice(pool, 0)
+        caches["scan"] = [
+            {**c, "k_pages": c["k_pages"].at[:, sl.start].set(1.5)}
+            if "k_pages" in c else c for c in caches["scan"]]
+        off = DoubleBufferOffloader(pool, 4, async_swap=async_swap)
+        for mb in (0, 2, 0, 2, 0):
+            caches = off.ensure_resident(caches, mb)
+            assert mb not in off._host        # swap-in popped the key
+        off.settle()
+        return off, [np.asarray(c["k_pages"]) for part in ("scan", "tail")
+                     for c in caches[part]
+                     if isinstance(c, dict) and "k_pages" in c]
+
+    off_a, pools_a = run(True)
+    off_s, pools_s = run(False)
+    assert off_a.swap_count == off_s.swap_count == 5
+    assert off_a.bytes_swapped == off_s.bytes_swapped
+    for pa, ps in zip(pools_a, pools_s):
+        np.testing.assert_array_equal(pa, ps)
+
+
 def test_sampler_modes():
     from repro.serving.sampler import sample
     logits = jnp.asarray([[1.0, 5.0, 2.0, 0.0]])
