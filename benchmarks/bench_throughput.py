@@ -262,6 +262,114 @@ def _latency_curve(rows, quick: bool):
     _bandwidth_columns(rows, quick)
 
 
+def _online_serving(rows, quick: bool):
+    """Poisson multi-tenant online workload through ``OnlineLLM``: every
+    request shares a 24-token system prompt, arrivals are seeded
+    exponential gaps submitted into the LIVE engine loop, and the prefix
+    cache serves the shared pages without re-prefilling them.  Reports
+    p50/p99 TTFT and inter-token latency (informational — wall-clock) and
+    two gated correctness fields: ``prefix_exact`` (1.0 iff the shared
+    prefix was re-prefilled ZERO times — computed prefill tokens exactly
+    equal submitted prompt tokens minus cache-hit tokens, and every
+    post-warmup request hit all three shared pages) and bit-identity of
+    the streamed tokens against offline ``LLM.generate`` on a fresh
+    cache-less engine."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_arch, reduced_config
+    from repro.models import model as M
+    from repro.models.common import Runtime
+    from repro.serving.kv_cache import PoolConfig
+    from repro.serving.llm import LLM, EngineConfig, SamplingParams
+    from repro.serving.online import OnlineLLM
+
+    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    cfg = reduced_config(get_arch("yi-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=64, n_global_pages=8,
+                      max_pages_per_seq=8)
+    n_req = 6 if quick else 12
+    max_new = 8 if quick else 16
+    rate = 50.0                         # req/s — arrivals overlap decode
+    rng = np.random.RandomState(0)
+    system = list(rng.randint(1, cfg.vocab_size, 24))   # 3 shared pages
+    prompts = [system + list(rng.randint(1, cfg.vocab_size,
+                                         rng.randint(4, 16)))
+               for _ in range(n_req)]
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new)
+
+    def build(prefix_cache):
+        return LLM(cfg, params=params, rt=rt, config=EngineConfig(
+            mb_size=2, num_microbatches=2, pool=pool, offload=True,
+            backend="local", prefill_chunk=16,
+            max_prefill_tokens_per_tick=32, prefix_cache=prefix_cache))
+
+    # offline reference: same prompts, fresh engine, NO cache — greedy
+    # decoding makes the token streams request-id independent, so this is
+    # the bit-identity baseline for the online run below
+    ref = build(False).generate(prompts, sp)
+
+    online = OnlineLLM(llm=build(True))
+    # warm the cache deterministically: one throwaway request prefills +
+    # inserts the system pages, so every measured request is a hit
+    online.submit(system + list(rng.randint(1, cfg.vocab_size, 4)),
+                  SamplingParams(temperature=0.0, max_new_tokens=2)).result()
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
+    streams = []
+    nxt = 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        while nxt < n_req and arrivals[nxt] <= now:
+            streams.append(online.submit(prompts[nxt], sp))
+            nxt += 1
+        if not online.step():
+            if nxt >= n_req:
+                break
+            time.sleep(min(0.002, max(
+                0.0, arrivals[nxt] - (time.perf_counter() - t0))))
+    outs = [s.result() for s in streams]
+    rep = online.stats()
+    stats = online.engine.stats
+
+    # gated correctness: zero shared-prefix recompute + offline identity
+    total_prompt = sum(len(p) for p in prompts) + 24 + 4   # + warmup
+    zero_recompute = (
+        stats.prefix_hits == n_req
+        and stats.prefix_hit_tokens == 24 * n_req
+        and stats.prefill_tokens == total_prompt - stats.prefix_hit_tokens)
+    identical = all(o.token_ids == r.token_ids and o.finished
+                    for o, r in zip(outs, ref))
+    prefix_exact = 1.0 if (zero_recompute and identical) else 0.0
+
+    def _pct(vals, q):
+        return float(np.percentile(vals, q)) if vals else 0.0
+    ttfts = [s.ttft_s for s in streams if s.ttft_s is not None]
+    itls = [d for s in streams for d in s.inter_token_s()]
+    row = {"bench": "online_serving", "policy": "prefix_cache",
+           "n_req": n_req, "arrival_rate": rate,
+           "ttft_p50_s": _pct(ttfts, 50), "ttft_p99_s": _pct(ttfts, 99),
+           "itl_p50_s": _pct(itls, 50), "itl_p99_s": _pct(itls, 99),
+           "prefix_hit_rate": rep.get("prefix_hit_rate", 0.0),
+           "prefix_hit_tokens": stats.prefix_hit_tokens,
+           "prefix_exact": prefix_exact}
+    print(f"\n-- online_serving (Poisson {rate:.0f} req/s, {n_req} reqs, "
+          f"shared 24-token system prompt, prefix cache on) --\n"
+          f"  TTFT p50={row['ttft_p50_s']*1e3:7.1f}ms "
+          f"p99={row['ttft_p99_s']*1e3:7.1f}ms   "
+          f"ITL p50={row['itl_p50_s']*1e3:6.1f}ms "
+          f"p99={row['itl_p99_s']*1e3:6.1f}ms\n"
+          f"  prefix: hit rate {row['prefix_hit_rate']:.2f} "
+          f"({stats.prefix_hit_tokens} tokens never re-prefilled), "
+          f"exact={prefix_exact:.0f} (zero recompute + offline "
+          f"bit-identity)")
+    rows.append(row)
+
+
 def _sampling_epilogue(rows, quick: bool):
     """Fused sampling-epilogue microbench: the top-k partition fast path
     vs the full-vocab sort, both jitted, bit-identical by construction
@@ -315,16 +423,22 @@ def _sampling_epilogue(rows, quick: bool):
 def run(quick: bool = False, workload: str = "all"):
     """``workload``: "all" (both engine workloads + Table 4), "decode" /
     "prefill_heavy" (one measured engine workload, no simulator pass),
-    or "latency_curve" (throughput-vs-link-latency on the real engine
-    over simulated WAN links, cross-checked against the DES)."""
+    "online" (the Poisson online-serving workload through ``OnlineLLM``
+    with prefix caching), or "latency_curve" (throughput-vs-link-latency
+    on the real engine over simulated WAN links, cross-checked against
+    the DES)."""
     rows = []
     if workload == "latency_curve":
         _latency_curve(rows, quick)
+        return rows
+    if workload == "online":
+        _online_serving(rows, quick)
         return rows
     _engine_backends(rows, quick, workload)
     _sampling_epilogue(rows, quick)
     if workload != "all":
         return rows
+    _online_serving(rows, quick)
     _latency_curve(rows, quick)         # virtual clock — CPU-cheap
     res = table4(sim_seconds=200 if quick else 400,
                  warmup=50 if quick else 100)

@@ -16,9 +16,13 @@ Three gated workloads:
   machine-independent, so the shared threshold is comfortably wide for
   them.
 
-Two absolute floors ride along (``ABS_GATES``): the fused-sampling
-speedup (``sampling_fast.ratio`` >= 1.15) and the async-offload overlap
-(``offload_overlap.hide_frac`` >= 0.80).  These compare the new run
+Absolute floors ride along (``ABS_GATES``): the fused-sampling
+speedup (``sampling_fast.ratio`` >= 1.15), the async-offload overlap
+(``offload_overlap.hide_frac`` >= 0.80), and the online-serving
+prefix-cache correctness bit (``online_serving.prefix_exact`` == 1.0:
+zero shared-prefix recompute + streamed tokens bit-identical to offline
+``LLM.generate``; its TTFT/ITL percentiles print as informational
+cells).  These compare the new run
 against *itself* (each row is an in-bench A/B), so they need no baseline
 and no machine margin; they skip with [INFO] when the producing bench
 didn't run.  Measured ``kernel_roofline`` rows are printed as
@@ -72,6 +76,11 @@ ABS_GATES = (
      "fused-sampling speedup vs full-vocab sort"),
     ("offload_overlap", "hide_frac", 0.80,
      "async-offload hidden host-copy fraction"),
+    # online serving correctness: 1.0 iff the shared prompt prefix was
+    # re-prefilled ZERO times AND the streamed tokens are bit-identical
+    # to offline LLM.generate — a correctness bit, so the floor is exact
+    ("online_serving", "prefix_exact", 1.0,
+     "prefix-cache zero-recompute + offline bit-identity"),
 )
 
 
@@ -187,6 +196,29 @@ def main() -> int:
         print(f"perf gate: {bench}/{field}: {worst:.3f} "
               f"(floor {floor:.2f}) — {label} "
               f"[{'OK' if ok else 'REGRESSION'}]")
+
+    # online-serving latency percentiles: informational only — TTFT/ITL
+    # are wall-clock on a shared CI runner, so they track the trajectory
+    # without gating (prefix_exact above is the gated bit)
+    try:
+        base_ol = [r for r in _load_rows(args.baseline)
+                   if r.get("bench") == "online_serving"]
+    except (OSError, json.JSONDecodeError):
+        base_ol = []
+    for r in new_rows:
+        if r.get("bench") != "online_serving":
+            continue
+        b = next((x for x in base_ol
+                  if x.get("policy") == r.get("policy")), None)
+        for f in ("ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s",
+                  "prefix_hit_rate"):
+            if f not in r:
+                continue
+            msg = (f"perf gate: online_serving/{r.get('policy', '?')}/"
+                   f"{f}: {r[f]:.4f}")
+            if b and f in b:
+                msg += f" (baseline {b[f]:.4f})"
+            print(msg + " [INFO]")
 
     # measured kernel roofline: informational only — achieved-vs-peak
     # fractions are host-calibrated but still runner-sensitive, so they

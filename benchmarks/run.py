@@ -25,12 +25,15 @@ def main() -> None:
                          "partial --only runs don't clobber the tracked "
                          "snapshot unless asked to)")
     ap.add_argument("--workload", default="all",
-                    choices=["all", "decode", "prefill_heavy",
+                    choices=["all", "decode", "prefill_heavy", "online",
                              "latency_curve", "roofline"],
                     help="throughput bench workload: 'decode' / "
                          "'prefill_heavy' run just that measured engine "
                          "workload (implies --only throughput, no "
-                         "simulator pass); 'latency_curve' sweeps "
+                         "simulator pass); 'online' runs the Poisson "
+                         "online-serving workload through OnlineLLM "
+                         "with prefix caching (p50/p99 TTFT + ITL, "
+                         "prefix-hit correctness); 'latency_curve' sweeps "
                          "simulated link latency on the real engine "
                          "(virtual clock, circular vs round-flush); "
                          "'roofline' runs just the roofline report "

@@ -11,11 +11,14 @@ happened to read it later.
 
 Checked invariants:
 
-* **page accounting** — the allocator's free lists plus every slot's
-  owned pages exactly partition the non-scratch page universe (no leak,
-  no double-grant, scratch page 0 never owned), owned pages belong only
-  to occupied slots, and the engine's published page table matches the
-  allocator's view row-for-row;
+* **page accounting** — the allocator's free lists plus the owned pages
+  exactly partition the non-scratch page universe (no leak, no
+  double-grant, scratch page 0 never owned); every page's refcount
+  equals its ownership multiplicity (slots listing it + prefix-cache
+  retains), shared pages are local-only (global pools parity-swap),
+  owned pages belong only to occupied slots or the prefix cache, and
+  the engine's published page table matches the allocator's view
+  row-for-row;
 * **Status lifecycle** — per-sequence transitions follow the FSM
   QUEUED → PREFILLING → DECODING → FINISHED, with the single legal
   back-edge PREFILLING → QUEUED (admission rollback on page
@@ -120,30 +123,59 @@ class EngineAuditor:
         free: List[int] = list(alloc._free_local)
         for gp in alloc._free_global.values():
             free.extend(gp)
-        owned: List[int] = []
-        for pages in alloc._seq_pages.values():
-            owned.extend(pages)
+        # multiplicity of ownership: how many slots list each page, plus
+        # one per prefix-cache retain — must equal the allocator refcount
+        owner_count: Dict[int, int] = {}
+        for slot, pages in alloc._seq_pages.items():
+            if len(pages) != len(set(pages)):
+                _fail(where, f"page audit: slot {slot} lists a page "
+                             f"twice (pages={pages})")
+            for p in pages:
+                owner_count[p] = owner_count.get(p, 0) + 1
+        cache = getattr(eng, "prefix_cache", None)
+        if cache is not None:
+            retained = cache.pages_retained()
+            if len(retained) != len(set(retained)):
+                _fail(where, "page audit: prefix cache retains a page "
+                             f"under two entries ({sorted(retained)})")
+            for p in retained:
+                owner_count[p] = owner_count.get(p, 0) + 1
+        owned = set(owner_count)
 
         if len(free) != len(set(free)):
             _fail(where, "page audit: duplicate page in the free lists "
                          f"(free={sorted(free)})")
-        if len(owned) != len(set(owned)):
-            _fail(where, "page audit: page granted to two owners "
-                         f"(owned={sorted(owned)})")
-        overlap = set(free) & set(owned)
+        overlap = set(free) & owned
         if overlap:
             _fail(where, f"page audit: pages {sorted(overlap)} are both "
                          "free and owned")
         if 0 in free or 0 in owned:
             _fail(where, "page audit: scratch page 0 entered the "
                          "allocator (it must stay reserved)")
-        seen = set(free) | set(owned)
+        seen = set(free) | owned
         if seen != universe:
             leaked = sorted(universe - seen)
             conjured = sorted(seen - universe)
             _fail(where, "page audit: free+owned does not partition the "
                          f"page universe (leaked={leaked}, "
                          f"out-of-range={conjured})")
+
+        # refcounts are the ownership multiplicity, exactly
+        refs = dict(getattr(alloc, "_refs", {}))
+        if refs != owner_count:
+            diff = {p: (owner_count.get(p, 0), refs.get(p, 0))
+                    for p in set(refs) | set(owner_count)
+                    if refs.get(p, 0) != owner_count.get(p, 0)}
+            _fail(where, "page audit: allocator refcounts disagree with "
+                         f"ownership (page -> (owners, refcount)): {diff}")
+        # sharing is legal only for local pages — global-pool content is
+        # parity-swapped per microbatch by the offloader
+        shared_global = sorted(p for p, n in owner_count.items()
+                               if n > 1 and p >= pool.n_local_pages)
+        if shared_global:
+            _fail(where, f"page audit: global pages {shared_global} are "
+                         "shared — offload parity swaps would clobber "
+                         "one owner's view")
 
         occupied = {slot for slot, seq in enumerate(eng.slots)
                     if seq is not None}

@@ -41,11 +41,24 @@ heartbeat per stage per engine step, ``--kill-device STEP:DEVICE``
 silences a device mid-run and the loop reshards when the detector
 declares it dead (no explicit stage target needed).
 
+Online serving: ``--online`` switches the batch ``generate()`` call for a
+live loop — seeded Poisson arrivals (``--arrival-rate``) are submitted
+into the running engine via :class:`~repro.serving.online.OnlineLLM` and
+tokens stream out per tick; the run reports p50/p99 TTFT and inter-token
+latency.  ``--prefix-cache`` shares fully-prefilled prompt blocks across
+requests with a common prefix (pair with ``--system-prompt N`` to give
+every request an N-token shared head); ``--slo-ttft`` / ``--slo-itl``
+engage the latency-SLO admission policy that shrinks the per-tick prefill
+budget when decode latency drifts past target.  Token streams stay
+bit-identical to the offline path in all of these modes.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
       --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed] \\
       [--link-latency 0.064 | --deployment us-west,us-east] \\
       [--schedule round_flush] [--inject-fault drop@decode:12:1] \\
-      [--reshard-at 20:1 | --detect-failures 2 --kill-device 6:1]
+      [--reshard-at 20:1 | --detect-failures 2 --kill-device 6:1] \\
+      [--online --arrival-rate 8 --system-prompt 32 --prefix-cache \\
+       --slo-ttft 0.5 --slo-itl 0.05]
 """
 
 from __future__ import annotations
@@ -148,10 +161,11 @@ def main() -> None:
                     help="stop heartbeating DEVICE after engine step "
                          "STEP (repeatable; the --detect-failures drill "
                          "signal)")
-    ap.add_argument("--link-latency", type=float, default=0.0,
+    ap.add_argument("--link-latency", type=float, default=None,
                     help="uniform simulated one-way latency (seconds) on "
                          "every inter-stage link, accounted on a virtual "
-                         "clock (pipelined backend)")
+                         "clock (pipelined backend); an explicit 0 is a "
+                         "zero-cost simulated link, not 'unset'")
     ap.add_argument("--deployment", default="",
                     metavar="REGION[,REGION...]",
                     help="one pipeline stage per region (e.g. "
@@ -177,6 +191,28 @@ def main() -> None:
                          "seconds) or the engine step index (the "
                          "deterministic shim drills/tests pin — TIMEOUT "
                          "counts steps)")
+    ap.add_argument("--online", action="store_true",
+                    help="online serving drill: Poisson arrivals submitted "
+                         "into a LIVE engine loop (OnlineLLM), tokens "
+                         "streamed per tick; reports p50/p99 TTFT and "
+                         "inter-token latency")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="mean Poisson arrival rate for --online, "
+                         "requests/second (seeded, deterministic)")
+    ap.add_argument("--system-prompt", type=int, default=0,
+                    metavar="TOKENS",
+                    help="prepend a shared TOKENS-long system prompt to "
+                         "every request (the prefix-cache workload shape)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share fully-prefilled prompt blocks across "
+                         "requests with a common prefix (refcounted "
+                         "paged-KV sharing; needs chunked prefill)")
+    ap.add_argument("--slo-ttft", type=float, default=0.0,
+                    help="TTFT target (seconds) for the latency-SLO "
+                         "admission policy (0 = off)")
+    ap.add_argument("--slo-itl", type=float, default=0.0,
+                    help="inter-token (per-tick) target (seconds) for the "
+                         "latency-SLO admission policy (0 = off)")
     ap.add_argument("--plan", action="store_true",
                     help="derive N_B / batch / pools from measured stage "
                          "time + --latency (OfflineEngine.from_plan)")
@@ -203,12 +239,12 @@ def main() -> None:
             [r.strip() for r in args.deployment.split(",") if r.strip()])
         args.stages = deployment.n_stages
     if args.backend != "pipelined" and (
-            args.link_latency or args.schedule != "circular"
+            args.link_latency is not None or args.schedule != "circular"
             or args.transport_compress != "none"):
         raise SystemExit("--link-latency / --schedule / "
                          "--transport-compress require --backend pipelined")
-    if args.transport_compress == "topk" and not (deployment
-                                                  or args.link_latency):
+    if args.transport_compress == "topk" and deployment is None \
+            and args.link_latency is None:
         raise SystemExit("--transport-compress topk is accounting only — "
                          "it needs a simulated link (--link-latency or "
                          "--deployment) to account on")
@@ -242,6 +278,17 @@ def main() -> None:
             raise SystemExit("--reshard-at requires --backend pipelined")
     if args.inject_fault and args.backend != "pipelined":
         raise SystemExit("--inject-fault requires --backend pipelined")
+    if args.online and (reshard_at or detect):
+        raise SystemExit("--online runs its own live loop — it composes "
+                         "with faults/SLO/prefix caching but not with the "
+                         "--reshard-at / --detect-failures drill loops")
+    if args.arrival_rate <= 0:
+        raise SystemExit(f"--arrival-rate must be > 0, "
+                         f"got {args.arrival_rate}")
+    if args.prefix_cache and args.prefill_mode == "exact":
+        raise SystemExit("--prefix-cache needs chunked prefill (prefix "
+                         "hits resume mid-prompt); drop "
+                         "--prefill-mode exact")
 
     if args.backend == "pipelined":
         _ensure_host_devices(max(args.stages, reshard_stages))
@@ -264,6 +311,15 @@ def main() -> None:
     fault_plan = FaultPlan.parse(args.inject_fault) if args.inject_fault \
         else None
 
+    slo = None
+    if args.slo_ttft > 0 or args.slo_itl > 0:
+        from repro.serving.engine import SLOConfig
+        slo = SLOConfig(ttft_target_s=args.slo_ttft,
+                        itl_target_s=args.slo_itl)
+        print(f"SLO admission: ttft_target={args.slo_ttft:.3f}s "
+              f"itl_target={args.slo_itl:.3f}s (prefill budget shaped "
+              "per tick)")
+
     # int8 is the real in-jit codec: EngineConfig(wire_dtype=) drives the
     # tick jits AND the backend's transport wrap, so the books equal the
     # packed payload.  top-k stays an accounting wrapper built here.
@@ -273,7 +329,7 @@ def main() -> None:
     if deployment is not None:
         transport = deployment.transport(compress=compress)
         print(deployment.describe())
-    elif args.link_latency:
+    elif args.link_latency is not None:
         from repro.distributed.transport import (CompressedTransport,
                                                  SimulatedLinkTransport)
         transport = SimulatedLinkTransport.uniform(args.stages,
@@ -301,11 +357,15 @@ def main() -> None:
         t_s = measure_stage_time(cfg, params, rt, args.stages)
         # planner latency input: the deployment plan's max ring-link
         # latency (the slowest link sets the bubble budget) beats a
-        # uniform --link-latency beats the bare --latency guess
-        plan_latency = None if deployment is not None else \
-            (args.link_latency or args.latency)
+        # uniform --link-latency (an explicit 0 is honoured as a
+        # zero-cost link) beats the bare --latency guess
+        plan_latency = None if deployment is not None else (
+            args.link_latency if args.link_latency is not None
+            else args.latency)
+        eff_latency = deployment.max_link_latency if deployment is not None \
+            else plan_latency
         print(f"planned: measured stage_time={t_s*1000:.1f}ms "
-              f"latency={(deployment.max_link_latency if deployment else plan_latency)*1000:.0f}ms"
+              f"latency={eff_latency*1000:.0f}ms"
               f"{' (deployment max link)' if deployment else ''} "
               f"kv_budget={args.kv_budget_mb:.1f}MB")
         econfig = EngineConfig.plan(
@@ -315,20 +375,14 @@ def main() -> None:
             m_kv_bytes=args.kv_budget_mb * 1e6, page_size=args.page_size,
             max_pages_per_seq=16, max_microbatches=16, mb_size_cap=4,
             backend=args.backend, seed=args.seed,
-            # reshard refuses while offloaded pools hold host content
-            # (host-store migration is a ROADMAP item): plan without
-            # offload when a reshard drill is scheduled
-            use_offload=not (reshard_at or detect),
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
             prefill_mode=args.prefill_mode, fault_plan=fault_plan,
-            wire_dtype=wire_dtype, strict=args.strict or None)
+            wire_dtype=wire_dtype, prefix_cache=args.prefix_cache,
+            slo=slo, strict=args.strict or None)
     else:
-        # reshard carries the caches over; offloaded global pools would
-        # need host-store migration, so drills run with all-local pools
-        n_global = 0 if (reshard_at or detect) else 16
         pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
-                          n_global_pages=n_global, max_pages_per_seq=16)
+                          n_global_pages=16, max_pages_per_seq=16)
         econfig = EngineConfig(mb_size=args.mb_size,
                                num_microbatches=args.microbatches, pool=pool,
                                offload=True, backend=args.backend,
@@ -339,6 +393,7 @@ def main() -> None:
                                fault_plan=fault_plan, transport=transport,
                                schedule=args.schedule,
                                wire_dtype=wire_dtype,
+                               prefix_cache=args.prefix_cache, slo=slo,
                                strict=args.strict or None)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
@@ -354,7 +409,10 @@ def main() -> None:
           f"rows={engine.prefill_rows})")
 
     rng = np.random.RandomState(args.seed)
-    prompts = [list(rng.randint(1, cfg.vocab_size, rng.randint(4, 24)))
+    system = list(rng.randint(1, cfg.vocab_size, args.system_prompt)) \
+        if args.system_prompt > 0 else []
+    prompts = [system + list(rng.randint(1, cfg.vocab_size,
+                                         rng.randint(4, 24)))
                for _ in range(args.requests)]
     if args.mixed:
         policies = [SamplingParams(temperature=0.0),
@@ -367,7 +425,48 @@ def main() -> None:
         sps = SamplingParams(temperature=args.temperature,
                              max_new_tokens=args.max_new)
 
-    if reshard_at or detect:
+    if args.online:
+        # Online serving drill: seeded Poisson arrivals submitted into a
+        # LIVE loop — the engine keeps decoding earlier requests while new
+        # ones are admitted; tokens stream out per tick.  Cooperative
+        # pump (no thread) so the run is deterministic given the seed.
+        from repro.serving.online import OnlineLLM
+        online = OnlineLLM(llm=llm)
+        gaps = rng.exponential(1.0 / args.arrival_rate,
+                               size=args.requests)
+        arrivals = np.cumsum(gaps)
+        sps_list = sps if isinstance(sps, list) else \
+            [sps] * args.requests
+        streams = []
+        nxt = 0
+        t0 = time.perf_counter()
+        while True:
+            now = time.perf_counter() - t0
+            while nxt < args.requests and arrivals[nxt] <= now:
+                streams.append(online.submit(prompts[nxt],
+                                             sps_list[nxt]))
+                nxt += 1
+            busy = online.step()
+            if not busy:
+                if nxt >= args.requests:
+                    break
+                # engine idle before the next arrival: sleep up to it
+                time.sleep(min(0.005, max(
+                    0.0, arrivals[nxt] - (time.perf_counter() - t0))))
+        outs = [s.result() for s in streams]
+
+        def _pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+        ttfts = [s.ttft_s for s in streams if s.ttft_s is not None]
+        itls = [d for s in streams for d in s.inter_token_s()]
+        print(f"online: {args.requests} requests over "
+              f"{time.perf_counter() - t0:.2f}s (Poisson "
+              f"{args.arrival_rate:.1f} req/s); "
+              f"TTFT p50={_pct(ttfts, 50)*1e3:.1f}ms "
+              f"p99={_pct(ttfts, 99)*1e3:.1f}ms; "
+              f"ITL p50={_pct(itls, 50)*1e3:.1f}ms "
+              f"p99={_pct(itls, 99)*1e3:.1f}ms")
+    elif reshard_at or detect:
         step = 0
         resharded = False
         detector = None
@@ -445,6 +544,12 @@ def main() -> None:
           f"{rep['prefill_tok_per_s']:.1f} prefill tok/s on this host; "
           f"mean latency {rep['mean_latency_steps']:.1f} steps / "
           f"{rep['mean_latency_s']:.2f}s)")
+    if args.prefix_cache:
+        print(f"prefix cache: {rep.get('prefix_hits', 0)} hits, "
+              f"{rep.get('prefix_hit_tokens', 0)} prompt tokens served "
+              f"from shared blocks (hit rate "
+              f"{rep.get('prefix_hit_rate', 0.0):.2f}, "
+              f"{rep.get('prefix_cache_pages', 0)} pages retained)")
     reasons = {}
     for o in outs:
         reasons[o.finish_reason] = reasons.get(o.finish_reason, 0) + 1

@@ -669,6 +669,117 @@ class PipelinedBackend(_SlotCacheBackend):
             self._ensure_stage_resident(s, mb)
         self._ensure_epi_resident(mb)
 
+    # -- host-store migration (reshard) -------------------------------------
+
+    def _offload_units(self):
+        """(offloader, cache view, first scan period) per stage unit."""
+        units = [(o, self._stage_view(s), s * self.pps)
+                 for s, o in enumerate(self._stage_off)]
+        if self._epi_off is not None:
+            units.append((self._epi_off, self._epi_view(),
+                          self.n_stages * self.pps))
+        return units
+
+    def export_offload_state(self) -> dict:
+        """Concatenate every offloader's host store into *full-period*
+        host arrays, keyed by microbatch — the stage-split-independent
+        form ``import_offload_state`` re-splits for a new stage count.
+
+        Per microbatch the state holds, for each paged scan kind, one
+        ``(n_periods, n_global, page, heads, head_dim)`` array (periods a
+        unit never staged out for that mb stay zero — identical to the
+        offloader's own zero-fill-on-first-touch semantics) and for each
+        paged tail kind one ``(n_global, ...)`` array.  Currently
+        *resident* microbatches are snapshotted from the live pools too:
+        the rebuilt backend's offloaders start with empty resident maps,
+        so their first ``ensure_resident`` must find every microbatch's
+        bytes in the host store.  Call only with both planes drained."""
+        units = self._offload_units()
+        if not units:
+            return {}
+        paged_scan = [c for c in self.caches["scan"]
+                      if isinstance(c, dict) and "k_pages" in c]
+        paged_tail = [c for c in self.caches["tail"]
+                      if isinstance(c, dict) and "k_pages" in c]
+        n_glob = self.pool.n_global_pages
+        state: Dict[int, dict] = {}
+
+        def entry(mb: int) -> dict:
+            if mb not in state:
+                state[mb] = {
+                    "scan": [{
+                        "k": np.zeros((c["k_pages"].shape[0], n_glob)
+                                      + tuple(c["k_pages"].shape[2:]),
+                                      np.dtype(c["k_pages"].dtype)),
+                        "v": np.zeros((c["v_pages"].shape[0], n_glob)
+                                      + tuple(c["v_pages"].shape[2:]),
+                                      np.dtype(c["v_pages"].dtype)),
+                    } for c in paged_scan],
+                    "tail": [{
+                        "k": np.zeros((n_glob,)
+                                      + tuple(c["k_pages"].shape[1:]),
+                                      np.dtype(c["k_pages"].dtype)),
+                        "v": np.zeros((n_glob,)
+                                      + tuple(c["v_pages"].shape[1:]),
+                                      np.dtype(c["v_pages"].dtype)),
+                    } for c in paged_tail],
+                }
+            return state[mb]
+
+        for o, view, lo in units:
+            o.settle()
+            stores: Dict[int, List[dict]] = {}
+            for parity, mb in o.resident.items():
+                if mb is None:
+                    continue
+                sl = kvc.global_slice(self.pool, parity)
+                snap = []
+                for c, axis in o._paged_layers(view):
+                    idx = (slice(None), sl) if axis == 1 else (sl,)
+                    snap.append({"k": np.asarray(c["k_pages"][idx]),
+                                 "v": np.asarray(c["v_pages"][idx])})
+                stores[mb] = snap
+            for mb, layers in o._host.items():
+                stores[mb] = [{k: np.asarray(v) for k, v in layer.items()}
+                              for layer in layers]
+            n_scan = sum(1 for c in view["scan"]
+                         if isinstance(c, dict) and "k_pages" in c)
+            for mb, layers in stores.items():
+                dst = entry(mb)
+                for j in range(n_scan):
+                    hi = lo + layers[j]["k"].shape[0]
+                    dst["scan"][j]["k"][lo:hi] = layers[j]["k"]
+                    dst["scan"][j]["v"][lo:hi] = layers[j]["v"]
+                for j, layer in enumerate(layers[n_scan:]):
+                    dst["tail"][j]["k"][...] = layer["k"]
+                    dst["tail"][j]["v"][...] = layer["v"]
+        return state
+
+    def import_offload_state(self, state: dict) -> None:
+        """Re-split full-period host arrays (``export_offload_state`` of
+        the pre-reshard backend) across THIS backend's stage units.  The
+        fresh offloaders keep empty resident maps: the first
+        ``ensure_resident`` per microbatch pops its imported store and
+        writes the pool — by then the departing parity (if any) has been
+        staged out, so no carried byte is lost."""
+        if not state:
+            return
+        for s, o in enumerate(self._stage_off):
+            lo, hi = s * self.pps, (s + 1) * self.pps
+            for mb, full in state.items():
+                o._host[mb] = [{"k": f["k"][lo:hi].copy(),
+                                "v": f["v"][lo:hi].copy()}
+                               for f in full["scan"]]
+        if self._epi_off is not None:
+            lo = self.n_stages * self.pps
+            for mb, full in state.items():
+                store = [{"k": f["k"][lo:].copy(),
+                          "v": f["v"][lo:].copy()}
+                         for f in full["scan"]] if self.leftover else []
+                store += [{"k": f["k"].copy(), "v": f["v"].copy()}
+                          for f in full["tail"]]
+                self._epi_off._host[mb] = store
+
     # -- fault injection ----------------------------------------------------
 
     def _take_faults(self, plane: str, tick: int, entries: list):

@@ -100,6 +100,59 @@ def _sample_first(logits, keys, steps, temp, top_k, top_p, *, fast=True):
     return toks, token_logprobs(logits, toks)
 
 
+@dataclasses.dataclass
+class SLOConfig:
+    """Latency-SLO targets for online serving admission.
+
+    The controller shapes the per-tick prefill/decode token-budget ratio
+    (the same lever as ``max_prefill_tokens_per_tick``): when the
+    engine's smoothed tick time exceeds ``itl_target_s`` — inter-token
+    latency for decoding requests is one tick per microbatch round —
+    admission sheds prefill down to ``floor_frac`` of the budget;  when
+    the oldest waiting request has been queued for half its
+    ``ttft_target_s``, the budget is restored (TTFT risk needs prefill).
+    A zero target disables that half of the policy."""
+    ttft_target_s: float = 0.0
+    itl_target_s: float = 0.0
+    floor_frac: float = 0.25
+    ewma_alpha: float = 0.2
+
+    def validate(self) -> None:
+        if self.ttft_target_s < 0 or self.itl_target_s < 0:
+            raise ValueError("SLO targets must be >= 0")
+        if not (0.0 < self.floor_frac <= 1.0):
+            raise ValueError(
+                f"floor_frac must be in (0, 1], got {self.floor_frac}")
+        if not (0.0 < self.ewma_alpha <= 1.0):
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {self.ewma_alpha}")
+
+
+class SLOController:
+    """Deterministic budget shaper for :class:`SLOConfig` (host-side,
+    no device state — unit-testable without an engine)."""
+
+    def __init__(self, cfg: SLOConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.itl_ewma = 0.0
+
+    def observe_tick(self, dt: float) -> None:
+        """Feed one engine-tick wall time into the ITL estimate."""
+        a = self.cfg.ewma_alpha
+        self.itl_ewma = dt if self.itl_ewma == 0.0 else \
+            (1.0 - a) * self.itl_ewma + a * dt
+
+    def budget_frac(self, oldest_wait_s: float) -> float:
+        """Fraction of the per-tick prefill token budget to admit."""
+        c = self.cfg
+        if c.ttft_target_s and oldest_wait_s >= 0.5 * c.ttft_target_s:
+            return 1.0          # TTFT at risk: prefill must not starve
+        if c.itl_target_s and self.itl_ewma > c.itl_target_s:
+            return max(c.floor_frac, c.itl_target_s / self.itl_ewma)
+        return 1.0
+
+
 def prefill_chunk_cap(cfg: ModelConfig, rt: Runtime, link, *,
                       stage_time: float,
                       wire_dtype: str = "fp32") -> int:
@@ -137,6 +190,8 @@ class OfflineEngine:
                  transport=None, schedule: str = "circular",
                  wire_dtype: str = "fp32",
                  sample_fast_path: bool = True, offload_async: bool = True,
+                 prefix_cache: bool = False,
+                 slo: Optional[SLOConfig] = None,
                  strict: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
@@ -241,6 +296,21 @@ class OfflineEngine:
         self._inject_snap: Dict[int, tuple] = {}    # mb -> (active, seqs)
                                                     # at decode injection
 
+        # ---- online-serving policy knobs -----------------------------------
+        # prefix caching shares fully-prefilled prompt blocks across
+        # requests (refcounted in the allocator); it rides on the chunked
+        # path — a prefix hit starts the chunk cursor mid-prompt, which
+        # the exact-length fallback cannot do
+        if prefix_cache and not self.chunked_prefill:
+            raise ValueError(
+                f"{cfg.name}: prefix_cache=True needs chunked prefill "
+                "(fully-paged archs, prefill_mode != 'exact') — a prefix "
+                "hit resumes prefill mid-prompt via the chunk cursor")
+        self.prefix_cache: Optional[kvc.PrefixCache] = \
+            kvc.PrefixCache(self.alloc) if prefix_cache else None
+        self.slo: Optional[SLOController] = \
+            SLOController(slo) if slo is not None else None
+
         self.queue: deque = deque()
         self.finished: List[SequenceState] = []
         self.stats = EngineStats()
@@ -276,6 +346,8 @@ class OfflineEngine:
                   wire_dtype: str = "fp32",
                   sample_fast_path: bool = True,
                   offload_async: bool = True,
+                  prefix_cache: bool = False,
+                  slo: Optional[SLOConfig] = None,
                   strict: Optional[bool] = None) -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
@@ -357,7 +429,8 @@ class OfflineEngine:
                   prefill_mode=prefill_mode, fault_plan=fault_plan,
                   transport=transport, schedule=schedule,
                   wire_dtype=wire_dtype, sample_fast_path=sample_fast_path,
-                  offload_async=offload_async, strict=strict)
+                  offload_async=offload_async, prefix_cache=prefix_cache,
+                  slo=slo, strict=strict)
         eng.schedule_choice = choice
         return eng
 
@@ -459,9 +532,15 @@ class OfflineEngine:
         backend.  ``seq``/``prefill_pos`` cursors are engine state and
         survive untouched, so no completed token is ever recomputed.
 
+        Offloaded global pools migrate with the rebuild: the old
+        backend's per-stage host stores are concatenated into full-period
+        arrays (``export_offload_state``, after the drain so the books
+        are stable) and re-split for the new stage count
+        (``import_offload_state``), so swapped-out parities replay
+        byte-identical through the fresh offloaders.
+
         Returns the planner's resharding plan.  Raises on the local
-        backend, and — until host-store migration lands — on a backend
-        whose offloaded global pools hold non-resident content.
+        backend.
         """
         from repro.distributed.elastic import MeshPlan
         from repro.serving.backend import PipelinedBackend
@@ -494,17 +573,6 @@ class OfflineEngine:
         reshard_plan = self._elastic.resharding_plan(self._mesh_plan,
                                                      new_plan)
 
-        offs = list(self.backend._stage_off)
-        if self.backend._epi_off is not None:
-            offs.append(self.backend._epi_off)
-        if any(o._host or any(v is not None for v in o.resident.values())
-               for o in offs):
-            raise NotImplementedError(
-                "reshard: offloaded global pools hold per-stage host "
-                "content keyed to the old stage split — host-store "
-                "migration is a follow-on (ROADMAP); reshard before the "
-                "offloader engages, or run without global pools")
-
         # (1) drain both planes: every in-flight tick completes and books
         # normally, so nothing is recomputed and recurrent/ring state in
         # the carried caches is consistent
@@ -519,6 +587,12 @@ class OfflineEngine:
             for res in self.backend.prefill_step(None):
                 self._apply_prefill_result(res)
         self._activate_ready()          # pipe empty -> nothing is busy
+
+        # offloaded global pools hold per-stage host content keyed to the
+        # OLD stage split: concatenate each microbatch's per-stage ranges
+        # into full-period host arrays now (pipe drained, caches stable),
+        # re-split for the new stage count after the rebuild
+        off_state = self.backend.export_offload_state()
 
         # (2)+(3) carry caches (host round-trip: the old arrays are
         # committed to the old pod mesh), rebuild on a fresh mesh
@@ -562,6 +636,10 @@ class OfflineEngine:
         # indices keep their absolute meaning across a reshard
         self.backend._decode_ticks, self.backend._prefill_ticks = old_ticks
         self.backend.caches = jax.tree.map(jnp.asarray, caches)
+        # replay the migrated host stores into the fresh offloaders (the
+        # carried caches already hold every RESIDENT parity's bytes; the
+        # import covers the swapped-out parities)
+        self.backend.import_offload_state(off_state)
 
         # (4) replay the device-wide page table; per-slot ring/recurrent
         # state rode along inside the cache pytree
@@ -615,6 +693,8 @@ class OfflineEngine:
         self.stats.prefill_time_s += tp2 - tp
         self.stats.decode_time_s += (tp - t0) + (t1 - tp2)
         self.stats.wall_time_s += t1 - t0
+        if self.slo is not None:
+            self.slo.observe_tick(t1 - t0)
         if self.auditor is not None:
             self.auditor.after_step()
         return True
@@ -684,11 +764,38 @@ class OfflineEngine:
         n_pages = -(-min(total_budget,
                          self.pool.max_pages_per_seq * self.pool.page_size)
                     // self.pool.page_size)
-        pages = self.alloc.allocate(slot, n_pages, global_pool=global_pool)
+        shared: List[int] = []
+        if self.prefix_cache is not None:
+            # adopt the longest cached full-page prompt prefix: refcounts
+            # bump, no re-prefill — the chunk cursor starts past it
+            shared = self.prefix_cache.match(seq.request.prompt)
+            if shared:
+                self.alloc.adopt(slot, shared)
+        try:
+            pages = self.alloc.allocate(slot, n_pages - len(shared),
+                                        global_pool=global_pool)
+        except MemoryError:
+            # pool pressure: evict cold cached prefixes and retry once
+            # before giving the caller its head-of-line retry
+            if self.prefix_cache is None or \
+                    not self.prefix_cache.evict(n_pages - len(shared)):
+                if shared:
+                    self.alloc.release(slot)
+                raise
+            try:
+                pages = self.alloc.allocate(slot, n_pages - len(shared),
+                                            global_pool=global_pool)
+            except MemoryError:
+                if shared:
+                    self.alloc.release(slot)
+                raise
         has_global = any(p >= self.pool.n_local_pages for p in pages)
         seq.global_parity = global_pool if has_global else None
         seq.slot = slot
-        seq.prefill_pos = 0
+        seq.prefill_pos = len(shared) * self.pool.page_size
+        if shared:
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += seq.prefill_pos
         seq.status = Status.PREFILLING
         seq.budget = min(sp.max_new_tokens,
                          self.pool.max_pages_per_seq * self.pool.page_size
@@ -702,11 +809,25 @@ class OfflineEngine:
         with it — ``StragglerMitigator.microbatch_weights`` are mean-1
         inverse EWMAs, and the minimum weight scales the per-tick token
         budget, floored at one chunk).  The chunk's device shapes stay
-        fixed at (prefill_rows, prefill_chunk); only fewer rows fill."""
-        if self.straggler is None or not self.straggler.stragglers():
+        fixed at (prefill_rows, prefill_chunk); only fewer rows fill.
+
+        The latency-SLO controller (when configured) composes on the same
+        budget: its fraction sheds prefill while smoothed tick time blows
+        the inter-token target, unless the oldest waiting request is at
+        TTFT risk.  The stricter of the two weights wins — a straggling
+        stage caps admission even when TTFT wants more prefill."""
+        w = 1.0
+        if self.straggler is not None and self.straggler.stragglers():
+            w = min(w, min(self.straggler.microbatch_weights()))
+        if self.slo is not None:
+            now = time.perf_counter()
+            waits = [now - s.submit_time for s in self.queue]
+            waits += [now - s.submit_time for s in self.prefilling
+                      if not s.generated]
+            w = min(w, self.slo.budget_frac(max(waits, default=0.0)))
+        if w >= 1.0:
             return self.prefill_rows
-        w_min = min(self.straggler.microbatch_weights())
-        budget = int(self.max_prefill_tokens_per_tick * min(1.0, w_min))
+        budget = int(self.max_prefill_tokens_per_tick * min(1.0, w))
         return max(1, min(self.prefill_rows, budget // self.prefill_chunk))
 
     def _build_chunk(self) -> Optional[PrefillChunk]:
@@ -805,6 +926,11 @@ class OfflineEngine:
         """The sequence's last chunk landed: sample its first token (same
         keying as every decode token) and queue it for activation."""
         self._sample_first_token(seq, seq.slot, logits_row)
+        if self.prefix_cache is not None:
+            # register this prompt's fully-written blocks for future
+            # sharers (existing entries win on a concurrent double-fill)
+            self.prefix_cache.insert(seq.request.prompt,
+                                     self.alloc.pages_of(seq.slot))
         self.prefilling.remove(seq)
         if not seq.is_done():               # finished at prefill (eos /
             self._pending_activation.append(seq)    # zero budget): reap
@@ -879,6 +1005,7 @@ class OfflineEngine:
             seq.logprobs = [float(first_lp[0])]
         # repro-audit: allow(host-sync) — first-token host booking, once per request at admission
         seq.generated.append(int(first_arr[0]))
+        seq.first_token_time = time.perf_counter()   # engine-side TTFT mark
         self.cur_pos[slot] = seq.prompt_len     # position of the first token
         self.stats.decode_tokens += 1
 
@@ -1015,6 +1142,11 @@ class OfflineEngine:
                 float(np.mean(lat_steps)) if lat_steps else 0.0,
             "mean_latency_s": float(np.mean(lat_s)) if lat_s else 0.0,
         }
+        if self.prefix_cache is not None:
+            rep["prefix_hits"] = self.stats.prefix_hits
+            rep["prefix_hit_tokens"] = self.stats.prefix_hit_tokens
+            rep["prefix_hit_rate"] = self.prefix_cache.hit_rate
+            rep["prefix_cache_pages"] = len(self.prefix_cache)
         tstats = self.backend.transport_stats()
         if tstats:
             rep["transport"] = tstats

@@ -54,7 +54,15 @@ class PageAllocator:
 
     Page 0 is reserved as a *scratch* page: released slots' page tables point
     at it, so the (masked, harmless) decode writes of inactive slots can
-    never corrupt pages that have been reallocated to live sequences."""
+    never corrupt pages that have been reallocated to live sequences.
+
+    Pages are **refcounted**: a page may be owned by several slots at once
+    (prefix caching shares fully-prefilled prompt blocks) and retained by
+    the :class:`PrefixCache` on top, so ``release`` *decrements* — a page
+    only returns to its free list when the last owner lets go.  Returning
+    a page that is already free, or releasing a slot that owns nothing,
+    raises: a silent double-free would eventually grant one page to two
+    live sequences."""
 
     def __init__(self, pool: PoolConfig):
         self.pool = pool
@@ -65,6 +73,9 @@ class PageAllocator:
             1: list(pool.global_range(1)),
         }
         self._seq_pages: Dict[int, List[int]] = {}
+        # page -> owner count (slots listing it + one per cache retain);
+        # a page is in _refs iff it is NOT on a free list
+        self._refs: Dict[int, int] = {}
 
     # -- queries ------------------------------------------------------------
 
@@ -76,6 +87,9 @@ class PageAllocator:
 
     def pages_of(self, slot: int) -> List[int]:
         return list(self._seq_pages.get(slot, ()))
+
+    def refcount(self, p: int) -> int:
+        return self._refs.get(p, 0)
 
     # -- allocation ---------------------------------------------------------
 
@@ -90,29 +104,87 @@ class PageAllocator:
                 self._free_global[global_pool]:
             got.append(self._free_global[global_pool].pop())
         if len(got) < n_pages:
-            for p in got:        # roll back
+            for p in got:        # roll back (never granted, refs never set)
                 self._give_back(p)
             raise MemoryError(
                 f"page pool exhausted: need {n_pages}, got {len(got)} "
                 f"(local free={self.free_local()}, "
                 f"global={ {i: self.free_global(i) for i in (0, 1)} })")
+        for p in got:
+            self._refs[p] = 1
         self._seq_pages.setdefault(slot, []).extend(got)
         return got
 
     def extend(self, slot: int, *, global_pool: Optional[int] = None) -> int:
         return self.allocate(slot, 1, global_pool=global_pool)[0]
 
+    def adopt(self, slot: int, pages: List[int]) -> None:
+        """Bind already-owned ``pages`` to ``slot`` as a *shared* prefix:
+        each page's refcount is incremented, never re-granted from a free
+        list.  Must run before ``allocate`` for the slot so the shared
+        pages head its table row (page ``i`` maps positions
+        ``[i*page_size, (i+1)*page_size)``)."""
+        if self._seq_pages.get(slot):
+            raise ValueError(
+                f"adopt: slot {slot} already owns pages "
+                f"{self._seq_pages[slot]} — shared prefix pages must come "
+                "first in the table row")
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(
+                    f"adopt: page {p} is not currently owned — a free "
+                    "page cannot be shared (stale prefix-cache entry?)")
+        for p in pages:
+            self._refs[p] += 1
+        self._seq_pages[slot] = list(pages)
+
+    def retain(self, p: int) -> None:
+        """Add a non-slot owner (the prefix cache) to an owned page."""
+        if p not in self._refs:
+            raise ValueError(f"retain: page {p} is not currently owned")
+        self._refs[p] += 1
+
+    def drop(self, p: int) -> bool:
+        """Release a ``retain`` reference; returns True when the page
+        actually went back to its free list (last owner)."""
+        return self._decref(p)
+
     def release(self, slot: int) -> None:
-        for p in self._seq_pages.pop(slot, ()):
-            self._give_back(p)
+        """Release every page ``slot`` owns (decrement — shared pages stay
+        live for their other owners).  Releasing a slot that owns nothing
+        raises: the engine frees exactly once per occupied slot, so a
+        second release is a bookkeeping bug, not a no-op."""
+        if slot not in self._seq_pages:
+            raise KeyError(
+                f"release: slot {slot} owns no pages (double release, or "
+                "a slot that was never allocated)")
+        for p in self._seq_pages.pop(slot):
+            self._decref(p)
+
+    def _decref(self, p: int) -> bool:
+        n = self._refs.get(p)
+        if n is None:
+            raise ValueError(
+                f"page {p} released but not owned (double free)")
+        if n > 1:
+            self._refs[p] = n - 1
+            return False
+        del self._refs[p]
+        self._give_back(p)
+        return True
 
     def _give_back(self, p: int) -> None:
         if p < self.pool.n_local_pages:
-            self._free_local.append(p)
+            target = self._free_local
         elif p in self.pool.global_range(0):
-            self._free_global[0].append(p)
+            target = self._free_global[0]
         else:
-            self._free_global[1].append(p)
+            target = self._free_global[1]
+        if p in target:
+            raise ValueError(
+                f"page {p} returned to the free list twice — a later "
+                "allocate would grant one page to two sequences")
+        target.append(p)
 
     # -- page table ---------------------------------------------------------
 
@@ -121,6 +193,126 @@ class PageAllocator:
         pages = self._seq_pages.get(slot, ())
         row[: len(pages)] = pages
         return row
+
+
+@dataclass
+class _PrefixEntry:
+    page: int
+    children: int = 0                 # longer cached prefixes extending this
+    last_use: int = 0                 # LRU clock (lookups + inserts)
+
+
+class PrefixCache:
+    """Prefix-block index over the paged KV pools (vLLM-style, host-side).
+
+    Requests sharing a system-prompt prefix hit the same pages instead of
+    re-prefilling: the index maps each *full-page* token prefix (the exact
+    token tuple, chain of ``page_size`` blocks) to the page holding its KV.
+    Paged attention KV at position ``t`` is a deterministic function of
+    ``tokens[:t+1]`` alone, so blocks written by different slots for the
+    same token prefix are interchangeable.
+
+    Only **local** pages are ever registered: global-pool content is
+    parity-swapped per microbatch by the §4.2 offloader, so a cross-slot
+    share spanning microbatches would be clobbered by the next swap.
+
+    Matches are capped at ``prompt_len - 1`` tokens — the final prompt
+    position must always be prefilled to produce the first-token logits.
+    Cached pages carry one ``PageAllocator.retain`` reference each; LRU
+    leaf eviction (``evict``) drops them when the pool runs dry."""
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self.page_size = alloc.pool.page_size
+        self.n_local_pages = alloc.pool.n_local_pages
+        self._entries: Dict[tuple, _PrefixEntry] = {}
+        self._clock = 0
+        self.hit_requests = 0
+        self.miss_requests = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def pages_retained(self) -> List[int]:
+        """Pages the cache holds a retain reference on (one per entry)."""
+        return [e.page for e in self._entries.values()]
+
+    def match(self, prompt: List[int]) -> List[int]:
+        """Pages covering the longest cached full-page prefix of
+        ``prompt`` (possibly empty), in table-row order."""
+        self._clock += 1
+        pages: List[int] = []
+        n_full = (len(prompt) - 1) // self.page_size
+        for i in range(n_full):
+            e = self._entries.get(tuple(prompt[: (i + 1) * self.page_size]))
+            if e is None:
+                break
+            e.last_use = self._clock
+            pages.append(e.page)
+        if pages:
+            self.hit_requests += 1
+            self.hit_tokens += len(pages) * self.page_size
+        else:
+            self.miss_requests += 1
+        return pages
+
+    def insert(self, prompt: List[int], pages: List[int]) -> int:
+        """Register a fully-prefilled sequence's prompt blocks (``pages``
+        in table-row order).  Existing entries win — two requests that
+        prefilled the same prefix concurrently keep the incumbent's page.
+        Returns the number of pages newly retained."""
+        self._clock += 1
+        added = 0
+        n_full = min((len(prompt) - 1) // self.page_size, len(pages))
+        parent: Optional[_PrefixEntry] = None
+        for i in range(n_full):
+            key = tuple(prompt[: (i + 1) * self.page_size])
+            e = self._entries.get(key)
+            if e is None:
+                p = pages[i]
+                if p >= self.n_local_pages:
+                    break       # global pages parity-swap per mb: unshareable
+                self.alloc.retain(p)
+                e = _PrefixEntry(page=p, last_use=self._clock)
+                self._entries[key] = e
+                if parent is not None:
+                    parent.children += 1
+                added += 1
+            else:
+                e.last_use = self._clock
+            parent = e
+        return added
+
+    def evict(self, n_pages: int) -> int:
+        """Drop LRU *leaf* entries until ``n_pages`` pages actually
+        returned to the free lists (entries whose pages are still shared
+        by live slots free nothing) or the cache is empty.  Returns the
+        number of pages freed."""
+        freed = 0
+        while freed < n_pages and self._entries:
+            key = min((k for k, e in self._entries.items()
+                       if e.children == 0),
+                      key=lambda k: self._entries[k].last_use)
+            e = self._entries.pop(key)
+            if len(key) > self.page_size:
+                parent = self._entries.get(key[:-self.page_size])
+                if parent is not None:
+                    parent.children -= 1
+            if self.alloc.drop(e.page):
+                freed += 1
+            self.evictions += 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every entry (shutdown / tests); returns pages freed."""
+        return self.evict(len(self._entries) + 1) if self._entries else 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_requests + self.miss_requests
+        return self.hit_requests / total if total else 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,16 @@ class EngineConfig:
     # lazy device future (D2H overlaps the next tick) instead of a
     # blocking numpy materialisation at the tick boundary
     offload_async: bool = True
+    # online serving: share fully-prefilled prompt blocks across requests
+    # with a common prefix (refcounted paged-KV sharing — a prefix hit
+    # adopts the cached pages and starts prefill past them).  Requires
+    # chunked prefill; local pages only (global pools parity-swap).
+    prefix_cache: bool = False
+    # latency-SLO admission shaping (repro.serving.engine.SLOConfig):
+    # sheds the per-tick prefill token budget while smoothed tick time
+    # exceeds the inter-token target, restores it when the oldest queued
+    # request nears the TTFT target.  None = no shaping.
+    slo: Optional[object] = None
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -165,6 +175,11 @@ class EngineConfig:
         if self.attn_pages_per_block < 0:
             raise ValueError("attn_pages_per_block must be >= 0 (0 = "
                              f"autotuned), got {self.attn_pages_per_block}")
+        if self.prefix_cache and self.prefill_mode == "exact":
+            raise ValueError(
+                "prefix_cache=True needs chunked prefill (a prefix hit "
+                "resumes prefill mid-prompt via the chunk cursor) — "
+                "prefill_mode='exact' cannot share prompt blocks")
 
     @classmethod
     def plan(cls, *, n_stages: Optional[int] = None,
@@ -181,6 +196,8 @@ class EngineConfig:
              transport: Optional[object] = None,
              schedule: str = "circular",
              wire_dtype: str = "fp32",
+             prefix_cache: bool = False,
+             slo: Optional[object] = None,
              strict: Optional[bool] = None) -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
@@ -220,7 +237,8 @@ class EngineConfig:
                    max_prefill_tokens_per_tick=max_prefill_tokens_per_tick,
                    prefill_mode=prefill_mode, fault_plan=fault_plan,
                    transport=transport, schedule=schedule,
-                   wire_dtype=wire_dtype, strict=strict,
+                   wire_dtype=wire_dtype, prefix_cache=prefix_cache,
+                   slo=slo, strict=strict,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, link_latencies=link_latencies,
@@ -245,7 +263,9 @@ class EngineConfig:
                 transport=self.transport, schedule=self.schedule,
                 wire_dtype=self.wire_dtype,
                 sample_fast_path=self.sample_fast_path,
-                offload_async=self.offload_async, strict=self.strict,
+                offload_async=self.offload_async,
+                prefix_cache=self.prefix_cache, slo=self.slo,
+                strict=self.strict,
                 **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
@@ -264,7 +284,9 @@ class EngineConfig:
             transport=self.transport, schedule=self.schedule,
             wire_dtype=self.wire_dtype,
             sample_fast_path=self.sample_fast_path,
-            offload_async=self.offload_async, strict=self.strict)
+            offload_async=self.offload_async,
+            prefix_cache=self.prefix_cache, slo=self.slo,
+            strict=self.strict)
 
 
 @dataclass
@@ -280,6 +302,7 @@ class RequestOutput:
     logprobs: Optional[List[float]] = None    # per token, if requested
     latency_steps: Optional[int] = None       # submit -> finish, engine steps
     latency_s: Optional[float] = None         # submit -> finish, wall clock
+    ttft_s: Optional[float] = None            # submit -> first token sampled
 
     @classmethod
     def from_seq(cls, seq: SequenceState) -> "RequestOutput":
@@ -294,7 +317,8 @@ class RequestOutput:
             status=seq.status.value,
             logprobs=list(seq.logprobs) if seq.logprobs is not None else None,
             latency_steps=seq.latency_steps,
-            latency_s=seq.latency_s)
+            latency_s=seq.latency_s,
+            ttft_s=seq.ttft_s)
 
 
 class LLM:
@@ -392,5 +416,18 @@ class LLM:
         return self.engine.throughput_report()
 
 
+def __getattr__(name):
+    # lazy re-exports so `from repro.serving.llm import OnlineLLM` works
+    # without importing threading machinery on the offline path
+    if name in ("OnlineLLM", "RequestStream", "StreamEvent"):
+        from repro.serving import online
+        return getattr(online, name)
+    if name == "SLOConfig":
+        from repro.serving.engine import SLOConfig
+        return SLOConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = ["LLM", "EngineConfig", "RequestOutput", "SamplingParams",
-           "FinishReason"]
+           "FinishReason", "OnlineLLM", "RequestStream", "StreamEvent",
+           "SLOConfig"]

@@ -70,11 +70,14 @@ class SequenceState:
     chunk_inflight: bool = False
     global_parity: Optional[int] = None       # global-pool parity of the
                                               # slot's pages (None=all-local)
-    # lifecycle accounting (engine steps + wall clock at submit/finish)
+    # lifecycle accounting (engine steps + wall clock at submit/finish;
+    # first_token_time stamps the engine-side TTFT mark — the moment the
+    # first token was sampled, not when a consumer observed it)
     submit_step: int = -1
     finish_step: int = -1
     submit_time: float = 0.0
     finish_time: float = 0.0
+    first_token_time: float = 0.0
 
     def __post_init__(self) -> None:
         if self.sampling is None:
@@ -123,6 +126,13 @@ class SequenceState:
             return None
         return self.finish_time - self.submit_time
 
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Engine-side time-to-first-token (None until sampled)."""
+        if self.first_token_time <= 0.0 or self.submit_time <= 0.0:
+            return None
+        return self.first_token_time - self.submit_time
+
 
 @dataclass
 class EngineStats:
@@ -148,6 +158,11 @@ class EngineStats:
     decode_ticks_lost: int = 0        # dropped decode ticks (re-injected)
     prefill_chunks_lost: int = 0      # dropped prefill chunks (re-emitted)
     reshards: int = 0                 # mid-run backend rebuilds
+    # prefix caching: admissions that adopted shared prompt blocks, and
+    # the prompt tokens those blocks covered (never re-prefilled —
+    # prefill_tokens counts only actually-computed tokens)
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:

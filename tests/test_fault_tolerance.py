@@ -25,8 +25,9 @@ from repro.serving.request import SamplingParams
 
 POOL = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
                   max_pages_per_seq=8)
-# reshard carries the cache pytree across backends; keep pools all-local
-# (offload host-store migration across stage splits is a ROADMAP item)
+# all-local pool for the fast reshard tests (no offload traffic to keep
+# them quick); engaged-offload migration is covered by
+# test_reshard_migrates_engaged_offload_host_store and RESHARD_SCRIPT
 LOCAL_POOL = PoolConfig(page_size=8, n_local_pages=48, n_global_pages=0,
                         max_pages_per_seq=8)
 
@@ -101,6 +102,30 @@ def test_dropped_ticks_recovered_bit_identical(rt):
     })
     assert_equivalent(runs, base="local")
     assert fp.pending() == 0 and len(fp.triggered) == 2
+
+
+def test_multi_fault_storm_recovered_bit_identical(rt):
+    """A fault STORM — back-to-back decode drops in one recovery window
+    (consecutive ticks, so the first re-injection is itself dropped)
+    plus a pair of prefill-chunk drops — still recovers bit-identical:
+    every lost tick is re-injected with the same tokens at the same
+    positions, no matter how many land together."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    prompts = random_prompts(cfg, 6, seed=11, lo=4, hi=16)
+    sps = mixed_sps(6)
+    fp = FaultPlan([FaultEvent("decode", 5, 0), FaultEvent("decode", 6, 0),
+                    FaultEvent("decode", 7, 0), FaultEvent("prefill", 1, 0),
+                    FaultEvent("prefill", 2, 0)])
+    common = dict(mb_size=2, num_microbatches=2, pool=POOL, offload=True,
+                  prefill_chunk=4, max_prefill_tokens_per_tick=8)
+    runs = golden_runs(cfg, params, rt, prompts, sps, {
+        "local": dict(backend="local", **common),
+        "stormed": dict(backend="pipelined", n_stages=1, fault_plan=fp,
+                        **common),
+    })
+    assert_equivalent(runs, base="local")
+    assert fp.pending() == 0 and len(fp.triggered) == 5
 
 
 def test_lost_tick_stats_and_reinjection(rt):
@@ -206,26 +231,51 @@ def test_reshard_rejects_local_backend_and_overdeep_pipe(rt):
         peng.reshard()
 
 
-def test_reshard_with_engaged_offload_raises(rt):
+def test_reshard_migrates_engaged_offload_host_store(rt):
     """Offloaded global pools hold per-stage host content keyed to the old
-    split — until migration lands, reshard refuses rather than silently
-    dropping KV."""
+    split: reshard concatenates the per-stage ranges into full-period
+    host arrays and re-splits them for the new stage count, so the
+    swapped-out parity replays byte-identical — no token recomputed,
+    outputs bit-identical to an undisturbed run."""
     cfg = tiny("yi-9b")
     params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
     from repro.core.offload import DoubleBufferOffloader
+    from repro.serving.request import Request
     pool = PoolConfig(page_size=8, n_local_pages=4, n_global_pages=16,
                       max_pages_per_seq=8)
-    eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=2,
-                        pool=pool, backend="pipelined", n_stages=1,
-                        prefill_chunk=4,
-                        offloader=DoubleBufferOffloader(pool, 2))
-    from repro.serving.request import Request
-    sp = SamplingParams(temperature=0.0, max_new_tokens=4)
-    eng.submit([Request(i, list(range(3, 10)), sp) for i in range(3)])
-    for _ in range(6):
-        eng.step()
-    with pytest.raises(NotImplementedError, match="offload"):
-        eng.reshard(n_stages=1)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=6)
+    prompts = [list(range(3 + i, 12 + i)) for i in range(3)]
+
+    def run(reshard_at=None):
+        eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=2,
+                            pool=pool, backend="pipelined", n_stages=1,
+                            prefill_chunk=4,
+                            offloader=DoubleBufferOffloader(pool, 2))
+        seqs = eng.submit([Request(i, p, sp)
+                           for i, p in enumerate(prompts)])
+        snap = {}
+        steps = 0
+        while eng.step():
+            steps += 1
+            if steps == reshard_at:
+                assert eng.backend.swap_count > 0, \
+                    "offloader never engaged — the drill tests nothing"
+                snap = {s.request.request_id: list(s.generated)
+                        for s in seqs}
+                eng.reshard(n_stages=1)
+            assert steps < 500
+        return ({s.request.request_id: tuple(s.generated) for s in seqs},
+                snap, eng)
+
+    ref, _, _ = run()
+    out, snap, eng = run(reshard_at=8)
+    assert eng.stats.reshards == 1
+    assert any(snap.values()), "reshard happened before any token"
+    for rid, toks in out.items():
+        pre = snap.get(rid, [])
+        assert list(toks[:len(pre)]) == pre, \
+            f"request {rid} re-generated tokens across reshard"
+    assert out == ref
 
 
 def test_reshard_mid_run_replays_state_single_device(rt):
@@ -351,12 +401,17 @@ from repro.serving.engine import OfflineEngine
 from repro.serving.kv_cache import PoolConfig
 from repro.serving.request import Request, SamplingParams
 
+from repro.core.offload import DoubleBufferOffloader
+
 rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
 cfg0 = get_arch("yi-9b")
 period = len(cfg0.block_pattern)
 cfg = reduced_config(cfg0, num_layers=4 * period + 1)   # >= 4 stages
 params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
-pool = PoolConfig(page_size=8, n_local_pages=48, n_global_pages=0,
+# small local pool + offloaded global pools: requests spill into the
+# parity-swapped pools, so each reshard must migrate per-stage host
+# stores across DIFFERENT layer splits (2 -> 4 -> 1 stages)
+pool = PoolConfig(page_size=8, n_local_pages=10, n_global_pages=16,
                   max_pages_per_seq=8)
 prompts = random_prompts(cfg, 8, seed=3, lo=3, hi=14)
 sp = SamplingParams(temperature=0.0, max_new_tokens=8)
@@ -364,7 +419,8 @@ sp = SamplingParams(temperature=0.0, max_new_tokens=8)
 def build(n_stages, fault_plan=None):
     eng = OfflineEngine(cfg, params, rt, mb_size=1, num_microbatches=4,
                         pool=pool, backend="pipelined", n_stages=n_stages,
-                        prefill_chunk=4, fault_plan=fault_plan)
+                        prefill_chunk=4, fault_plan=fault_plan,
+                        offloader=DoubleBufferOffloader(pool, 4))
     seqs = eng.submit([Request(i, p, sp) for i, p in enumerate(prompts)])
     return eng, seqs
 
@@ -383,6 +439,14 @@ for _ in range(12):
     assert eng.step()
 snap = {s.request.request_id: list(s.generated) for s in seqs}
 assert any(snap.values()), "nothing in flight at the first reshard"
+assert eng.backend.swap_count > 0, "offloader never engaged"
+# a drop DURING the reshard drain: target the stage actually holding an
+# in-flight payload at the very next decode tick — the drain flushes the
+# pipe, the lost tick books nothing, the round-robin re-injects it after
+# the rebuild
+occ = [s for s, e in enumerate(eng.backend._entries) if e is not None]
+assert occ, "pipe empty at the reshard point — drain-drop tests nothing"
+fp.events.append(FaultEvent("decode", eng.backend._decode_ticks, occ[0]))
 eng.reshard(n_stages=4)                       # a node joined
 assert eng.backend.n_stages == 4
 for _ in range(10):
@@ -397,9 +461,10 @@ for rid, toks in out.items():
     assert list(toks[:len(pre)]) == pre, (rid, pre, toks)
 assert out == ref, (out, ref)
 assert eng.stats.reshards == 2
-# the stage-0 drop certainly fired (tick 30 < total decode ticks) and the
-# whole plan is settled — triggered or pruned, never left dangling
-assert eng.stats.decode_ticks_lost >= 1, eng.stats
+# the stage-0 drop certainly fired (tick 30 < total decode ticks), the
+# drain-tick drop fired during the first reshard's flush, and the whole
+# plan is settled — triggered or pruned, never left dangling
+assert eng.stats.decode_ticks_lost >= 2, eng.stats
 assert fp.pending() == 0, fp.events
 print("RESHARD-OK")
 """

@@ -1,0 +1,309 @@
+"""Online serving front end: refcounted page sharing, the prefix-block
+index, SLO-shaped admission, and submit-while-running token streams —
+with bit-identity against offline ``LLM.generate`` on both backends."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from equivalence import assert_equivalent, mixed_sps, run_llm
+from repro.models import model as M
+from repro.serving.engine import SLOConfig, SLOController
+from repro.serving.kv_cache import PageAllocator, PoolConfig, PrefixCache
+from repro.serving.llm import LLM, EngineConfig
+from repro.serving.online import OnlineLLM
+from repro.serving.request import SamplingParams
+
+POOL = PoolConfig(page_size=4, n_local_pages=32, n_global_pages=0,
+                  max_pages_per_seq=8)
+OFF_POOL = PoolConfig(page_size=4, n_local_pages=24, n_global_pages=8,
+                      max_pages_per_seq=8)
+
+
+# ------------------------------------------------------ allocator refcounts ---
+
+def test_refcounted_sharing_and_release():
+    al = PageAllocator(PoolConfig(page_size=4, n_local_pages=8,
+                                  max_pages_per_seq=8))
+    base = al.allocate(0, 3)
+    assert all(al.refcount(p) == 1 for p in base)
+    # slot 1 adopts slot 0's pages as a shared prefix, then grows its own
+    al.adopt(1, base[:2])
+    al.allocate(1, 1)
+    assert al.refcount(base[0]) == 2 and al.refcount(base[2]) == 1
+    assert al.pages_of(1)[:2] == base[:2]       # shared pages head the row
+    free_before = al.free_local()
+    al.release(0)                               # shared pages stay live
+    assert al.free_local() == free_before + 1   # only the unshared page
+    assert al.refcount(base[0]) == 1
+    al.release(1)
+    assert al.free_local() == 7                 # page 0 stays scratch
+
+
+def test_double_release_and_double_free_raise():
+    al = PageAllocator(PoolConfig(page_size=4, n_local_pages=8,
+                                  max_pages_per_seq=8))
+    [p] = al.allocate(0, 1)
+    al.release(0)
+    with pytest.raises(KeyError, match="double release"):
+        al.release(0)
+    with pytest.raises(KeyError, match="owns no pages"):
+        al.release(5)                           # never allocated
+    with pytest.raises(ValueError, match="double free"):
+        al._decref(p)                           # page already on free list
+    with pytest.raises(ValueError, match="twice"):
+        al._give_back(p)
+
+
+def test_adopt_and_retain_validation():
+    al = PageAllocator(PoolConfig(page_size=4, n_local_pages=8,
+                                  max_pages_per_seq=8))
+    pages = al.allocate(0, 2)
+    free = next(p for p in range(1, 8) if p not in pages)
+    with pytest.raises(ValueError, match="not currently owned"):
+        al.adopt(1, [free])                     # free page is unshareable
+    with pytest.raises(ValueError, match="not currently owned"):
+        al.retain(free)
+    al.adopt(1, pages)
+    with pytest.raises(ValueError, match="already owns"):
+        al.adopt(1, pages)                      # prefix must head the row
+    # cache-style retain/drop: page survives both slots releasing
+    al.retain(pages[0])
+    al.release(0)
+    al.release(1)
+    assert al.refcount(pages[0]) == 1
+    assert al.drop(pages[0]) is True            # last owner -> freed
+    assert al.free_local() == 7
+
+
+# ----------------------------------------------------------- prefix cache ---
+
+def test_prefix_cache_match_insert_evict():
+    al = PageAllocator(PoolConfig(page_size=4, n_local_pages=16,
+                                  max_pages_per_seq=8))
+    pc = PrefixCache(al)
+    prompt = list(range(100, 116))              # 16 tokens = 4 pages
+    pages = al.allocate(0, 4)
+    # only FULL pages below prompt_len-1 are cacheable: 15//4 = 3 entries
+    assert pc.insert(prompt, pages) == 3
+    assert len(pc) == 3
+    assert all(al.refcount(p) == 2 for p in pages[:3])
+    assert al.refcount(pages[3]) == 1
+    # longest-prefix match, capped the same way; stats update
+    assert pc.match(prompt) == pages[:3]
+    assert pc.match(prompt[:9]) == pages[:2]    # (9-1)//4 = 2 full pages
+    assert pc.match([1, 2, 3, 4, 5]) == []      # different first block
+    assert pc.hit_requests == 2 and pc.miss_requests == 1
+    assert pc.hit_tokens == 3 * 4 + 2 * 4
+    # re-inserting the same prefix keeps the incumbent pages
+    other = al.allocate(1, 3)
+    assert pc.insert(prompt[:13], other) == 0
+    al.release(1)
+    # eviction only counts pages actually freed: with slot 0 still owning
+    # them, dropping every entry frees nothing
+    al.release(0)
+    assert pc.evict(1) == 1                     # LRU leaf goes first
+    assert len(pc) == 2
+    assert pc.clear() == 2
+    assert al.free_local() == 15                # everything back
+
+
+def test_prefix_cache_rejects_global_pages():
+    al = PageAllocator(PoolConfig(page_size=4, n_local_pages=4,
+                                  n_global_pages=4, max_pages_per_seq=8))
+    pc = PrefixCache(al)
+    pages = al.allocate(0, 5, global_pool=0)    # 3 local + 2 global
+    prompt = list(range(21))                    # 5 full pages worth
+    # insert stops at the first global page (parity-swapped content)
+    assert pc.insert(prompt, pages) == 3
+    assert all(p < 4 for p in (e for e in pc.pages_retained()))
+
+
+# ------------------------------------------------------------ SLO shaping ---
+
+def test_slo_controller_budget_shaping():
+    with pytest.raises(ValueError, match="floor_frac"):
+        SLOController(SLOConfig(floor_frac=0.0))
+    with pytest.raises(ValueError, match=">= 0"):
+        SLOController(SLOConfig(ttft_target_s=-1.0))
+    # no targets: never sheds
+    c = SLOController(SLOConfig())
+    c.observe_tick(10.0)
+    assert c.budget_frac(100.0) == 1.0
+    # ITL above target: budget shrinks proportionally, floored
+    c = SLOController(SLOConfig(itl_target_s=0.1, floor_frac=0.25,
+                                ewma_alpha=1.0))
+    c.observe_tick(0.05)
+    assert c.budget_frac(0.0) == 1.0            # under target: full budget
+    c.observe_tick(0.2)
+    assert c.budget_frac(0.0) == pytest.approx(0.5)
+    c.observe_tick(10.0)
+    assert c.budget_frac(0.0) == 0.25           # floored, never starves
+    # TTFT override: an old-enough waiter restores the full budget
+    c = SLOController(SLOConfig(ttft_target_s=1.0, itl_target_s=0.1,
+                                ewma_alpha=1.0))
+    c.observe_tick(10.0)
+    assert c.budget_frac(0.1) < 1.0
+    assert c.budget_frac(0.5) == 1.0
+
+
+def test_engine_config_gates_prefix_cache():
+    with pytest.raises(ValueError, match="chunked"):
+        EngineConfig(prefix_cache=True, prefill_mode="exact")
+
+
+# ----------------------------------------------- engine-level prefix hits ---
+
+def _llm(cfg, params, rt, *, prefix_cache=False, pool=POOL, **kw):
+    base = dict(mb_size=2, num_microbatches=2, pool=pool, offload=False,
+                prefill_chunk=4, max_prefill_tokens_per_tick=8,
+                prefix_cache=prefix_cache)
+    base.update(kw)
+    return LLM(cfg, params=params, rt=rt, config=EngineConfig(**base))
+
+
+def test_prefix_hits_share_blocks_and_skip_prefill(rt):
+    """The second request sharing a system prompt adopts the first's
+    pages: zero shared tokens re-prefilled, identical tokens to a
+    cache-less engine, refcounts drop to cache-only after release."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    system = list(range(50, 62))                # 12 tokens = 3 full pages
+    p1, p2 = system + [7, 8, 9, 10], system + [11, 12, 13]
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4)
+
+    llm = _llm(cfg, params, rt, prefix_cache=True)
+    eng = llm.engine
+    [o1] = llm.generate([p1], sp)
+    assert eng.stats.prefix_hits == 0           # cold cache
+    cached = eng.prefix_cache.pages_retained()
+    assert len(cached) == 3
+    assert all(eng.alloc.refcount(p) == 1 for p in cached)  # cache-only
+
+    [o2] = llm.generate([p2], sp)
+    assert eng.stats.prefix_hits == 1
+    assert eng.stats.prefix_hit_tokens == 12    # the whole system prompt
+    # computed prefill = everything submitted minus the shared blocks
+    assert eng.stats.prefill_tokens == len(p1) + len(p2) - 12
+    # released: refcounts are back to cache-only, nothing leaked
+    assert all(eng.alloc.refcount(p) == 1 for p in cached)
+    assert eng.prefix_cache.hit_rate == 0.5
+
+    # bit-identity against a cache-less engine (greedy: id-independent)
+    ref = _llm(cfg, params, rt, prefix_cache=False)
+    [r1] = ref.generate([p1], sp)
+    [r2] = ref.generate([p2], sp)
+    assert o1.token_ids == r1.token_ids
+    assert o2.token_ids == r2.token_ids
+
+    # clearing the cache returns every page: free list back to full
+    eng.prefix_cache.clear()
+    assert eng.alloc.free_local() == POOL.n_local_pages - 1
+
+
+def test_prefix_cache_evicts_under_pool_pressure(rt):
+    """When the pool runs dry, admission evicts LRU cached blocks instead
+    of failing the allocate."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    small = PoolConfig(page_size=4, n_local_pages=8, max_pages_per_seq=8)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=2)
+    llm = _llm(cfg, params, rt, prefix_cache=True, pool=small,
+               mb_size=1, num_microbatches=1)
+    eng = llm.engine
+    # two disjoint prompts fill the cache; the third needs eviction
+    llm.generate([list(range(100, 112))], sp)
+    llm.generate([list(range(200, 212))], sp)
+    assert len(eng.prefix_cache) > 0
+    llm.generate([list(range(300, 314))], sp)   # forces eviction, succeeds
+    assert eng.prefix_cache.evictions > 0
+
+
+# ------------------------------------------------------- streaming online ---
+
+def test_stream_delivers_before_later_submission_finishes(rt):
+    """Submit-while-running: the first request's tokens arrive while a
+    second submission is still queued/prefilling, and both finish with
+    offline-identical streams."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    p1, p2 = list(range(40, 52)), list(range(60, 70))
+    sp = SamplingParams(temperature=0.0, max_new_tokens=5)
+
+    online = OnlineLLM(llm=_llm(cfg, params, rt))
+    s1 = online.submit(p1, sp)
+    ev = s1.next_event()                        # cooperative: steps inline
+    assert ev is not None and ev.index == 0
+    s2 = online.submit(p2, sp)                  # joins the LIVE loop
+    assert not s2.finished
+    ev2 = s1.next_event()                       # first stream keeps flowing
+    assert ev2 is not None and ev2.index == 1
+    assert s1.tokens() == [ev.token, ev2.token]
+    out1, out2 = s1.result(), s2.result()
+    assert out1.finished and out2.finished
+    assert s1.ttft_s is not None and s1.ttft_s > 0
+    assert len(s1.inter_token_s()) == len(out1.token_ids) - 1
+    # the last event carries the finish flag + reason
+    assert out1.finish_reason == "length"
+
+    # offline reference with the same (request_id, prompt) assignment
+    ref = _llm(cfg, params, rt).generate([p1, p2], sp)
+    assert out1.token_ids == ref[0].token_ids
+    assert out2.token_ids == ref[1].token_ids
+
+
+def test_threaded_pump_streams_and_closes(rt):
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4)
+    with OnlineLLM(llm=_llm(cfg, params, rt)).start() as online:
+        s = online.submit(list(range(30, 40)), sp)
+        out = s.result()                        # blocks on the pump's cv
+    assert out.finished and len(out.token_ids) == 4
+    ref = _llm(cfg, params, rt).generate([list(range(30, 40))], sp)
+    assert out.token_ids == ref[0].token_ids
+
+
+def _run_online(cfg, params, rt, prompts, sps, **config_kw):
+    """Online counterpart of equivalence.run_llm: submit everything into
+    the live loop (ids follow submission order), cooperative drain."""
+    online = OnlineLLM(llm=LLM(cfg, params=params, rt=rt,
+                               config=EngineConfig(**config_kw)))
+    streams = [online.submit(p, sp) for p, sp in zip(prompts, sps)]
+    outs = [s.result() for s in streams]
+    assert all(o.finished for o in outs)
+    return {o.request_id: (tuple(o.token_ids), o.finish_reason)
+            for o in outs}
+
+
+@pytest.mark.parametrize("backend", ["local", "pipelined"])
+def test_online_bit_identical_to_offline(rt, backend):
+    """Acceptance: streamed online outputs == offline LLM.generate for
+    the same (seed, request_id) set — mixed sampling policies, with and
+    without prefix caching, on both backends (shared 12-token system
+    prompt so the cached run actually shares blocks)."""
+    cfg = tiny("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    rng = np.random.RandomState(5)
+    system = list(rng.randint(1, cfg.vocab_size, 12))
+    prompts = [system + list(rng.randint(1, cfg.vocab_size,
+                                         rng.randint(3, 10)))
+               for _ in range(5)]
+    sps = mixed_sps(5, max_new=4)
+    common = dict(mb_size=2, num_microbatches=2, pool=OFF_POOL,
+                  offload=True, prefill_chunk=4,
+                  max_prefill_tokens_per_tick=8, backend=backend,
+                  n_stages=1)
+    offline, _ = run_llm(cfg, params, rt, prompts, sps, **common)
+    runs = {
+        "offline": offline,
+        "online": _run_online(cfg, params, rt, prompts, sps, **common),
+        "online_prefix": _run_online(cfg, params, rt, prompts, sps,
+                                     prefix_cache=True, **common),
+        "online_slo": _run_online(
+            cfg, params, rt, prompts, sps,
+            slo=SLOConfig(ttft_target_s=0.5, itl_target_s=0.005),
+            **common),
+    }
+    assert_equivalent(runs, base="offline")
