@@ -420,13 +420,81 @@ def _sampling_epilogue(rows, quick: bool):
                  "t_sorted_us": out["sorted"] * 1e6, "ratio": ratio})
 
 
+def _tracing_overhead(rows, quick: bool):
+    """Flight-recorder overhead A/B: the decode-heavy workload with
+    ``EngineConfig(trace=...)`` off vs on, same engine build otherwise.
+    The recorder only appends host scalars the engine already holds
+    (the obs-hot-path lint rule enforces that shape), so tracing must be
+    near-free: the ``ratio`` (on/off decode tok/s, best-of-2 per arm) is
+    gated at >= 0.95 by benchmarks/check_regression.py — an in-bench A/B,
+    no baseline or machine margin involved.  The trace-on run's timeline
+    is exported to ``bench_timeline.json`` and schema-validated here (CI
+    re-checks the artifact with ``python -m repro.obs.timeline
+    --check``)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import get_arch, reduced_config
+    from repro.models import model as M
+    from repro.models.common import Runtime
+    from repro.obs.timeline import validate_chrome_trace, write_chrome_trace
+    from repro.serving.kv_cache import PoolConfig
+    from repro.serving.llm import LLM, EngineConfig, SamplingParams
+
+    rt = Runtime(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    cfg = reduced_config(get_arch("yi-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), rt)
+    pool = PoolConfig(page_size=8, n_local_pages=32, n_global_pages=8,
+                      max_pages_per_seq=8)
+    n_req = 6 if quick else 12
+    max_new = 16 if quick else 24
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new)
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, cfg.vocab_size, 8)) for _ in range(n_req)]
+
+    def decode_tps(trace: bool):
+        llm = LLM(cfg, params=params, rt=rt, config=EngineConfig(
+            mb_size=2, num_microbatches=2, pool=pool, offload=True,
+            backend="local", prefill_chunk=16,
+            max_prefill_tokens_per_tick=32, trace=trace))
+        llm.generate(prompts, sp, max_steps=5000)       # warmup pass
+        best = 0.0
+        for _ in range(2):                              # best-of-2 per arm
+            stats = llm.engine.stats
+            warm = (stats.decode_tokens, stats.decode_time_s)
+            llm.generate(prompts, sp, max_steps=5000)
+            stats = llm.engine.stats
+            best = max(best, (stats.decode_tokens - warm[0]) /
+                       max(stats.decode_time_s - warm[1], 1e-9))
+        return best, llm.engine
+
+    off_tps, _ = decode_tps(False)
+    on_tps, eng = decode_tps(True)
+    ratio = on_tps / max(off_tps, 1e-9)
+    trace = write_chrome_trace(eng.recorder, "bench_timeline.json")
+    errs = validate_chrome_trace(trace)
+    assert not errs, f"trace-on timeline failed schema check: {errs[:3]}"
+    print(f"\n-- tracing_overhead (decode-heavy, trace off vs on) --\n"
+          f"  trace off {off_tps:8.1f} decode tok/s\n"
+          f"  trace on  {on_tps:8.1f} decode tok/s   "
+          f"({ratio:.3f}x — gate floor 0.95)\n"
+          f"  timeline: {len(trace['traceEvents'])} events "
+          f"({len(eng.recorder.events)} recorded, "
+          f"{eng.recorder.dropped} dropped) -> bench_timeline.json")
+    rows.append({"bench": "tracing_overhead", "policy": "flight_recorder",
+                 "decode_tps_off": off_tps, "decode_tps_on": on_tps,
+                 "ratio": ratio, "events": len(trace["traceEvents"])})
+
+
 def run(quick: bool = False, workload: str = "all"):
     """``workload``: "all" (both engine workloads + Table 4), "decode" /
     "prefill_heavy" (one measured engine workload, no simulator pass),
     "online" (the Poisson online-serving workload through ``OnlineLLM``
-    with prefix caching), or "latency_curve" (throughput-vs-link-latency
+    with prefix caching), "latency_curve" (throughput-vs-link-latency
     on the real engine over simulated WAN links, cross-checked against
-    the DES)."""
+    the DES), or "tracing" (the flight-recorder overhead A/B +
+    ``bench_timeline.json`` export)."""
     rows = []
     if workload == "latency_curve":
         _latency_curve(rows, quick)
@@ -434,10 +502,14 @@ def run(quick: bool = False, workload: str = "all"):
     if workload == "online":
         _online_serving(rows, quick)
         return rows
+    if workload == "tracing":
+        _tracing_overhead(rows, quick)
+        return rows
     _engine_backends(rows, quick, workload)
     _sampling_epilogue(rows, quick)
     if workload != "all":
         return rows
+    _tracing_overhead(rows, quick)
     _online_serving(rows, quick)
     _latency_curve(rows, quick)         # virtual clock — CPU-cheap
     res = table4(sim_seconds=200 if quick else 400,

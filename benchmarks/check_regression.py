@@ -18,11 +18,13 @@ Three gated workloads:
 
 Absolute floors ride along (``ABS_GATES``): the fused-sampling
 speedup (``sampling_fast.ratio`` >= 1.15), the async-offload overlap
-(``offload_overlap.hide_frac`` >= 0.80), and the online-serving
+(``offload_overlap.hide_frac`` >= 0.80), the online-serving
 prefix-cache correctness bit (``online_serving.prefix_exact`` == 1.0:
 zero shared-prefix recompute + streamed tokens bit-identical to offline
 ``LLM.generate``; its TTFT/ITL percentiles print as informational
-cells).  These compare the new run
+cells), and the flight-recorder overhead
+(``tracing_overhead.ratio`` >= 0.95: decode tok/s with tracing on vs
+off on the same build).  These compare the new run
 against *itself* (each row is an in-bench A/B), so they need no baseline
 and no machine margin; they skip with [INFO] when the producing bench
 didn't run.  Measured ``kernel_roofline`` rows are printed as
@@ -81,6 +83,11 @@ ABS_GATES = (
     # to offline LLM.generate — a correctness bit, so the floor is exact
     ("online_serving", "prefix_exact", 1.0,
      "prefix-cache zero-recompute + offline bit-identity"),
+    # flight-recorder overhead (PR 11): decode tok/s with tracing on vs
+    # off on the same build — the recorder only appends host scalars the
+    # engine already holds, so the A/B ratio must stay near 1
+    ("tracing_overhead", "ratio", 0.95,
+     "decode tok/s with tracing on vs off"),
 )
 
 

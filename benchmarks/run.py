@@ -26,7 +26,7 @@ def main() -> None:
                          "snapshot unless asked to)")
     ap.add_argument("--workload", default="all",
                     choices=["all", "decode", "prefill_heavy", "online",
-                             "latency_curve", "roofline"],
+                             "latency_curve", "tracing", "roofline"],
                     help="throughput bench workload: 'decode' / "
                          "'prefill_heavy' run just that measured engine "
                          "workload (implies --only throughput, no "
@@ -36,6 +36,9 @@ def main() -> None:
                          "prefix-hit correctness); 'latency_curve' sweeps "
                          "simulated link latency on the real engine "
                          "(virtual clock, circular vs round-flush); "
+                         "'tracing' runs the flight-recorder overhead "
+                         "A/B (trace on vs off, gated >= 0.95x) and "
+                         "exports bench_timeline.json; "
                          "'roofline' runs just the roofline report "
                          "incl. the measured per-kernel "
                          "achieved-vs-peak rows (implies --only "

@@ -10,6 +10,12 @@ are bit-identical in all three, while the virtual clock shows the
 circular schedule hiding the link latency and round-flush paying it
 every token round.
 
+The circular WAN run records a flight-recorder trace and exports it as
+``networked_serving_trace.json`` — drop the file into
+https://ui.perfetto.dev to see the schedule on both clocks (engine
+phases on the wall clock, stage busy windows + link transfers + stalls
+on the transport's virtual clock).
+
     PYTHONPATH=src python examples/networked_serving.py
 """
 
@@ -20,6 +26,7 @@ from repro.core.scheduler import optimal_microbatches
 from repro.distributed.transport import (DeploymentPlan,
                                          SimulatedLinkTransport)
 from repro.framework.registry import Registry
+from repro.obs.timeline import write_chrome_trace
 from repro.serving.kv_cache import PoolConfig
 from repro.serving.llm import LLM, EngineConfig, SamplingParams
 
@@ -51,25 +58,33 @@ def main():
     sps = [SamplingParams(temperature=0.0 if i % 2 == 0 else 0.8,
                           max_new_tokens=12) for i in range(n_star)]
 
-    def serve(label, n_b, schedule, transport, wire_dtype="fp32"):
+    def serve(label, n_b, schedule, transport, wire_dtype="fp32",
+              trace=False):
         llm = LLM(cfg, config=EngineConfig(
             backend="pipelined", n_stages=1, mb_size=1,
             num_microbatches=n_b, pool=pool, offload=False,
             transport=transport, schedule=schedule, prefill_chunk=8,
-            wire_dtype=wire_dtype))
+            wire_dtype=wire_dtype, trace=trace))
         outs = llm.generate(prompts, sps)
         rep = llm.stats()
         vtps = rep.get("virtual_decode_tok_per_s")
         print(f"  {label:22s} N_B={n_b:2d} "
               + (f"{vtps:7.1f} tok/s on the virtual clock"
                  if vtps else "   (no clock: in-process links)"))
+        if trace:
+            t = write_chrome_trace(llm.engine.recorder,
+                                   "networked_serving_trace.json")
+            print(f"  ^ timeline: {len(t['traceEvents'])} events -> "
+                  "networked_serving_trace.json "
+                  "(open in https://ui.perfetto.dev)")
         return [tuple(o.token_ids) for o in outs], vtps
 
     print(f"\nserving over max link {L * 1000:.0f}ms "
           f"(virtual T_S={T * 1000:.0f}ms):")
     base, _ = serve("in-process", n_star, "circular", None)
     links = lambda: SimulatedLinkTransport.uniform(1, L, stage_time_s=T)
-    circ, v_c = serve("simulated circular", n_star, "circular", links())
+    circ, v_c = serve("simulated circular", n_star, "circular", links(),
+                      trace=True)
     rf, v_rf = serve("simulated round-flush", 1, "round_flush", links())
 
     assert circ == base and rf == base, "transports must not change tokens"

@@ -20,6 +20,16 @@ serialises the D2H behind the tick and re-opens the very stall the
 offloader exists to hide.  The deliberate sync fallback
 (``async_swap=False``) carries a reasoned suppression.
 
+**obs-hot-path** — flight-recorder discipline for ``repro.obs``: a
+recording call (any dotted call routed through a recorder name —
+``self.recorder.span(...)``, ``rec.link_send(...)``; ``obs_roots`` in
+config) is flagged inside a tick-jit body (the recorder is host-side
+only — a call under tracing either fails or bakes one trace's stamps
+into the compiled graph), and, anywhere in the reachable hot set, when
+an argument references a *device-tracked* value — recording must read
+only host scalars the engine already materialised, or it re-opens the
+very sync the flight recorder is designed never to add.
+
 **retrace hazards** —
   * ``retrace-jit``: ``jax.jit`` / ``shard_map`` constructed inside a
     hot-path function (recompiles or re-caches per call);
@@ -97,9 +107,14 @@ DEFAULT_OFFLOAD_WINDOWS = [
     "core.offload:DoubleBufferOffloader._stage_out",
 ]
 
-RULES = ("host-sync", "offload-sync", "retrace-jit", "retrace-branch",
-         "retrace-nonhashable", "prng-reuse", "prng-fold-drop",
-         "bad-suppression", "unused-suppression")
+# names a flight-recorder handle travels under: a call whose dotted path
+# routes through one of these (``self.recorder.span``, ``rec.fault``) is
+# an obs recording call for the obs-hot-path pass
+DEFAULT_OBS_ROOTS = ["recorder", "rec"]
+
+RULES = ("host-sync", "offload-sync", "obs-hot-path", "retrace-jit",
+         "retrace-branch", "retrace-nonhashable", "prng-reuse",
+         "prng-fold-drop", "bad-suppression", "unused-suppression")
 
 # calls that force a device→host sync wherever they appear in the hot set
 ALWAYS_SYNC = {"jax.device_get", "jax.block_until_ready"}
@@ -138,6 +153,8 @@ class AuditConfig:
                                      list(DEFAULT_DEVICE_PARAMS))
     offload_windows: List[str] = field(default_factory=lambda:
                                        list(DEFAULT_OFFLOAD_WINDOWS))
+    obs_roots: List[str] = field(default_factory=lambda:
+                                 list(DEFAULT_OBS_ROOTS))
 
 
 def _parse_toml_section(text: str, section: str) -> Dict[str, List[str]]:
@@ -191,6 +208,8 @@ def load_config(start: Path) -> AuditConfig:
                 cfg.device_params = sect["device_params"]
             if sect.get("offload_windows"):
                 cfg.offload_windows = sect["offload_windows"]
+            if sect.get("obs_roots"):
+                cfg.obs_roots = sect["obs_roots"]
             break
     return cfg
 
@@ -554,6 +573,64 @@ def _offload_sync_pass(files: Sequence[FileIndex],
 
 
 # ---------------------------------------------------------------------------
+# Pass 1c: obs-hot-path detector
+# ---------------------------------------------------------------------------
+
+
+def _obs_pass(files: Sequence[FileIndex], cfg: AuditConfig,
+              reachable: Set[str]) -> List[Violation]:
+    """Flight-recorder discipline (``repro.obs``).  A recording call is
+    any dotted call whose path routes through an ``obs_roots`` name
+    (``self.recorder.span``, ``rec.link_send``).  Two failure modes:
+
+    * inside a tick-jit body (``traced_fns``) *every* recording call is
+      flagged — the recorder is host-side; under tracing the call either
+      fails or bakes one trace's stamps into the compiled graph;
+    * in a reachable hot-path function, a recording call whose arguments
+      reference a device-tracked value is flagged — materialising it for
+      the trace adds the very device→host sync the recorder's contract
+      ("record only values the engine already holds") forbids.
+    """
+    out: List[Violation] = []
+    roots = set(cfg.obs_roots)
+
+    def _is_obs(name: str) -> bool:
+        parts = name.split(".")
+        # the final component is the method; any earlier component being
+        # a recorder name makes this a recording call
+        return len(parts) >= 2 and any(p in roots for p in parts[:-1])
+
+    for fi in files:
+        for fn in fi.funcs:
+            in_jit = any(_match_spec(fn, t) for t in cfg.traced_fns)
+            if not in_jit and fn.full not in reachable:
+                continue
+            tracked: Optional[Set[str]] = None
+            for name, call in _calls_of(fn):
+                if not _is_obs(name):
+                    continue
+                if in_jit:
+                    out.append(Violation(
+                        "obs-hot-path", fi.path, call.lineno,
+                        f"{fn.qual}: recording call `{name}` inside a "
+                        "tick-jit body — the flight recorder is "
+                        "host-side only; record after the jit returns"))
+                    continue
+                if tracked is None:     # computed once per function
+                    seed = {p for p in _pos_params(fn.node)
+                            if p in cfg.device_params}
+                    tracked = _tracked_names(fn.node, seed)
+                vals = [*call.args, *(k.value for k in call.keywords)]
+                if any(_refs_tracked(a, tracked) for a in vals):
+                    out.append(Violation(
+                        "obs-hot-path", fi.path, call.lineno,
+                        f"{fn.qual}: recording call `{name}` "
+                        "materialises a traced/device value — record "
+                        "only host scalars the engine already holds"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Pass 2: retrace hazards
 # ---------------------------------------------------------------------------
 
@@ -779,6 +856,7 @@ def run_lint(paths: Sequence[Path], config: Optional[AuditConfig] = None,
     reachable = reachable_functions(files, cfg.hot_roots)
     violations += _host_sync_pass(files, cfg, reachable)
     violations += _offload_sync_pass(files, cfg)
+    violations += _obs_pass(files, cfg, reachable)
     violations += _retrace_pass(files, cfg, reachable)
     violations += _prng_pass(files)
     if rules:

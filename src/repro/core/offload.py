@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Union
@@ -156,6 +157,9 @@ class DoubleBufferOffloader:
         self._host_sharding = None        # armed by place_host_store (TPU)
         self.swap_count = 0
         self.bytes_swapped = 0
+        # flight recorder (set by the backend when tracing is on): swap
+        # dispatches and swap-in wait windows are recorded host-side
+        self.recorder = None
 
     # -- internal: per-layer global slices ---------------------------------
 
@@ -174,12 +178,21 @@ class DoubleBufferOffloader:
         out_mb = self.resident[parity]
         sl = global_slice(self.pool, parity)
         layers = list(self._paged_layers(caches))
+        rec = self.recorder
         if out_mb is not None:
             self._host[out_mb] = self._dispatch_stage_out(layers, sl)
+            if rec is not None:
+                rec.offload_swap_out(out_mb, time.perf_counter(),
+                                     self.async_swap)
 
         incoming = self._host.pop(mb, None)
         if isinstance(incoming, Future):
+            # the wait window: the part of the staged copy the
+            # double-buffer failed to hide under the previous tick
+            t0 = time.perf_counter()
             incoming = incoming.result()
+            if rec is not None:
+                rec.offload_swap_in(mb, t0, time.perf_counter())
         if incoming is None and out_mb is not None:
             # first touch for this microbatch while the pool holds another
             # one's content: zero-fill (hygiene — stale KV is masked by

@@ -119,6 +119,16 @@ class Transport(abc.ABC):
     stages' occupancy and the payload size crossing each boundary."""
 
     name: str = "abstract"
+    recorder = None         # repro.obs.trace.TraceRecorder, or None
+
+    def set_recorder(self, recorder) -> "Transport":
+        """Attach a flight recorder (``repro.obs.trace.TraceRecorder``).
+        Recording transports log link sends and per-tick stalls at the
+        exact sites where their books accumulate, so the recorded
+        ledger reconciles bitwise with ``stats()``.  The no-op paths
+        keep the reference but record nothing (no books, no clock)."""
+        self.recorder = recorder
+        return self
 
     @abc.abstractmethod
     def bind(self, n_stages: int) -> "Transport":
@@ -240,16 +250,19 @@ class SimulatedLinkTransport(Transport):
         fresh = SimulatedLinkTransport(
             links, stage_time_s=self.stage_time_s, seed=self.seed,
             return_bytes=self.return_bytes).bind(n_stages)
-        # accounting continuity across the rebuild
+        # accounting continuity across the rebuild (the recorder rides
+        # along: a reshard must not cut the flight recording)
         fresh.clock.now = self.clock.now
         fresh.wire_bytes, fresh.sends = self.wire_bytes, self.sends
         fresh.stall_s = self.stall_s
+        fresh.recorder = self.recorder
         return fresh
 
     def tick(self, occupied, nbytes, compute_s, inject_t=0.0,
              plane="decode") -> TickObs:
         n = len(self.links)
         assert self._done is not None, "tick() before bind()"
+        rec = self.recorder
         occ = np.asarray(occupied, bool)
         stalls = np.zeros((n,))
         done = self._done
@@ -267,11 +280,16 @@ class SimulatedLinkTransport(Transport):
             start = max(done[s], arr[s])
             stalls[s] = max(0.0, arr[s] - done[s])
             done[s] = start + ts
+            if rec is not None:
+                rec.stage_busy(plane, s, float(start), float(done[s]))
             if s != n - 1:                  # ship downstream for next tick
-                new_arrival[s + 1] = done[s] + self.links[s].delay(nbytes,
-                                                                   rng)
+                t_arr = done[s] + self.links[s].delay(nbytes, rng)
+                new_arrival[s + 1] = t_arr
                 self.wire_bytes += nbytes
                 self.sends += 1
+                if rec is not None:         # the ledger event: exactly the
+                    rec.link_send(plane, s, nbytes,  # bytes booked above
+                                  float(done[s]), float(t_arr))
         # stage 0's next input comes from the engine, so the ring's last
         # link carries the drained *return* payload instead
         drain_done = float(done[n - 1]) if occ[n - 1] else 0.0
@@ -281,10 +299,18 @@ class SimulatedLinkTransport(Transport):
                 self.return_bytes, rng)
             self.wire_bytes += self.return_bytes
             self.sends += 1
+            if rec is not None:
+                rec.link_send(plane, n - 1, self.return_bytes,
+                              drain_done, return_ready, return_trip=True)
         self._arrival[plane] = new_arrival
-        self.stall_s += float(stalls.sum())
+        tick_stall = float(stalls.sum())
+        self.stall_s += tick_stall
         if occ.any():
             self.clock.advance_to(float(done[occ].max()))
+        if rec is not None:
+            # the same float the book accumulated, one entry per tick in
+            # call order: a left-to-right sum reproduces stall_s bitwise
+            rec.tick_stall(plane, tick_stall, self.clock.now)
         return TickObs(stalls=stalls, drain_done=drain_done,
                        return_ready=return_ready)
 
@@ -366,6 +392,14 @@ class CompressedTransport(Transport):
             self._wire_cache[nbytes] = w
         return w
 
+    def set_recorder(self, recorder) -> "CompressedTransport":
+        # the inner transport accumulates the books, so the inner
+        # transport records — the ledger then carries the *re-priced*
+        # wire bytes, exactly what the books accumulate
+        self.recorder = recorder
+        self.inner.set_recorder(recorder)
+        return self
+
     def bind(self, n_stages: int) -> "CompressedTransport":
         self.inner.bind(n_stages)
         return self
@@ -377,6 +411,7 @@ class CompressedTransport(Transport):
                                     elem_bytes=self.elem_bytes,
                                     row_elems=self.row_elems)
         fresh.raw_bytes = self.raw_bytes
+        fresh.recorder = self.recorder
         return fresh
 
     def tick(self, occupied, nbytes, compute_s, inject_t=0.0,

@@ -52,6 +52,15 @@ engage the latency-SLO admission policy that shrinks the per-tick prefill
 budget when decode latency drifts past target.  Token streams stay
 bit-identical to the offline path in all of these modes.
 
+Observability: ``--trace out.json`` turns on the flight recorder
+(``EngineConfig(trace=True)``) and writes a Perfetto-loadable
+Chrome-trace timeline at exit — engine step phases, per-microbatch stage
+occupancy, per-link transfers on the virtual clock, offload swaps,
+prefix-cache and SLO events; ``--metrics`` keeps a
+counter/gauge/histogram registry over the run, printing a one-line stats
+banner every ``--metrics-every`` engine steps and the full Prometheus
+exposition text at exit.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 16 \\
       --backend pipelined --stages 2 --max-new 24 [--plan] [--mixed] \\
       [--link-latency 0.064 | --deployment us-west,us-east] \\
@@ -222,6 +231,17 @@ def main() -> None:
                     help="use the full config (needs real accelerators)")
     ap.add_argument("--latency", type=float, default=0.064,
                     help="assumed one-way link latency (schedule + --plan)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="flight recorder: record engine/transport/request "
+                         "spans and write a Chrome-trace (Perfetto) "
+                         "timeline to OUT.json at exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="metrics registry over the run: a one-line stats "
+                         "banner every --metrics-every engine steps plus "
+                         "Prometheus exposition text at exit")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    metavar="STEPS",
+                    help="engine steps between --metrics banners")
     ap.add_argument("--strict", action="store_true",
                     help="enable the runtime invariant auditor "
                          "(repro.analysis.invariants): page/FSM/transport/"
@@ -379,7 +399,8 @@ def main() -> None:
             max_prefill_tokens_per_tick=args.max_prefill_tokens,
             prefill_mode=args.prefill_mode, fault_plan=fault_plan,
             wire_dtype=wire_dtype, prefix_cache=args.prefix_cache,
-            slo=slo, strict=args.strict or None)
+            slo=slo, trace=bool(args.trace) or None,
+            strict=args.strict or None)
     else:
         pool = PoolConfig(page_size=args.page_size, n_local_pages=64,
                           n_global_pages=16, max_pages_per_seq=16)
@@ -394,6 +415,7 @@ def main() -> None:
                                schedule=args.schedule,
                                wire_dtype=wire_dtype,
                                prefix_cache=args.prefix_cache, slo=slo,
+                               trace=bool(args.trace) or None,
                                strict=args.strict or None)
 
     llm = LLM(cfg, config=econfig, params=params, rt=rt)
@@ -407,6 +429,26 @@ def main() -> None:
           f"(chunk={engine.prefill_chunk} tokens, "
           f"budget={engine.max_prefill_tokens_per_tick} tokens/tick, "
           f"rows={engine.prefill_rows})")
+
+    metrics = None
+    if args.metrics:
+        from repro.obs.metrics import Metrics, update_from_engine
+        metrics = Metrics()
+        _prev_snap: dict = {}
+
+        def _metrics_banner() -> None:
+            snap = update_from_engine(metrics, engine)
+            d = Metrics.delta(_prev_snap, snap)
+            _prev_snap.clear()
+            _prev_snap.update(snap)
+            print(f"[metrics] step={engine.stats.steps} "
+                  f"tokens+={d.get('repro_tokens_total', 0.0):.0f} "
+                  f"finished="
+                  f"{snap.get('repro_requests_finished_total', 0.0):.0f}"
+                  f"/{args.requests} "
+                  f"queue={snap.get('repro_queue_depth', 0.0):.0f} "
+                  f"decode tok/s="
+                  f"{snap.get('repro_decode_tok_per_s', 0.0):.1f}")
 
     rng = np.random.RandomState(args.seed)
     system = list(rng.randint(1, cfg.vocab_size, args.system_prompt)) \
@@ -439,6 +481,7 @@ def main() -> None:
             [sps] * args.requests
         streams = []
         nxt = 0
+        _next_banner = [args.metrics_every]
         t0 = time.perf_counter()
         while True:
             now = time.perf_counter() - t0
@@ -447,6 +490,10 @@ def main() -> None:
                                              sps_list[nxt]))
                 nxt += 1
             busy = online.step()
+            if metrics is not None and engine.stats.steps >= \
+                    _next_banner[0]:
+                _metrics_banner()
+                _next_banner[0] = engine.stats.steps + args.metrics_every
             if not busy:
                 if nxt >= args.requests:
                     break
@@ -478,6 +525,8 @@ def main() -> None:
                 detector.beat(d, 0.0)
         for outs in llm.generate_iter(prompts, sps):
             step += 1
+            if metrics is not None and step % args.metrics_every == 0:
+                _metrics_banner()
             if reshard_at and step == reshard_at:
                 rplan = engine.reshard(n_stages=reshard_stages)
                 resharded = True
@@ -516,6 +565,14 @@ def main() -> None:
                 f"--detect-failures: the workload finished after {step} "
                 "step(s) before any killed device missed its timeout — "
                 "kill earlier, shorten the timeout, or grow the workload")
+    elif metrics is not None:
+        # the banner needs a live loop: step the same workload through
+        # generate_iter (the final snapshot carries the request traces)
+        step = 0
+        for outs in llm.generate_iter(prompts, sps):
+            step += 1
+            if step % args.metrics_every == 0:
+                _metrics_banner()
     else:
         outs = llm.generate(prompts, sps)
     rep = llm.stats()
@@ -555,6 +612,18 @@ def main() -> None:
         reasons[o.finish_reason] = reasons.get(o.finish_reason, 0) + 1
     print(f"finish reasons: {reasons}")
     print(f"report: {rep}")
+    if metrics is not None:
+        _metrics_banner()
+        print("metrics (Prometheus exposition):")
+        print(metrics.prometheus_text(), end="")
+    if args.trace:
+        from repro.obs.timeline import write_chrome_trace
+        trace = write_chrome_trace(engine.recorder, args.trace)
+        od = trace["otherData"]
+        print(f"trace: wrote {len(trace['traceEvents'])} timeline events "
+              f"({od['recorder_events']} recorded, "
+              f"{od['recorder_dropped']} dropped) to {args.trace} — open "
+              "in https://ui.perfetto.dev")
 
     n_b = optimal_microbatches(8, 0.08, args.latency)
     print(f"\nschedule report (8-stage pipeline, T_S=80ms, "

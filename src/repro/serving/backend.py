@@ -318,10 +318,14 @@ class LocalBackend(_SlotCacheBackend):
 
     def __init__(self, cfg: ModelConfig, params, rt: Runtime, *,
                  mb_size: int, num_microbatches: int, pool: kvc.PoolConfig,
-                 offloader=None, sample_fast_path: bool = True):
+                 offloader=None, sample_fast_path: bool = True,
+                 recorder=None):
         super().__init__(cfg, params, rt, mb_size=mb_size,
                          num_microbatches=num_microbatches, pool=pool)
         self.offloader = offloader
+        self.recorder = recorder
+        if offloader is not None:
+            offloader.recorder = recorder
         self._decode_jit = jax.jit(functools.partial(
             self._decode_fn, cfg=cfg, rt=rt, mb_size=mb_size,
             sample_fast=sample_fast_path))
@@ -403,7 +407,7 @@ class PipelinedBackend(_SlotCacheBackend):
                  n_stages: int = 2, offload: bool = False, mesh=None,
                  fault_plan=None, transport=None, schedule: str = "circular",
                  wire_dtype: str = "fp32", sample_fast_path: bool = True,
-                 offload_async: bool = True):
+                 offload_async: bool = True, recorder=None):
         from repro.core import pipeline as PL
         from repro.core.offload import DoubleBufferOffloader
         if wire_dtype not in ("fp32", "int8"):
@@ -539,6 +543,11 @@ class PipelinedBackend(_SlotCacheBackend):
                 self.transport = CompressedTransport(
                     self.transport, method="int8", elem_bytes=_db,
                     row_elems=cfg.d_model).bind(n_stages)
+        # the flight recorder rides on the OUTER transport (a compressed
+        # wrap forwards to its inner, which accumulates the books — so
+        # the recorded ledger carries the re-priced wire bytes)
+        self.recorder = recorder
+        self.transport.set_recorder(recorder)
         if schedule not in ("circular", "round_flush"):
             raise ValueError(f"schedule must be 'circular'|'round_flush', "
                              f"got {schedule!r}")
@@ -567,6 +576,9 @@ class PipelinedBackend(_SlotCacheBackend):
             if self._unit_has_paged(self._epi_view()):
                 self._epi_off = DoubleBufferOffloader(
                     pool, num_microbatches, async_swap=offload_async)
+            for off in self._stage_off + ([self._epi_off]
+                                          if self._epi_off else []):
+                off.recorder = recorder
 
     # -- per-stage offload residency ---------------------------------------
 
@@ -799,6 +811,18 @@ class PipelinedBackend(_SlotCacheBackend):
                     delays[ev.stage] = delays.get(ev.stage, 0.0) + ev.delay_s
         return drop_stage, delays, lost
 
+    def _record_faults(self, plane: str, lost_mbs: list,
+                       delays: dict) -> None:
+        """Flight-record this tick's injected faults (host-side stamps;
+        callers gate on ``self.recorder is not None``)."""
+        rec = self.recorder
+        now = time.perf_counter()
+        for m in lost_mbs:
+            rec.fault("drop", now, (("plane", plane), ("mb", int(m))))
+        for s, d in sorted(delays.items()):
+            rec.fault("delay", now, (("plane", plane), ("stage", int(s)),
+                                     ("delay_s", float(d))))
+
     def _observe_stages(self, dt: float, delays: dict,
                         stalls=None) -> None:
         # uniform share of the tick's dispatch time per stage, plus any
@@ -841,6 +865,8 @@ class PipelinedBackend(_SlotCacheBackend):
         self._prefill_ticks += 1
         drop_stage, delays, lost = self._take_faults("prefill", tick,
                                                      entries)
+        if self.recorder is not None and (lost or delays):
+            self._record_faults("prefill", [-1] * len(lost), delays)
         results = [PrefillResult(chunk=c,
                                  logits=np.zeros((c.tokens.shape[0], 1),
                                                  np.float32), lost=True)
@@ -885,13 +911,21 @@ class PipelinedBackend(_SlotCacheBackend):
         t0 = time.perf_counter()
         logits, self.caches, self._pf_act = self._pf_tick_jit(
             self.params, self.caches, self._pf_act, *tick_args)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         # the chunk activation (R, C, D) crosses each occupied boundary
         obs = self.transport.tick(
             [e is not None for e in entries],
             rows * clen * self.cfg.d_model * self._dtype_bytes,
             [dt / self.n_stages] * self.n_stages, plane="prefill")
         self._observe_stages(dt, delays, obs.stalls)
+        if self.recorder is not None:
+            # per-stage occupancy: prompt rows in flight at each stage
+            # (host ints the stepper already holds)
+            self.recorder.pipe_tick(
+                "prefill", t0, t1,
+                tuple(len(e.seqs) if e is not None else 0
+                      for e in entries))
         self._pf_entries = [None] + entries[:-1]
         if drained is None:
             return results
@@ -935,6 +969,8 @@ class PipelinedBackend(_SlotCacheBackend):
         tick = self._decode_ticks
         self._decode_ticks += 1
         drop_stage, delays, lost = self._take_faults("decode", tick, entries)
+        if self.recorder is not None and (lost or delays):
+            self._record_faults("decode", [e[0] for e in lost], delays)
         results = [DecodeResult(mb=e[0],
                                 tokens=np.zeros((self.mb_size,), np.int32),
                                 logprobs=np.zeros((self.mb_size,),
@@ -970,7 +1006,8 @@ class PipelinedBackend(_SlotCacheBackend):
         t0 = time.perf_counter()
         toks, lps, self.caches, self.act = self._tick_jit(
             self.params, self.caches, self.act, *tick_args)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         # the (mb_size, 1, D) activation crosses each occupied boundary;
         # an injection may not start before its microbatch's previous
         # drain returned over the last link (the §4.3 dependency)
@@ -981,6 +1018,11 @@ class PipelinedBackend(_SlotCacheBackend):
             inject_t=self._ret_ready.get(mb, 0.0)
             if entries[0] is not None else 0.0, plane="decode")
         self._observe_stages(dt, delays, obs.stalls)
+        if self.recorder is not None:
+            # per-stage occupancy: which microbatch sat in each stage
+            # slot this tick (-1 = bubble) — host ints from mb_assign
+            self.recorder.pipe_tick("decode", t0, t1,
+                                    tuple(int(m) for m in mb_assign))
         self._entries = [None] + entries[:-1]
         if drained is None:
             return results
@@ -1011,8 +1053,8 @@ class PipelinedBackend(_SlotCacheBackend):
 def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                  offloader=None, n_stages=2, mesh=None, fault_plan=None,
                  transport=None, schedule="circular", wire_dtype="fp32",
-                 sample_fast_path=True,
-                 offload_async=True) -> ExecutionBackend:
+                 sample_fast_path=True, offload_async=True,
+                 recorder=None) -> ExecutionBackend:
     """Engine-side factory: ``kind`` is "local", "pipelined", or an already
     constructed :class:`ExecutionBackend` (passed through)."""
     if isinstance(kind, ExecutionBackend):
@@ -1031,7 +1073,8 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
         return LocalBackend(cfg, params, rt, mb_size=mb_size,
                             num_microbatches=num_microbatches, pool=pool,
                             offloader=offloader,
-                            sample_fast_path=sample_fast_path)
+                            sample_fast_path=sample_fast_path,
+                            recorder=recorder)
     if kind == "pipelined":
         return PipelinedBackend(cfg, params, rt, mb_size=mb_size,
                                 num_microbatches=num_microbatches, pool=pool,
@@ -1040,5 +1083,6 @@ def make_backend(kind, cfg, params, rt, *, mb_size, num_microbatches, pool,
                                 fault_plan=fault_plan, transport=transport,
                                 schedule=schedule, wire_dtype=wire_dtype,
                                 sample_fast_path=sample_fast_path,
-                                offload_async=offload_async)
+                                offload_async=offload_async,
+                                recorder=recorder)
     raise ValueError(f"unknown backend {kind!r} (want 'local'|'pipelined')")

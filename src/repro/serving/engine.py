@@ -90,6 +90,25 @@ def _strict_default(strict: Optional[bool]) -> bool:
     return os.environ.get("REPRO_STRICT", "") not in ("", "0")
 
 
+def _resolve_trace(trace):
+    """``trace=`` accepts: None/False (off — the hot path carries no
+    recorder and pays nothing), True (a default-capacity
+    :class:`~repro.obs.trace.TraceRecorder`), an int (ring capacity), or
+    an existing recorder instance (shared across engines/front ends)."""
+    if trace is None or trace is False:
+        return None
+    from repro.obs.trace import TraceRecorder
+    if trace is True:
+        return TraceRecorder()
+    if isinstance(trace, TraceRecorder):
+        return trace
+    if isinstance(trace, int):
+        return TraceRecorder(capacity=trace)
+    raise ValueError(
+        f"trace must be None/False/True, an int capacity, or a "
+        f"TraceRecorder, got {trace!r}")
+
+
 @functools.partial(jax.jit, static_argnames=("fast",))
 def _sample_first(logits, keys, steps, temp, top_k, top_p, *, fast=True):
     """First-token sampling on prefill logits — jitted at module scope so
@@ -192,10 +211,12 @@ class OfflineEngine:
                  sample_fast_path: bool = True, offload_async: bool = True,
                  prefix_cache: bool = False,
                  slo: Optional[SLOConfig] = None,
+                 trace=None,
                  strict: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.rt = rt
+        self.recorder = _resolve_trace(trace)
         self.mb_size = mb_size
         self.num_microbatches = num_microbatches
         self.batch = mb_size * num_microbatches
@@ -230,7 +251,7 @@ class OfflineEngine:
             offloader=offloader, n_stages=n_stages, mesh=mesh,
             fault_plan=fault_plan, transport=transport, schedule=schedule,
             wire_dtype=wire_dtype, sample_fast_path=sample_fast_path,
-            offload_async=offload_async)
+            offload_async=offload_async, recorder=self.recorder)
 
         # elastic control plane: per-stage EWMA tick times (feeds the
         # admission budget) + the planner/mesh-plan bookkeeping reshard()
@@ -240,6 +261,12 @@ class OfflineEngine:
                                                StragglerMitigator)
         stages = getattr(self.backend, "n_stages", None)
         self.straggler = StragglerMitigator(stages) if stages else None
+        # lifetime per-stage drain-time totals (reported alongside the
+        # straggler's EWMAs — the raw observations that feed admission
+        # weighting, otherwise invisible); reset on reshard with the
+        # mitigator since the stage count may change
+        self._stage_time_total = [0.0] * (stages or 0)
+        self._stage_time_count = [0] * (stages or 0)
         self._elastic = ElasticPlanner(model_parallel=1,
                                        pod_size=1 << 30)
         self._mesh_plan = MeshPlan(shape=(stages or 1, 1),
@@ -348,6 +375,7 @@ class OfflineEngine:
                   offload_async: bool = True,
                   prefix_cache: bool = False,
                   slo: Optional[SLOConfig] = None,
+                  trace=None,
                   strict: Optional[bool] = None) -> "OfflineEngine":
         """Build an engine whose (N_B, per-microbatch batch, pool split) are
         *derived* from measured stage time + link latency via
@@ -430,7 +458,7 @@ class OfflineEngine:
                   transport=transport, schedule=schedule,
                   wire_dtype=wire_dtype, sample_fast_path=sample_fast_path,
                   offload_async=offload_async, prefix_cache=prefix_cache,
-                  slo=slo, strict=strict)
+                  slo=slo, trace=trace, strict=strict)
         eng.schedule_choice = choice
         return eng
 
@@ -470,6 +498,11 @@ class OfflineEngine:
                                 submit_time=now)
             self.queue.append(seq)
             seqs.append(seq)
+            if self.recorder is not None:
+                # same float as seq.submit_time, so the trace's
+                # queue-wait/TTFT math matches the engine's
+                self.recorder.request_submit(r.request_id, now,
+                                             len(r.prompt))
         self.stats.queue_depth = len(self.queue)
         if self.auditor is not None:
             self.auditor.after_submit()
@@ -498,11 +531,17 @@ class OfflineEngine:
         return [s for s in self.slots if s is not None] + list(self.queue)
 
     def status_counts(self) -> Dict[str, int]:
-        """Per-status sequence counts across queue, slots, and finished."""
+        """Per-status sequence counts across queue, slots, and finished.
+
+        Always writes the result back to ``stats.status_counts`` — the
+        cached copy is a *mirror* of this computation, refreshed by every
+        caller (``throughput_report()``, metrics snapshots), never a
+        source of truth, so it cannot go stale across step/reshard."""
         counts = {s.value: 0 for s in Status}
         for seq in self.pending():
             counts[seq.status.value] += 1
         counts[Status.FINISHED.value] += len(self.finished)
+        self.stats.status_counts = counts
         return counts
 
     # ------------------------------------------------------------------
@@ -576,6 +615,8 @@ class OfflineEngine:
         # (1) drain both planes: every in-flight tick completes and books
         # normally, so nothing is recomputed and recurrent/ring state in
         # the carried caches is consistent
+        t_drain0 = time.perf_counter()
+        old_stages = self.backend.n_stages
         tokens0 = np.zeros((self.mb_size,), np.int32)
         pos0 = np.zeros((self.mb_size,), np.int32)
         while self.backend.pending():
@@ -593,6 +634,10 @@ class OfflineEngine:
         # into full-period host arrays now (pipe drained, caches stable),
         # re-split for the new stage count after the rebuild
         off_state = self.backend.export_offload_state()
+        t_rebuild0 = time.perf_counter()
+        if self.recorder is not None:
+            self.recorder.reshard_span("drain", t_drain0, t_rebuild0,
+                                       (("old_stages", old_stages),))
 
         # (2)+(3) carry caches (host round-trip: the old arrays are
         # committed to the old pod mesh), rebuild on a fresh mesh
@@ -631,7 +676,8 @@ class OfflineEngine:
             # clock so transport accounting stays monotonic
             transport=self.backend.transport.for_stages(n_stages),
             schedule=self.backend.schedule,
-            wire_dtype=getattr(self.backend, "wire_dtype", "fp32"))
+            wire_dtype=getattr(self.backend, "wire_dtype", "fp32"),
+            recorder=self.recorder)
         # plane tick counters survive the rebuild, so FaultPlan tick
         # indices keep their absolute meaning across a reshard
         self.backend._decode_ticks, self.backend._prefill_ticks = old_ticks
@@ -647,9 +693,15 @@ class OfflineEngine:
 
         from repro.distributed.elastic import StragglerMitigator
         self.straggler = StragglerMitigator(n_stages)
+        self._stage_time_total = [0.0] * n_stages
+        self._stage_time_count = [0] * n_stages
         self.n_stages = n_stages
         self._mesh_plan = new_plan
         self.stats.reshards += 1
+        if self.recorder is not None:
+            self.recorder.reshard_span("rebuild", t_rebuild0,
+                                       time.perf_counter(),
+                                       (("n_stages", n_stages),))
         if self.auditor is not None:
             self.auditor.after_reshard()
         return reshard_plan
@@ -680,6 +732,10 @@ class OfflineEngine:
             self.stats.prefill_time_s += tp2 - tp
             self.stats.decode_time_s += tp - t0
             self.stats.wall_time_s += time.perf_counter() - t0
+            if self.recorder is not None:
+                self.recorder.step_phase("reap", t0, tp, self.stats.steps)
+                self.recorder.step_phase("prefill", tp, tp2,
+                                         self.stats.steps)
             if self.auditor is not None:
                 self.auditor.after_step()
             return False
@@ -688,6 +744,8 @@ class OfflineEngine:
         if self.straggler is not None:
             for s, dt in self.backend.drain_stage_times():
                 self.straggler.observe(s, dt)
+                self._stage_time_total[s] += dt
+                self._stage_time_count[s] += 1
         self.stats.steps += 1
         t1 = time.perf_counter()
         self.stats.prefill_time_s += tp2 - tp
@@ -695,6 +753,13 @@ class OfflineEngine:
         self.stats.wall_time_s += t1 - t0
         if self.slo is not None:
             self.slo.observe_tick(t1 - t0)
+        if self.recorder is not None:
+            # the stamps EngineStats uses anyway — no extra clock reads
+            # on the hot path beyond the one t1 above
+            step = self.stats.steps - 1
+            self.recorder.step_phase("reap", t0, tp, step)
+            self.recorder.step_phase("prefill", tp, tp2, step)
+            self.recorder.step_phase("decode", tp2, t1, step)
         if self.auditor is not None:
             self.auditor.after_step()
         return True
@@ -716,6 +781,11 @@ class OfflineEngine:
                 seq.finish_time = now
                 self.finished.append(seq)
                 self.stats.finished_requests += 1
+                if self.recorder is not None:
+                    reason = seq.finish_reason()
+                    self.recorder.request_finish(
+                        seq.request.request_id, now,
+                        reason.value if reason is not None else None)
                 self.alloc.release(slot)
                 self.slots[slot] = None
                 self.active[slot] = False
@@ -782,6 +852,11 @@ class OfflineEngine:
                 if shared:
                     self.alloc.release(slot)
                 raise
+            if self.recorder is not None:
+                self.recorder.prefix_event(
+                    "evict", seq.request.request_id,
+                    (n_pages - len(shared)) * self.pool.page_size,
+                    time.perf_counter())
             try:
                 pages = self.alloc.allocate(slot, n_pages - len(shared),
                                             global_pool=global_pool)
@@ -796,6 +871,15 @@ class OfflineEngine:
         if shared:
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += seq.prefill_pos
+        if self.recorder is not None:
+            rid = seq.request.request_id
+            now = time.perf_counter()
+            self.recorder.request_admit(rid, now)
+            self.recorder.request_pages(rid, n_pages)
+            if shared:
+                self.recorder.prefix_event("hit", rid, seq.prefill_pos,
+                                           now)
+                self.recorder.request_prefix_hit(rid, seq.prefill_pos)
         seq.status = Status.PREFILLING
         seq.budget = min(sp.max_new_tokens,
                          self.pool.max_pages_per_seq * self.pool.page_size
@@ -824,7 +908,13 @@ class OfflineEngine:
             waits = [now - s.submit_time for s in self.queue]
             waits += [now - s.submit_time for s in self.prefilling
                       if not s.generated]
-            w = min(w, self.slo.budget_frac(max(waits, default=0.0)))
+            frac = self.slo.budget_frac(max(waits, default=0.0))
+            w = min(w, frac)
+            if self.recorder is not None:
+                self.recorder.slo_budget(
+                    frac,
+                    int(self.max_prefill_tokens_per_tick * min(1.0, w)),
+                    now)
         if w >= 1.0:
             return self.prefill_rows
         budget = int(self.max_prefill_tokens_per_tick * min(1.0, w))
@@ -897,6 +987,8 @@ class OfflineEngine:
                 lasts[i] = take - 1
             tables[i] = self.alloc.table_row(seq.slot)
             seq.chunk_inflight = True
+            if self.recorder is not None:
+                self.recorder.request_chunk(seq.request.request_id, take)
         return PrefillChunk(
             tokens=tokens, slots=slots, offsets=offsets, n_valid=n_valid,
             lasts=lasts, tables=tables, seqs=rows,
@@ -913,6 +1005,10 @@ class OfflineEngine:
             for seq in res.chunk.seqs:
                 seq.chunk_inflight = False
             self.stats.prefill_chunks_lost += 1
+            if self.recorder is not None:
+                self.recorder.fault("recover", time.perf_counter(),
+                                    (("plane", "prefill"),
+                                     ("rows", len(res.chunk.seqs))))
             return
         for i, seq in enumerate(res.chunk.seqs):
             seq.chunk_inflight = False
@@ -931,6 +1027,11 @@ class OfflineEngine:
             # sharers (existing entries win on a concurrent double-fill)
             self.prefix_cache.insert(seq.request.prompt,
                                      self.alloc.pages_of(seq.slot))
+            if self.recorder is not None:
+                self.recorder.prefix_event("insert",
+                                           seq.request.request_id,
+                                           seq.prompt_len,
+                                           time.perf_counter())
         self.prefilling.remove(seq)
         if not seq.is_done():               # finished at prefill (eos /
             self._pending_activation.append(seq)    # zero budget): reap
@@ -1006,6 +1107,11 @@ class OfflineEngine:
         # repro-audit: allow(host-sync) — first-token host booking, once per request at admission
         seq.generated.append(int(first_arr[0]))
         seq.first_token_time = time.perf_counter()   # engine-side TTFT mark
+        if self.recorder is not None:
+            # same float as seq.first_token_time: trace TTFT == seq.ttft_s
+            rid = seq.request.request_id
+            self.recorder.request_first_token(rid, seq.first_token_time)
+            self.recorder.request_tokens(rid, 1, seq.first_token_time)
         self.cur_pos[slot] = seq.prompt_len     # position of the first token
         self.stats.decode_tokens += 1
 
@@ -1085,9 +1191,15 @@ class OfflineEngine:
             # under the same (seed, request_id, token_idx) keys
             self._inject_snap.pop(res.mb, None)
             self.stats.decode_ticks_lost += 1
+            if self.recorder is not None:
+                self.recorder.fault("recover", time.perf_counter(),
+                                    (("plane", "decode"),
+                                     ("mb", res.mb)))
             return
         lo = res.mb * self.mb_size
         snap = self._inject_snap.pop(res.mb, None)
+        rec = self.recorder
+        tnow = time.perf_counter() if rec is not None else 0.0
         for i, slot in enumerate(range(lo, lo + self.mb_size)):
             seq = self.slots[slot]
             if seq is None or seq.is_done():
@@ -1101,6 +1213,8 @@ class OfflineEngine:
                 seq.logprobs.append(float(res.logprobs[i]))
             self.cur_pos[slot] += 1
             self.stats.decode_tokens += 1
+            if rec is not None:
+                rec.request_tokens(seq.request.request_id, 1, tnow)
             need = self.cur_pos[slot] + 1
             have = len(self.alloc.pages_of(slot)) * self.pool.page_size
             if need > have:
@@ -1108,8 +1222,19 @@ class OfflineEngine:
                 self.alloc.extend(slot, global_pool=gp)
                 self.table[slot] = self.alloc.table_row(slot)
                 self.backend.set_page_table(self.table)
+                if rec is not None:
+                    rec.request_pages(seq.request.request_id, 1)
 
     # ------------------------------------------------------------------
+
+    def request_trace(self, request_id: int) -> Optional[dict]:
+        """Per-request flight-recorder snapshot (queue wait, TTFT,
+        per-token inter-token latencies, chunk/page/prefix-hit counts).
+        ``None`` when tracing is off or the request has been evicted
+        from the recorder's bounded table."""
+        if self.recorder is None:
+            return None
+        return self.recorder.request_trace(request_id)
 
     def throughput_report(self) -> dict:
         lat_steps = [s.latency_steps for s in self.finished
@@ -1117,8 +1242,9 @@ class OfflineEngine:
         lat_s = [s.latency_s for s in self.finished
                  if s.latency_s is not None]
         # per-status counts are O(batch + queue): computed on demand here
-        # (and cached on stats), never in the per-tick loop
-        self.stats.status_counts = self.status_counts()
+        # (status_counts() writes the stats mirror itself), never in the
+        # per-tick loop
+        self.status_counts()
         rep = {
             "backend": self.backend.name,
             "prefill_tokens": self.stats.prefill_tokens,
@@ -1147,6 +1273,18 @@ class OfflineEngine:
             rep["prefix_hit_tokens"] = self.stats.prefix_hit_tokens
             rep["prefix_hit_rate"] = self.prefix_cache.hit_rate
             rep["prefix_cache_pages"] = len(self.prefix_cache)
+        if self.straggler is not None:
+            # the raw observations behind admission weighting, surfaced:
+            # per-stage tick-time EWMAs, lifetime drain-time totals/counts,
+            # the mean-1 inverse weights, and which stages are currently
+            # flagged (all host lists the mitigation loop already holds)
+            rep["stages"] = {
+                "ewma_s": list(self.straggler.ewma),
+                "total_s": list(self._stage_time_total),
+                "counts": list(self._stage_time_count),
+                "microbatch_weights": self.straggler.microbatch_weights(),
+                "stragglers": self.straggler.stragglers(),
+            }
         tstats = self.backend.transport_stats()
         if tstats:
             rep["transport"] = tstats

@@ -118,6 +118,13 @@ class EngineConfig:
     # exceeds the inter-token target, restores it when the oldest queued
     # request nears the TTFT target.  None = no shaping.
     slo: Optional[object] = None
+    # flight recorder (repro.obs): None/False = off (zero-cost — the hot
+    # path carries no recorder), True = default-capacity TraceRecorder,
+    # int = ring capacity, or an existing TraceRecorder instance.  The
+    # recorder threads through backend/transport/offloader and surfaces
+    # as engine.recorder (export via repro.obs.write_chrome_trace) and
+    # per-request as RequestOutput.trace.
+    trace: object = None
     plan_args: Optional[dict] = None  # set by .plan(); overrides mb_size /
                                       # num_microbatches / pool / offload
 
@@ -198,6 +205,7 @@ class EngineConfig:
              wire_dtype: str = "fp32",
              prefix_cache: bool = False,
              slo: Optional[object] = None,
+             trace: object = None,
              strict: Optional[bool] = None) -> "EngineConfig":
         """A config whose (N_B, per-microbatch batch, pool split) are
         derived by ``repro.core.scheduler.plan_schedule`` at build time —
@@ -238,7 +246,7 @@ class EngineConfig:
                    prefill_mode=prefill_mode, fault_plan=fault_plan,
                    transport=transport, schedule=schedule,
                    wire_dtype=wire_dtype, prefix_cache=prefix_cache,
-                   slo=slo, strict=strict,
+                   slo=slo, trace=trace, strict=strict,
                    plan_args=dict(
                        n_stages=n_stages, stage_time=stage_time,
                        latency=latency, link_latencies=link_latencies,
@@ -265,7 +273,7 @@ class EngineConfig:
                 sample_fast_path=self.sample_fast_path,
                 offload_async=self.offload_async,
                 prefix_cache=self.prefix_cache, slo=self.slo,
-                strict=self.strict,
+                trace=self.trace, strict=self.strict,
                 **self.plan_args)
         pool = self.pool or PoolConfig()
         offloader = None
@@ -286,7 +294,7 @@ class EngineConfig:
             sample_fast_path=self.sample_fast_path,
             offload_async=self.offload_async,
             prefix_cache=self.prefix_cache, slo=self.slo,
-            strict=self.strict)
+            trace=self.trace, strict=self.strict)
 
 
 @dataclass
@@ -303,9 +311,14 @@ class RequestOutput:
     latency_steps: Optional[int] = None       # submit -> finish, engine steps
     latency_s: Optional[float] = None         # submit -> finish, wall clock
     ttft_s: Optional[float] = None            # submit -> first token sampled
+    # per-request flight-recorder snapshot (EngineConfig(trace=...) on):
+    # queue_wait_s / ttft_s / inter_token_s, chunks, pages,
+    # prefix_hit_tokens — None when tracing is off
+    trace: Optional[dict] = None
 
     @classmethod
-    def from_seq(cls, seq: SequenceState) -> "RequestOutput":
+    def from_seq(cls, seq: SequenceState,
+                 trace: Optional[dict] = None) -> "RequestOutput":
         reason = seq.finish_reason()
         return cls(
             request_id=seq.request.request_id,
@@ -318,7 +331,8 @@ class RequestOutput:
             logprobs=list(seq.logprobs) if seq.logprobs is not None else None,
             latency_steps=seq.latency_steps,
             latency_s=seq.latency_s,
-            ttft_s=seq.ttft_s)
+            ttft_s=seq.ttft_s,
+            trace=trace)
 
 
 class LLM:
@@ -384,7 +398,9 @@ class LLM:
         ``finished=False`` (and ``engine.stats.aborted`` is set)."""
         seqs = self._submit(prompts, sampling_params)
         self.engine.run(max_steps=max_steps)
-        return [RequestOutput.from_seq(s) for s in seqs]
+        return [RequestOutput.from_seq(
+            s, trace=self.engine.request_trace(s.request.request_id))
+            for s in seqs]
 
     def generate_iter(self, prompts: Sequence[Sequence[int]],
                       sampling_params: Union[SamplingParams,
@@ -404,7 +420,11 @@ class LLM:
             yield [RequestOutput.from_seq(s) for s in seqs]
         if steps >= max_steps and self.engine.pending():
             self.engine.stats.aborted = True
-        yield [RequestOutput.from_seq(s) for s in seqs]
+        # only the final snapshot carries per-request traces (the
+        # per-step snapshots stay cheap)
+        yield [RequestOutput.from_seq(
+            s, trace=self.engine.request_trace(s.request.request_id))
+            for s in seqs]
 
     def _submit(self, prompts, sampling_params) -> List[SequenceState]:
         reqs = self._make_requests(prompts, sampling_params)

@@ -149,8 +149,12 @@ class EngineStats:
     decode_time_s: float = 0.0
     queue_depth: int = 0              # requests waiting (refreshed per step)
     status_counts: Dict[str, int] = field(default_factory=dict)
-                                      # refreshed by throughput_report() /
-                                      # engine.status_counts(), not per tick
+                                      # a MIRROR of engine.status_counts(),
+                                      # which always writes it back —
+                                      # throughput_report() and metrics
+                                      # snapshots therefore can never read
+                                      # a stale copy (it is not updated
+                                      # per tick; read via the engine)
     aborted: bool = False             # run() exhausted max_steps with
                                       # work still pending
     # fault tolerance / elasticity (see engine._apply_result /

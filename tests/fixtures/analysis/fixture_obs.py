@@ -1,0 +1,30 @@
+"""Lint fixture: flight-recorder calls in the wrong places.  Never
+imported — the auditor parses it (pure AST).  The test pins
+``tick_fn`` as a tick jit and ``hot_step`` as a hot root; exactly two
+``obs-hot-path`` violations must fire at the marked lines:
+
+* a recording call inside the tick-jit body (the recorder is host-side
+  only — under tracing it fails or bakes one trace's stamps in);
+* a recording call in the hot path fed a device-tracked value (it
+  materialises the array, adding the sync the recorder must never add).
+
+The host-scalar recording call in ``hot_step`` is the sanctioned shape
+and must NOT fire."""
+
+import time
+
+import jax.numpy as jnp
+
+
+def tick_fn(tokens, caches, recorder):
+    logits = jnp.dot(tokens, caches)
+    recorder.instant("tick", 0.0)  # LINT-EXPECT: obs-hot-path
+    return logits
+
+
+def hot_step(rec, tokens):
+    t0 = time.perf_counter()
+    logits = jnp.asarray(tokens)
+    rec.span("decode", t0, time.perf_counter())          # host stamps: fine
+    rec.instant("logits", logits[0])  # LINT-EXPECT: obs-hot-path
+    return logits

@@ -87,6 +87,21 @@ def test_fixture_offload_sync_fires_once():
     assert "enqueued" in vs[0].msg
 
 
+def test_fixture_obs_hot_path_fires_twice():
+    path = FIXTURES / "fixture_obs.py"
+    marks = _marks(path)
+    cfg = AuditConfig(hot_roots=["fixture_obs:hot_step"],
+                      traced_fns=["fixture_obs:tick_fn"])
+    vs = run_lint([path], config=cfg)
+    got = sorted((v.rule, v.line) for v in vs)
+    assert got == sorted(
+        ("obs-hot-path", ln) for ln in marks["obs-hot-path"])
+    in_jit = next(v for v in vs if "tick-jit" in v.msg)
+    assert "host-side" in in_jit.msg     # says WHY the recorder can't run
+    dev = next(v for v in vs if "materialises" in v.msg)
+    assert "host scalars" in dev.msg     # ... and what to record instead
+
+
 def test_suppression_with_reason_silences(tmp_path):
     f = tmp_path / "mod_sync.py"
     f.write_text(
